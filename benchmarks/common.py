@@ -1,0 +1,59 @@
+"""Shared corpus/scorer/engine builders for the paper-figure benchmarks.
+
+Sizes are scaled to this CPU container (the paper uses ogbn-arxiv 169k /
+ogbn-products 2.4M; we default to a few thousand points of the same shape
+— see data/synthetic.py). Every benchmark prints ``name,us_per_call,
+derived`` rows; benchmarks/run.py aggregates them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.core import BucketConfig
+from repro.core.embedding import EmbeddingGenerator
+from repro.core.scorer import train_scorer
+from repro.data.synthetic import (OGB_ARXIV_LIKE, OGB_PRODUCTS_LIKE,
+                                  labeled_pairs, make_dataset)
+
+DATASETS = {
+    "arxiv": dataclasses.replace(OGB_ARXIV_LIKE, n_points=4000,
+                                 n_clusters=30),
+    "products": dataclasses.replace(OGB_PRODUCTS_LIKE, n_points=5000,
+                                    n_clusters=40),
+}
+BUCKET_CFG = BucketConfig(dense_tables=8, dense_bits=10, set_tables=6,
+                          scalar_widths=(2.0,))
+
+_cache: dict = {}
+
+
+def corpus(name: str):
+    """(ids, features, cluster, spec, scorer_params, embedder) — cached."""
+    if name in _cache:
+        return _cache[name]
+    data_cfg = DATASETS[name]
+    ids, feats, cluster = make_dataset(data_cfg)
+    pf, lbl = labeled_pairs(feats, cluster, 6000, data_cfg.spec, seed=3)
+    scorer, _ = train_scorer(jax.random.PRNGKey(0), data_cfg.spec, pf, lbl,
+                             steps=300)
+    gen = EmbeddingGenerator.create(data_cfg.spec, BUCKET_CFG)
+    _cache[name] = (ids, feats, cluster, data_cfg.spec, scorer, gen)
+    return _cache[name]
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best * 1e6

@@ -1,0 +1,51 @@
+"""Paper Fig. 4/6: edge-weight distribution of GUS edges as a function of
+ScaNN-NN x Filter-P x IDF-S, on both dataset families."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BUCKET_CFG, corpus, emit
+from repro.ann.scann import ScannConfig
+from repro.core import DynamicGUS, GusConfig
+from repro.core.graph import (GraphAccumulator, edge_weight_percentiles,
+                              frac_above)
+
+SWEEP = [
+    # (scann_nn, idf_size, filter_percent)
+    (10, 0, 0), (10, 10_000, 0), (10, 0, 10), (10, 10_000, 10),
+    (100, 0, 10), (100, 10_000, 0),
+]
+
+
+def run(dataset: str = "arxiv", n: int = 3000, queries: int = 512) -> list:
+    ids, feats, cluster, spec, scorer, _ = corpus(dataset)
+    sub = {k: v[:n] for k, v in feats.items()}
+    rows = []
+    for scann_nn, idf_s, filter_p in SWEEP:
+        gus = DynamicGUS(spec, BUCKET_CFG, scorer, GusConfig(
+            scann_nn=scann_nn, idf_size=idf_s, filter_percent=filter_p,
+            scann=ScannConfig(d_proj=64, n_partitions=32, nprobe=16,
+                              reorder=max(256, scann_nn * 2))))
+        gus.bootstrap(ids[:n], sub)
+        acc = GraphAccumulator()
+        res = gus.neighbors_of_ids(ids[:queries], k=scann_nn)
+        acc.add_result(ids[:queries], res)
+        _, weights = acc.edges()
+        stats = edge_weight_percentiles(weights)
+        lat = gus.query_timer.summary()
+        row = {"dataset": dataset, "scann_nn": scann_nn, "idf_s": idf_s,
+               "filter_p": filter_p, **stats,
+               "frac>0.5": frac_above(weights, 0.5),
+               "p50_ms": lat.get("p50_ms", 0)}
+        rows.append(row)
+        emit(f"edges_{dataset}_nn{scann_nn}_idf{idf_s}_f{filter_p}",
+             lat.get("p50_ms", 0) * 1e3,
+             f"edges={stats['total_edges']};p20={stats.get('p20', 0):.3f};"
+             f"frac_gt_0.5={row['frac>0.5']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for ds in ("arxiv", "products"):
+        for r in run(ds):
+            print(r)

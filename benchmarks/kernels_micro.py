@@ -1,0 +1,68 @@
+"""Kernel microbenchmarks: interpret-mode Pallas vs jnp oracle wall-clock
+(CPU semantics check only — real perf targets TPU) + oracle-path timings
+that the CPU serving engine actually uses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core.types import PAD_INDEX
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(5)
+
+
+def _rows(n, k, vocab=1000):
+    idx = RNG.integers(0, vocab, (n, k)).astype(np.uint32)
+    val = RNG.random((n, k)).astype(np.float32)
+    pad = RNG.random((n, k)) < 0.25
+    idx[pad] = PAD_INDEX
+    val[pad] = 0
+    order = np.argsort(idx, axis=-1)
+    return (jnp.asarray(np.take_along_axis(idx, order, -1)),
+            jnp.asarray(np.take_along_axis(val, order, -1)))
+
+
+def run() -> None:
+    # sparse_dot: the exact-rescoring hot loop
+    qi, qv = _rows(16, 16)
+    di, dv = _rows(4096, 16)
+    jit_ref = jax.jit(ref.sparse_dot_ref)
+    jit_ref(qi, qv, di, dv).block_until_ready()
+    _, t_ref = timed(lambda: jit_ref(qi, qv, di, dv).block_until_ready())
+    emit("kernel_sparse_dot_xla_16x4096", t_ref, "oracle-path")
+    _, t_k = timed(lambda: ops.sparse_dot(qi, qv, di, dv).block_until_ready())
+    emit("kernel_sparse_dot_pallas_interpret", t_k, "semantics-path")
+
+    # pq_score: the LUT scoring hot loop
+    lut = jnp.asarray(RNG.normal(size=(16, 8, 256)), jnp.float32)
+    codes = jnp.asarray(RNG.integers(0, 256, (8192, 8)), jnp.uint8)
+    jit_pq = jax.jit(ref.pq_score_ref)
+    jit_pq(lut, codes).block_until_ready()
+    _, t_ref = timed(lambda: jit_pq(lut, codes).block_until_ready())
+    emit("kernel_pq_score_xla_16x8192", t_ref, "oracle-path")
+
+    # topk
+    scores = jnp.asarray(RNG.normal(size=(16, 8192)), jnp.float32)
+    jit_tk = jax.jit(lambda s: jax.lax.top_k(s, 10))
+    jit_tk(scores)[0].block_until_ready()
+    _, t_ref = timed(lambda: jit_tk(scores)[0].block_until_ready())
+    emit("kernel_topk_xla_16x8192_k10", t_ref, "oracle-path")
+
+    # fused scorer
+    from repro.core.scorer import scorer_init
+    from repro.core.types import FeatureSpec
+    spec = FeatureSpec(dense={"a": 8}, scalars=("x",))
+    params = scorer_init(jax.random.PRNGKey(0), spec)
+    feats = jnp.asarray(RNG.normal(size=(4096, params["w0"].shape[0])),
+                        jnp.float32)
+    from repro.core.scorer import scorer_apply
+    scorer_apply(params, feats).block_until_ready()
+    _, t_ref = timed(lambda: scorer_apply(params, feats).block_until_ready())
+    emit("kernel_scorer_mlp_xla_4096", t_ref, "oracle-path")
+
+
+if __name__ == "__main__":
+    run()

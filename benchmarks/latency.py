@@ -1,0 +1,45 @@
+"""Paper Fig. 9: query-latency distribution of Dynamic GUS in a dynamic
+setting, swept over ScaNN-NN / IDF-S / Filter-P (sequential queries,
+wall-clock request-to-response, percentiles)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BUCKET_CFG, corpus, emit
+from repro.ann.scann import ScannConfig
+from repro.core import DynamicGUS, GusConfig
+
+SWEEP = [(10, 0, 0), (10, 10_000, 10), (100, 0, 0), (100, 10_000, 10),
+         (1000, 0, 10)]
+
+
+def run(dataset: str = "arxiv", n: int = 4000, queries: int = 200) -> list:
+    ids, feats, cluster, spec, scorer, _ = corpus(dataset)
+    sub = {k: v[:n] for k, v in feats.items()}
+    rows = []
+    rng = np.random.default_rng(0)
+    sample = rng.choice(n, queries, replace=False)
+    for scann_nn, idf_s, filter_p in SWEEP:
+        gus = DynamicGUS(spec, BUCKET_CFG, scorer, GusConfig(
+            scann_nn=scann_nn, idf_size=idf_s, filter_percent=filter_p,
+            scann=ScannConfig(d_proj=64, n_partitions=32, nprobe=8,
+                              reorder=max(128, min(scann_nn, 256)))))
+        gus.bootstrap(ids[:n], sub)
+        # warm the jit caches, then measure sequential single queries
+        gus.neighbors_of_ids(ids[:1], k=scann_nn)
+        gus.query_timer.samples_ms.clear()
+        for q in sample:
+            gus.neighbors_of_ids(ids[q:q + 1], k=scann_nn)
+        s = gus.query_timer.summary()
+        rows.append({"dataset": dataset, "scann_nn": scann_nn,
+                     "idf_s": idf_s, "filter_p": filter_p, **s})
+        emit(f"latency_{dataset}_nn{scann_nn}_idf{idf_s}_f{filter_p}",
+             s["p50_ms"] * 1e3,
+             f"p95_ms={s['p95_ms']:.1f};p99_ms={s['p99_ms']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for ds in ("arxiv", "products"):
+        for r in run(ds):
+            print(r)

@@ -1,0 +1,42 @@
+"""Paper §5.2 tail: median / p95 wall-clock time for point insertions (and
+deletes/updates) into the dynamic index."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BUCKET_CFG, corpus, emit
+from repro.ann.scann import ScannConfig
+from repro.core import (DynamicGUS, GusConfig, MutationBatch,
+                        MUTATION_DELETE, MUTATION_INSERT, MUTATION_UPDATE)
+from repro.utils.timing import percentiles
+
+
+def run(dataset: str = "arxiv", n: int = 3000, ops: int = 200) -> dict:
+    ids, feats, cluster, spec, scorer, _ = corpus(dataset)
+    boot = {k: v[:n] for k, v in feats.items()}
+    gus = DynamicGUS(spec, BUCKET_CFG, scorer, GusConfig(
+        scann=ScannConfig(d_proj=64, n_partitions=32, nprobe=8)))
+    gus.bootstrap(ids[:n], boot)
+    out = {}
+    for kind, name in ((MUTATION_INSERT, "insert"),
+                       (MUTATION_UPDATE, "update"),
+                       (MUTATION_DELETE, "delete")):
+        gus.mutation_timer.samples_ms.clear()
+        for i in range(ops):
+            pid = (n + i) if kind == MUTATION_INSERT else (i % n)
+            f = ({k: v[pid % len(ids):pid % len(ids) + 1]
+                  for k, v in feats.items()}
+                 if kind != MUTATION_DELETE else None)
+            gus.mutate(MutationBatch(
+                kinds=np.asarray([kind], np.int32),
+                ids=np.asarray([pid], np.int64), features=f))
+        s = percentiles(gus.mutation_timer.samples_ms)
+        out[name] = s
+        emit(f"mutations_{dataset}_{name}", s["p50_ms"] * 1e3,
+             f"p95_ms={s['p95_ms']:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    for ds in ("arxiv", "products"):
+        print(run(ds))

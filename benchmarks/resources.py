@@ -1,0 +1,46 @@
+"""Paper Fig. 10: average CPU time per query and max memory per config."""
+from __future__ import annotations
+
+import resource
+import time
+
+import numpy as np
+
+from benchmarks.common import BUCKET_CFG, corpus, emit
+from repro.ann.scann import ScannConfig
+from repro.core import DynamicGUS, GusConfig
+
+SWEEP = [(10, 0, 0), (10, 10_000, 10), (100, 0, 10), (1000, 10_000, 10)]
+
+
+def run(dataset: str = "arxiv", n: int = 4000, queries: int = 100) -> list:
+    ids, feats, cluster, spec, scorer, _ = corpus(dataset)
+    sub = {k: v[:n] for k, v in feats.items()}
+    rows = []
+    rng = np.random.default_rng(1)
+    sample = rng.choice(n, queries, replace=False)
+    for scann_nn, idf_s, filter_p in SWEEP:
+        gus = DynamicGUS(spec, BUCKET_CFG, scorer, GusConfig(
+            scann_nn=scann_nn, idf_size=idf_s, filter_percent=filter_p,
+            scann=ScannConfig(d_proj=64, n_partitions=32, nprobe=8,
+                              reorder=max(128, min(scann_nn, 256)))))
+        gus.bootstrap(ids[:n], sub)
+        gus.neighbors_of_ids(ids[:1], k=scann_nn)  # warmup
+        cpu0 = time.process_time()
+        for q in sample:
+            gus.neighbors_of_ids(ids[q:q + 1], k=scann_nn)
+        cpu_ms = (time.process_time() - cpu0) / queries * 1e3
+        max_mem_mib = resource.getrusage(
+            resource.RUSAGE_SELF).ru_maxrss / 1024
+        rows.append({"dataset": dataset, "scann_nn": scann_nn,
+                     "idf_s": idf_s, "filter_p": filter_p,
+                     "avg_cpu_ms": cpu_ms, "max_mem_mib": max_mem_mib})
+        emit(f"resources_{dataset}_nn{scann_nn}_idf{idf_s}_f{filter_p}",
+             cpu_ms * 1e3, f"max_mem_mib={max_mem_mib:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for ds in ("arxiv", "products"):
+        for r in run(ds):
+            print(r)

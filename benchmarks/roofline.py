@@ -1,0 +1,153 @@
+"""Roofline-term generator (§Roofline): reads results/dryrun/*.json and
+derives, per (arch x shape x mesh):
+
+  compute_s    = FLOPs_dev / peak_flops        (197 TFLOP/s bf16, v5e)
+  memory_s     = bytes_dev / hbm_bw            (819 GB/s)
+  collective_s = coll_bytes_dev / link_bw      (~50 GB/s/link ICI)
+
+The partitioned HLO module is the per-device program, so per-device values
+divided by per-chip rates equal the brief's global/(chips x rate) formula.
+Scan-body undercounting is fixed by the probe extrapolation recorded in
+each json ("corrected"); MODEL_FLOPS (6*N*D or 6*N_active*D) comes from the
+exact parameter tree of each config.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+PEAK_FLOPS = 197e12         # bf16 / chip
+HBM_BW = 819e9              # bytes/s
+LINK_BW = 50e9              # bytes/s/link
+
+_param_cache: dict = {}
+
+
+def model_param_counts(arch: str):
+    """(total_params, active_params) from the exact init tree."""
+    if arch in _param_cache:
+        return _param_cache[arch]
+    import jax
+    from repro.configs.registry import get_config
+    from repro.models.model import params_specs
+    cfg = get_config(arch)
+    tree = params_specs(cfg)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    total = active = 0
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        total += n
+        keys = [str(getattr(p, "key", p)) for p in path]
+        name = keys[-1]
+        if name in ("w_gate", "w_up", "w_down") and len(leaf.shape) >= 3 \
+                and cfg.n_experts:
+            active += n * cfg.moe_top_k // cfg.n_experts
+        else:
+            active += n
+    _param_cache[arch] = (total, active)
+    return total, active
+
+
+def model_flops(rec: dict) -> float:
+    """Analytic MODEL_FLOPS for the cell (global, per step)."""
+    from repro.configs.base import SHAPES
+    total, active = model_param_counts(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    if rec["kind"] == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if rec["kind"] == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    tokens = shape.global_batch          # one token per sequence
+    return 2.0 * active * tokens
+
+
+def rows_from_records(records_dir: str = "results/dryrun") -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(records_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if "skipped" in rec:
+            rows.append({"cell": os.path.basename(path)[:-5],
+                         "skipped": rec["skipped"]})
+            continue
+        use = rec.get("corrected") or {}
+        corrected = bool(use)
+        flops = use.get("flops", rec["main"]["flops"])
+        byts = use.get("bytes_accessed", rec["main"]["bytes_accessed"])
+        coll = use.get("collective_bytes",
+                       rec["main"]["collectives"]["total_bytes"])
+        if not corrected and not rec["kind"].startswith("gus"):
+            # scan bodies are counted once by HLO cost analysis; without a
+            # probe correction, floor the compute term with MODEL_FLOPS.
+            devices = rec.get("devices", 256)
+            flops = max(flops, model_flops(rec) / devices)
+        terms = {
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": byts / HBM_BW,
+            "collective_s": coll / LINK_BW,
+        }
+        dominant = max(terms, key=terms.get)
+        row = {
+            "cell": f"{rec['arch']}|{rec['shape']}|{rec['mesh']}",
+            "kind": rec["kind"], **terms, "dominant": dominant,
+            "corrected": corrected,
+            "hbm_gb_dev": (rec["main"]["memory"]["argument_bytes"]
+                           + rec["main"]["memory"]["temp_bytes"]) / 1e9,
+        }
+        if not rec["kind"].startswith("gus"):
+            mf = model_flops(rec)
+            devices = rec.get("devices", 256)
+            hlo_global = flops * devices
+            row["model_flops"] = mf
+            row["useful_frac"] = mf / hlo_global if hlo_global else 0.0
+            bound = max(terms.values())
+            row["roofline_frac"] = (
+                (mf / devices / PEAK_FLOPS) / bound if bound else 0.0)
+        rows.append(row)
+    return rows
+
+
+def markdown_table(rows: list) -> str:
+    hdr = ("| cell | kind | compute_s | memory_s | collective_s | dominant "
+           "| useful_frac | roofline_frac | HBM GB/dev | fixup |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(
+                f"| {r['cell']} | SKIP | - | - | - | - | - | - | - | - |")
+            continue
+        fix = "probe" if r.get("corrected") else (
+            "-" if r["kind"].startswith("gus") else "mf-floor")
+        lines.append(
+            f"| {r['cell']} | {r['kind']} | {r['compute_s']:.4f} "
+            f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+            f"| {r['dominant'].replace('_s','')} "
+            f"| {r.get('useful_frac', float('nan')):.2f} "
+            f"| {r.get('roofline_frac', float('nan')):.2f} "
+            f"| {r['hbm_gb_dev']:.1f} | {fix} |")
+    return "\n".join(lines)
+
+
+def run() -> None:
+    rows = rows_from_records()
+    if not rows:
+        print("roofline,0,no dry-run records yet (run repro.launch.dryrun)")
+        return
+    for r in rows:
+        if "skipped" in r:
+            print(f"roofline_{r['cell']},0,skipped")
+        else:
+            print(f"roofline_{r['cell']},"
+                  f"{max(r['compute_s'], r['memory_s'], r['collective_s'])*1e6:.0f},"
+                  f"dominant={r['dominant']};useful="
+                  f"{r.get('useful_frac', 0):.2f}")
+
+
+if __name__ == "__main__":
+    print(markdown_table(rows_from_records()))

@@ -1,0 +1,76 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  lemma41      — Fig. 3 (exact Grale == GUS equality + timings)
+  edge_quality — Fig. 4/6 (ScaNN-NN x Filter-P x IDF-S quality sweep)
+  grale_buckets— Fig. 7 (Bucket-S sweep)
+  topk_compare — Fig. 5/8 (Top-K matched-output comparison)
+  latency      — Fig. 9 (query latency distribution)
+  resources    — Fig. 10 (CPU time / max memory)
+  mutations    — §5.2 insert/update/delete latencies
+  kernels      — kernel microbenchmarks
+  roofline     — §Roofline terms from dry-run records (if present)
+
+Run: ``PYTHONPATH=src python -m benchmarks.run [--fast]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller corpora / fewer queries")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (edge_quality, grale_buckets, kernels_micro,
+                            latency, lemma41, mutations, resources, roofline,
+                            topk_compare)
+
+    n_small = 800 if args.fast else 1200
+    n_mid = 1000 if args.fast else 3000
+    n_lat = 1500 if args.fast else 4000
+    queries = 64 if args.fast else 200
+
+    suites = [
+        ("lemma41", lambda: [lemma41.run(ds, n=n_small)
+                             for ds in ("arxiv", "products")]),
+        ("edge_quality", lambda: [edge_quality.run(ds, n=n_mid,
+                                                   queries=queries)
+                                  for ds in ("arxiv", "products")]),
+        ("grale_buckets", lambda: [grale_buckets.run(ds, n=n_small)
+                                   for ds in ("arxiv", "products")]),
+        ("topk_compare", lambda: [topk_compare.run(ds, n=n_small)
+                                  for ds in ("arxiv", "products")]),
+        ("latency", lambda: [latency.run(ds, n=n_lat, queries=queries)
+                             for ds in ("arxiv", "products")]),
+        ("resources", lambda: [resources.run(ds, n=n_lat,
+                                             queries=queries // 2)
+                               for ds in ("arxiv", "products")]),
+        ("mutations", lambda: [mutations.run(ds, n=n_mid,
+                                             ops=50 if args.fast else 150)
+                               for ds in ("arxiv", "products")]),
+        ("kernels", kernels_micro.run),
+        ("roofline", roofline.run),
+    ]
+    failures = 0
+    for name, fn in suites:
+        if args.only and args.only != name:
+            continue
+        print(f"# --- {name} ---")
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            print(f"{name},0,FAILED")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

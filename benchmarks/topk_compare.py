@@ -1,0 +1,51 @@
+"""Paper Fig. 5/8: Grale with Top-K pruning vs GUS with ScaNN-NN=K —
+matched-output-size quality comparison. Also demonstrates the paper's
+cost asymmetry: Grale still scores every pair; GUS only scores K."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BUCKET_CFG, corpus, emit, timed
+from repro.ann.scann import ScannConfig
+from repro.core import DynamicGUS, GusConfig
+from repro.core.graph import (GraphAccumulator, edge_weight_percentiles,
+                              frac_above)
+from repro.core.grale import GraleConfig, grale_graph
+
+
+def run(dataset: str = "arxiv", n: int = 1500, top_k: int = 10) -> dict:
+    ids, feats, cluster, spec, scorer, gen = corpus(dataset)
+    sub = {k: v[:n] for k, v in feats.items()}
+    bid, valid = gen.buckets(sub)
+    bid, valid = np.asarray(bid), np.asarray(valid)
+
+    (g_pairs, g_weights), t_grale = timed(
+        grale_graph, bid, valid, sub, spec, scorer,
+        GraleConfig(bucket_split=1000, top_k=top_k), repeat=1)
+    g_stats = edge_weight_percentiles(g_weights)
+
+    def gus_run():
+        gus = DynamicGUS(spec, BUCKET_CFG, scorer, GusConfig(
+            scann_nn=top_k, idf_size=0, filter_percent=10,
+            scann=ScannConfig(d_proj=64, n_partitions=32, nprobe=16,
+                              reorder=256)))
+        gus.bootstrap(ids[:n], sub)
+        acc = GraphAccumulator()
+        res = gus.neighbors_of_ids(ids[:n], k=top_k)
+        acc.add_result(ids[:n], res)
+        return acc.edges()
+
+    (s_pairs, s_weights), t_gus = timed(gus_run, repeat=1)
+    s_stats = edge_weight_percentiles(s_weights)
+    emit(f"topk_{dataset}_grale_K{top_k}", t_grale,
+         f"edges={g_stats['total_edges']};frac_gt_0.5="
+         f"{frac_above(g_weights, 0.5):.3f}")
+    emit(f"topk_{dataset}_gus_K{top_k}", t_gus,
+         f"edges={s_stats['total_edges']};frac_gt_0.5="
+         f"{frac_above(s_weights, 0.5):.3f}")
+    return {"grale": g_stats, "gus": s_stats}
+
+
+if __name__ == "__main__":
+    for ds in ("arxiv", "products"):
+        print(run(ds))

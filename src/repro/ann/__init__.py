@@ -1,0 +1,2 @@
+from repro.ann.brute import BruteIndex
+from repro.ann.scann import ScannConfig, ScannIndex

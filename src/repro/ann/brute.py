@@ -1,0 +1,147 @@
+"""Exact dynamic index over sparse embeddings.
+
+This is (a) the correctness oracle for the quantized ScaNN-style index,
+(b) the engine behind the paper's offline experiments — Lemma 4.1 needs
+"all points with negative distance", which only an exact index can return,
+and (c) a perfectly serviceable serving index for small corpora.
+
+Layout: power-of-two-capacity device slabs + a host id->slot map. Inserts
+scatter rows into free slots; deletes tombstone the validity mask — the
+same slab discipline the quantized index uses per partition.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ann.sparse import sparse_dot_many_many
+from repro.core.types import PAD_INDEX, SparseBatch
+
+
+@partial(jax.jit, donate_argnums=(0, 1, 2))
+def _scatter_rows(db_idx, db_val, valid, slots, new_idx, new_val, keep):
+    db_idx = db_idx.at[slots].set(new_idx)
+    db_val = db_val.at[slots].set(new_val)
+    valid = valid.at[slots].set(keep)
+    return db_idx, db_val, valid
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _topk_scores(q_idx, q_val, db_idx, db_val, valid, k: int):
+    scores = sparse_dot_many_many(SparseBatch(q_idx, q_val),
+                                  SparseBatch(db_idx, db_val))
+    scores = jnp.where(valid[None, :], scores, -jnp.inf)
+    top_scores, top_slots = jax.lax.top_k(scores, k)
+    return top_scores, top_slots
+
+
+@jax.jit
+def _all_scores(q_idx, q_val, db_idx, db_val, valid):
+    scores = sparse_dot_many_many(SparseBatch(q_idx, q_val),
+                                  SparseBatch(db_idx, db_val))
+    return jnp.where(valid[None, :], scores, 0.0)
+
+
+class BruteIndex:
+    """Exact ANN index: negative-dot-product distance over SparseBatch rows."""
+
+    def __init__(self, k_dims: int, capacity: int = 1024):
+        self.k_dims = k_dims
+        self.capacity = max(64, int(2 ** np.ceil(np.log2(capacity))))
+        self._alloc(self.capacity)
+        self.slot_of: dict[int, int] = {}
+        self.free: list[int] = list(range(self.capacity - 1, -1, -1))
+
+    def _alloc(self, cap: int) -> None:
+        self.db_idx = jnp.full((cap, self.k_dims), PAD_INDEX, jnp.uint32)
+        self.db_val = jnp.zeros((cap, self.k_dims), jnp.float32)
+        self.valid = jnp.zeros((cap,), bool)
+        self.ids = np.full((cap,), -1, np.int64)
+
+    def __len__(self) -> int:
+        return len(self.slot_of)
+
+    def _grow(self, need: int) -> None:
+        new_cap = self.capacity
+        while new_cap < need:
+            new_cap *= 2
+        pad = new_cap - self.capacity
+        self.db_idx = jnp.concatenate(
+            [self.db_idx, jnp.full((pad, self.k_dims), PAD_INDEX, jnp.uint32)])
+        self.db_val = jnp.concatenate(
+            [self.db_val, jnp.zeros((pad, self.k_dims), jnp.float32)])
+        self.valid = jnp.concatenate([self.valid, jnp.zeros((pad,), bool)])
+        self.ids = np.concatenate([self.ids, np.full((pad,), -1, np.int64)])
+        self.free.extend(range(new_cap - 1, self.capacity - 1, -1))
+        self.capacity = new_cap
+
+    # ------------------------------------------------------------ mutations
+
+    def upsert(self, ids: np.ndarray, emb: SparseBatch) -> None:
+        """Insert new points / update existing ones (paper §3.3.1)."""
+        ids = np.asarray(ids)
+        need = len(self.slot_of) + len(ids)
+        if need > self.capacity:
+            self._grow(need)
+        slots = np.empty((len(ids),), np.int32)
+        for i, pid in enumerate(ids.tolist()):
+            slot = self.slot_of.get(pid)
+            if slot is None:
+                slot = self.free.pop()
+                self.slot_of[pid] = slot
+                self.ids[slot] = pid
+            slots[i] = slot
+        keep = jnp.ones((len(ids),), bool)
+        self.db_idx, self.db_val, self.valid = _scatter_rows(
+            self.db_idx, self.db_val, self.valid,
+            jnp.asarray(slots), emb.indices, emb.values, keep)
+
+    def delete(self, ids: np.ndarray) -> int:
+        """Tombstone rows (paper §3.3.2). Returns #actually deleted."""
+        slots = []
+        for pid in np.asarray(ids).tolist():
+            slot = self.slot_of.pop(pid, None)
+            if slot is not None:
+                slots.append(slot)
+                self.ids[slot] = -1
+                self.free.append(slot)
+        if not slots:
+            return 0
+        sl = jnp.asarray(np.asarray(slots, np.int32))
+        self.valid = self.valid.at[sl].set(False)
+        return len(slots)
+
+    # -------------------------------------------------------------- queries
+
+    def search(self, emb: SparseBatch, k: int):
+        """Top-k by ascending distance. Returns (ids [B,k], dists [B,k]);
+        missing neighbors padded with id=-1, dist=+inf."""
+        k_eff = min(k, self.capacity)
+        scores, slots = _topk_scores(
+            emb.indices, emb.values, self.db_idx, self.db_val, self.valid, k_eff)
+        scores = np.asarray(scores)
+        slots = np.asarray(slots)
+        ids = np.where(np.isfinite(scores), self.ids[slots], -1)
+        dists = np.where(np.isfinite(scores), -scores, np.inf)
+        if k > k_eff:
+            pad = ((0, 0), (0, k - k_eff))
+            ids = np.pad(ids, pad, constant_values=-1)
+            dists = np.pad(dists, pad, constant_values=np.inf)
+        return ids, dists.astype(np.float32)
+
+    def search_threshold(self, emb: SparseBatch, tau: float = 0.0):
+        """All points with Dist < tau (Lemma 4.1 retrieval mode).
+
+        Returns a list (one per query row) of (ids, dists) numpy arrays.
+        """
+        scores = np.asarray(_all_scores(
+            emb.indices, emb.values, self.db_idx, self.db_val, self.valid))
+        out = []
+        for row in scores:
+            hit = (-row) < tau
+            hit &= self.ids != -1
+            out.append((self.ids[hit].copy(), (-row[hit]).astype(np.float32)))
+        return out

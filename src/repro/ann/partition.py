@@ -1,0 +1,95 @@
+"""Partitioning layer of the ScaNN-style index: k-means + SOAR spilling.
+
+The coarse partitioner runs in CountSketch space (see ann/sparse.py).
+Assignment can use the anisotropic (score-aware) cost of Guo et al. 2020:
+
+    cost(x, c) = ||x - c||^2 + (eta - 1) * ((x - c) . x_hat)^2
+
+which penalizes residual error parallel to the datapoint (the component
+that perturbs dot-product scores) ``eta`` times more than orthogonal error.
+Center updates use the plain mean (exact anisotropic updates are reserved
+for the PQ codebooks where the subspace dim is small — see ann/quantize.py
+and DESIGN.md §2).
+
+SOAR (Sun et al. 2024): each point is *also* assigned to a secondary
+partition chosen so its residual there is as orthogonal as possible to the
+primary residual — redundancy that is effective rather than duplicative:
+
+    soar_cost(x, c_j) = ||r_j||^2 + lam * ((r_j . r1_hat))^2.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _pairwise_sq_dist(x, c):
+    # [N, C] squared distances via the expanded form (MXU-friendly).
+    return (jnp.sum(x * x, -1)[:, None] - 2.0 * x @ c.T
+            + jnp.sum(c * c, -1)[None, :])
+
+
+def anisotropic_cost(x, c, eta: float):
+    """[N, C] score-aware assignment cost."""
+    d2 = _pairwise_sq_dist(x, c)
+    if eta == 1.0:
+        return d2
+    xn = x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + 1e-9)
+    # ((x - c) . x_hat) = ||x|| - c . x_hat
+    par = jnp.linalg.norm(x, axis=-1)[:, None] - xn @ c.T
+    return d2 + (eta - 1.0) * par * par
+
+
+@partial(jax.jit, static_argnames=("eta",))
+def _lloyd_step(x, centroids, eta: float):
+    cost = anisotropic_cost(x, centroids, eta)
+    assign = jnp.argmin(cost, axis=-1)
+    onehot = jax.nn.one_hot(assign, centroids.shape[0], dtype=x.dtype)
+    sums = onehot.T @ x
+    counts = jnp.sum(onehot, axis=0)[:, None]
+    new_c = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), centroids)
+    return new_c, assign
+
+
+def kmeans(x: jax.Array, n_clusters: int, iters: int = 20,
+           eta: float = 1.0, seed: int = 0) -> jax.Array:
+    """K-means in sketch space. Returns centroids f32 [n_clusters, d]."""
+    n = x.shape[0]
+    key = jax.random.PRNGKey(seed)
+    init_idx = jax.random.choice(key, n, (n_clusters,), replace=n < n_clusters)
+    centroids = x[init_idx]
+    for _ in range(iters):
+        centroids, _ = _lloyd_step(x, centroids, eta)
+    return centroids
+
+
+@partial(jax.jit, static_argnames=("eta", "soar_lambda"))
+def assign_partitions(x: jax.Array, centroids: jax.Array,
+                      eta: float = 1.0, soar_lambda: float = 1.0):
+    """Primary + SOAR secondary partition per point. Returns (p1, p2) [N]."""
+    cost = anisotropic_cost(x, centroids, eta)
+    p1 = jnp.argmin(cost, axis=-1)
+    r1 = x - centroids[p1]                                   # primary residual
+    r1n = r1 / (jnp.linalg.norm(r1, axis=-1, keepdims=True) + 1e-9)
+    # residual to every centroid: r_j = x - c_j; parallel component to r1_hat
+    d2 = _pairwise_sq_dist(x, centroids)
+    par = jnp.sum(x * r1n, -1)[:, None] - r1n @ centroids.T  # (x - c_j) . r1_hat
+    soar = d2 + soar_lambda * par * par
+    soar = soar.at[jnp.arange(x.shape[0]), p1].set(jnp.inf)  # j != primary
+    p2 = jnp.argmin(soar, axis=-1)
+    return p1, p2
+
+
+@jax.jit
+def partition_scores(q: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Query-to-partition dot scores [B, C] (higher = search first)."""
+    return q @ centroids.T
+
+
+def quantized_partition_sizes(p1: np.ndarray, p2: np.ndarray,
+                              n_clusters: int) -> np.ndarray:
+    return (np.bincount(np.asarray(p1), minlength=n_clusters)
+            + np.bincount(np.asarray(p2), minlength=n_clusters))

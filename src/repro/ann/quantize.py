@@ -1,0 +1,115 @@
+"""Product quantization with the anisotropic (score-aware) loss.
+
+Residuals (x - partition centroid) are split into M subspaces; each
+subspace gets a 256-center codebook so codes are one byte per subspace.
+Codebook training minimizes the anisotropic loss exactly: the per-center
+update solves the (d_sub x d_sub) normal equations
+
+    (n I + (eta-1) * sum_i x̂_i x̂_iᵀ) c = sum_i x_i + (eta-1) sum_i x̂_i x̂_iᵀ x_i
+
+— cheap because d_sub is 8-32, which is precisely why the *exact*
+anisotropic update lives here and not in the coarse partitioner.
+
+Query-time scoring is LUT-based:  lut[m, c] = q_m . codebook[m, c];
+score(point) = q . c_partition + sum_m lut[m, code[point, m]].
+The LUT gather/accumulate is the index's hottest loop — the Pallas kernel
+``repro.kernels.pq_score`` implements it with VMEM tiling; the pure-jnp
+form here doubles as its oracle.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def split_subspaces(x: jax.Array, m: int) -> jax.Array:
+    """[N, d] -> [N, M, d/M]."""
+    n, d = x.shape
+    assert d % m == 0, f"d_proj {d} must divide into {m} subspaces"
+    return x.reshape(n, m, d // m)
+
+
+@partial(jax.jit, static_argnames=("eta",))
+def _aniso_center_update(x, xhat, onehot, centers, eta: float):
+    """Exact per-center anisotropic solve in one subspace.
+
+    x, xhat: [N, ds]; onehot: [N, C]; centers: [C, ds].
+    """
+    n_per = jnp.sum(onehot, axis=0)                          # [C]
+    sum_x = onehot.T @ x                                      # [C, ds]
+    if eta == 1.0:
+        return jnp.where(n_per[:, None] > 0,
+                         sum_x / jnp.maximum(n_per[:, None], 1.0), centers)
+    ds = x.shape[-1]
+    # A_c = sum_i∈c x̂ x̂ᵀ  and  b2_c = sum_i∈c x̂ (x̂ . x)
+    outer = xhat[:, :, None] * xhat[:, None, :]               # [N, ds, ds]
+    A = jnp.einsum("nc,nde->cde", onehot, outer)              # [C, ds, ds]
+    proj = jnp.sum(xhat * x, axis=-1)                         # [N]
+    b2 = onehot.T @ (xhat * proj[:, None])                    # [C, ds]
+    lhs = (n_per[:, None, None] * jnp.eye(ds) + (eta - 1.0) * A)
+    rhs = sum_x + (eta - 1.0) * b2
+    solved = jax.vmap(jnp.linalg.solve)(
+        lhs + 1e-6 * jnp.eye(ds), rhs[:, :, None])[:, :, 0]
+    return jnp.where(n_per[:, None] > 0, solved, centers)
+
+
+def train_codebooks(residuals: jax.Array, m: int, n_centers: int = 256,
+                    iters: int = 10, eta: float = 1.0, seed: int = 0) -> jax.Array:
+    """Train per-subspace codebooks. Returns f32 [M, n_centers, ds]."""
+    sub = split_subspaces(residuals, m)                       # [N, M, ds]
+    n = sub.shape[0]
+    key = jax.random.PRNGKey(seed)
+    init_idx = jax.random.choice(key, n, (n_centers,), replace=n < n_centers)
+    books = jnp.transpose(sub[init_idx], (1, 0, 2))           # [M, C, ds]
+
+    # direction of the *full* residual drives the anisotropic weighting;
+    # per-subspace we use the subspace component of the unit residual.
+    norm = jnp.linalg.norm(residuals, axis=-1, keepdims=True) + 1e-9
+    xhat_sub = split_subspaces(residuals / norm, m)
+
+    for _ in range(iters):
+        new_books = []
+        for mi in range(m):
+            x, xh, centers = sub[:, mi], xhat_sub[:, mi], books[mi]
+            d2 = (jnp.sum(x * x, -1)[:, None] - 2 * x @ centers.T
+                  + jnp.sum(centers * centers, -1)[None, :])
+            if eta != 1.0:
+                par = jnp.sum(x * xh, -1)[:, None] - xh @ centers.T
+                d2 = d2 + (eta - 1.0) * par * par
+            onehot = jax.nn.one_hot(jnp.argmin(d2, -1), n_centers, dtype=x.dtype)
+            new_books.append(_aniso_center_update(x, xh, onehot, centers, eta))
+        books = jnp.stack(new_books)
+    return books
+
+
+@jax.jit
+def encode(residuals: jax.Array, books: jax.Array) -> jax.Array:
+    """Assign codes u8 [N, M] (nearest center per subspace, L2)."""
+    m = books.shape[0]
+    sub = split_subspaces(residuals, m)                       # [N, M, ds]
+    d2 = (jnp.sum(sub * sub, -1)[:, :, None]
+          - 2 * jnp.einsum("nmd,mcd->nmc", sub, books)
+          + jnp.sum(books * books, -1)[None, :, :])
+    return jnp.argmin(d2, axis=-1).astype(jnp.uint8)
+
+
+@jax.jit
+def query_lut(q: jax.Array, books: jax.Array) -> jax.Array:
+    """LUT f32 [B, M, n_centers]: dot of each query subvector w/ each center."""
+    m = books.shape[0]
+    q_sub = split_subspaces(q, m)                             # [B, M, ds]
+    return jnp.einsum("bmd,mcd->bmc", q_sub, books)
+
+
+def lut_scores(lut: jax.Array, codes: jax.Array) -> jax.Array:
+    """Pure-jnp LUT accumulation: lut [M, C] x codes [N, M] -> scores [N].
+
+    (Oracle for the ``pq_score`` Pallas kernel.)
+    """
+    m = lut.shape[0]
+    idx = codes.astype(jnp.int32)                             # [N, M]
+    per_sub = lut[jnp.arange(m)[None, :], idx]                # [N, M]
+    return jnp.sum(per_sub, axis=-1)

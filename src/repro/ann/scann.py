@@ -1,0 +1,356 @@
+"""Dynamic ScaNN-style index: partitions + residual PQ + SOAR + exact rescore.
+
+TPU-native reimplementation of the ScaNN role in Dynamic GUS (DESIGN.md §2):
+
+  sparse embedding --CountSketch--> sketch
+      --centroid matmul--> top-``nprobe`` partitions
+      --PQ LUT scoring over partition slabs--> shortlist of ``reorder`` cands
+      --exact sparse-space rescore--> final top-k.
+
+Storage discipline:
+
+* one *global* slab per point: padded sparse row (for exact rescoring) +
+  sketch (for re-encoding on rebuild), indexed by slot;
+* per-(partition, position) PQ codes: a point appears in its primary and its
+  SOAR secondary partition, each with codes of *that* partition's residual;
+* all device arrays grow by power-of-two doubling so jit recompiles are
+  O(log capacity) over the index lifetime;
+* the host keeps id -> (slot, (p1,pos1), (p2,pos2)) and per-partition free
+  lists — mutations are host-orchestrated scatters, exactly the slab
+  discipline a real accelerator serving stack uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ann import partition as part_mod
+from repro.ann import quantize as pq
+from repro.ann.sparse import count_sketch, sparse_dot_one_many
+from repro.core.types import PAD_INDEX, SparseBatch
+
+
+@dataclasses.dataclass(frozen=True)
+class ScannConfig:
+    d_proj: int = 64            # CountSketch dimension
+    n_partitions: int = 64
+    pq_subspaces: int = 8       # M (one byte/code each)
+    pq_centers: int = 256
+    nprobe: int = 8             # partitions searched per query
+    reorder: int = 128          # shortlist size for exact rescoring
+    eta: float = 4.0            # anisotropic weight (1.0 = plain L2)
+    soar_lambda: float = 1.0    # SOAR orthogonality weight (<0 disables SOAR)
+    kmeans_iters: int = 12
+    pq_iters: int = 8
+    use_kernels: bool = False   # route hot stages through Pallas kernels
+    seed: int = 13
+
+    @property
+    def use_soar(self) -> bool:
+        return self.soar_lambda >= 0
+
+
+# --------------------------------------------------------------- jit steps
+
+@partial(jax.jit, donate_argnums=(0,))
+def _write_members(arr, rows, cols, vals):
+    return arr.at[rows, cols].set(vals)
+
+
+@partial(jax.jit, static_argnames=("nprobe", "reorder", "k", "use_kernels"))
+def _query_step(q_idx, q_val, q_sketch, centroids, books,
+                members, codes_list, valid_list,
+                sp_idx, sp_val, *, nprobe: int, reorder: int, k: int,
+                use_kernels: bool = False):
+    """Batched query: returns (slots [B,k], dists [B,k]); empty = -1/+inf.
+
+    ``use_kernels`` routes the two hot stages (PQ LUT scoring, exact
+    rescoring) through the Pallas kernels — the TPU path. Off by default
+    on CPU where interpret-mode kernels would serialize the grid.
+    """
+    B = q_idx.shape[0]
+    S = members.shape[1]
+
+    # 1) partition selection (dot scores, MXU matmul)
+    pscores = part_mod.partition_scores(q_sketch, centroids)       # [B, C]
+    top_ps, top_parts = jax.lax.top_k(pscores, nprobe)             # [B, nprobe]
+
+    # 2) PQ LUT scoring over the probed partitions' slabs
+    lut = pq.query_lut(q_sketch, books)                            # [B, M, Cq]
+    cand_slots = members[top_parts]                                # [B, np, S]
+    cand_codes = codes_list[top_parts]                             # [B, np, S, M]
+    cand_valid = valid_list[top_parts]                             # [B, np, S]
+    m = books.shape[0]
+
+    if use_kernels:
+        from repro.kernels import ops as kops
+        approx = kops.pq_score_batched(lut, cand_codes.reshape(B, -1, m))
+    else:
+        def score_one(lut_b, codes_b):
+            flat = codes_b.reshape(-1, m).astype(jnp.int32)        # [np*S, M]
+            per = lut_b[jnp.arange(m)[None, :], flat]              # [np*S, M]
+            return jnp.sum(per, axis=-1)
+
+        approx = jax.vmap(score_one)(lut, cand_codes)              # [B, np*S]
+    approx = approx + jnp.repeat(top_ps, S, axis=-1)               # + q . c_p
+    flat_slots = cand_slots.reshape(B, -1)
+    flat_valid = cand_valid.reshape(B, -1) & (flat_slots >= 0)
+    approx = jnp.where(flat_valid, approx, -jnp.inf)
+
+    # 3) shortlist
+    r = min(reorder, approx.shape[-1])
+    short_scores, short_pos = jax.lax.top_k(approx, r)             # [B, r]
+    short_slots = jnp.take_along_axis(flat_slots, short_pos, axis=-1)
+    short_slots = jnp.where(jnp.isfinite(short_scores), short_slots, -1)
+
+    # 4) exact sparse-space rescore of the shortlist
+    safe = jnp.maximum(short_slots, 0)
+    rows_idx = sp_idx[safe]                                        # [B, r, K]
+    rows_val = sp_val[safe]
+    if use_kernels:
+        from repro.kernels import ops as kops
+        exact = kops.sparse_dot_batched(q_idx, q_val, rows_idx, rows_val)
+    else:
+        exact = jax.vmap(sparse_dot_one_many)(q_idx, q_val, rows_idx, rows_val)
+    exact = jnp.where(short_slots >= 0, exact, -jnp.inf)
+
+    # 5) SOAR dedup: a slot probed via both partitions appears twice.
+    order = jnp.argsort(short_slots, axis=-1)
+    s_sorted = jnp.take_along_axis(short_slots, order, axis=-1)
+    e_sorted = jnp.take_along_axis(exact, order, axis=-1)
+    dup = jnp.concatenate([jnp.zeros((B, 1), bool),
+                           s_sorted[:, 1:] == s_sorted[:, :-1]], axis=-1)
+    e_sorted = jnp.where(dup, -jnp.inf, e_sorted)
+
+    kk = min(k, r)
+    final_scores, pos = jax.lax.top_k(e_sorted, kk)
+    final_slots = jnp.take_along_axis(s_sorted, pos, axis=-1)
+    final_slots = jnp.where(jnp.isfinite(final_scores), final_slots, -1)
+    return final_slots, -final_scores
+
+
+class ScannIndex:
+    """Dynamic quantized index over sparse embeddings."""
+
+    def __init__(self, k_dims: int, cfg: ScannConfig):
+        self.k_dims = k_dims
+        self.cfg = cfg
+        self.capacity = 0
+        self.slot_of: dict[int, tuple] = {}  # id -> (slot, (p,pos), (p,pos)|None)
+        self.free_slots: list[int] = []
+        self.part_free: list[list[int]] = []
+        self.centroids = None
+        self.books = None
+        self.trained = False
+
+    def __len__(self) -> int:
+        return len(self.slot_of)
+
+    # ------------------------------------------------------------- storage
+
+    def _alloc(self, capacity: int, slab: int) -> None:
+        cfg = self.cfg
+        c = cfg.n_partitions
+        self.capacity = capacity
+        self.slab = slab
+        self.sp_idx = jnp.full((capacity, self.k_dims), PAD_INDEX, jnp.uint32)
+        self.sp_val = jnp.zeros((capacity, self.k_dims), jnp.float32)
+        self.sketch = jnp.zeros((capacity, cfg.d_proj), jnp.float32)
+        self.members = jnp.full((c, slab), -1, jnp.int32)
+        self.codes_list = jnp.zeros((c, slab, cfg.pq_subspaces), jnp.uint8)
+        self.valid_list = jnp.zeros((c, slab), bool)
+        self.ids = np.full((capacity,), -1, np.int64)
+        self.free_slots = list(range(capacity - 1, -1, -1))
+        self.part_free = [list(range(slab - 1, -1, -1)) for _ in range(c)]
+
+    def _grow_slots(self, need: int) -> None:
+        new_cap = max(self.capacity, 64)
+        while new_cap < need:
+            new_cap *= 2
+        pad = new_cap - self.capacity
+        if pad == 0:
+            return
+        self.sp_idx = jnp.concatenate(
+            [self.sp_idx, jnp.full((pad, self.k_dims), PAD_INDEX, jnp.uint32)])
+        self.sp_val = jnp.concatenate(
+            [self.sp_val, jnp.zeros((pad, self.k_dims), jnp.float32)])
+        self.sketch = jnp.concatenate(
+            [self.sketch, jnp.zeros((pad, self.cfg.d_proj), jnp.float32)])
+        self.ids = np.concatenate([self.ids, np.full((pad,), -1, np.int64)])
+        self.free_slots = list(range(new_cap - 1, self.capacity - 1, -1)) \
+            + self.free_slots
+        self.capacity = new_cap
+
+    def _grow_slab(self) -> None:
+        old = self.slab
+        self.slab = old * 2
+        c = self.cfg.n_partitions
+        self.members = jnp.concatenate(
+            [self.members, jnp.full((c, old), -1, jnp.int32)], axis=1)
+        self.codes_list = jnp.concatenate(
+            [self.codes_list,
+             jnp.zeros((c, old, self.cfg.pq_subspaces), jnp.uint8)], axis=1)
+        self.valid_list = jnp.concatenate(
+            [self.valid_list, jnp.zeros((c, old), bool)], axis=1)
+        for fl in self.part_free:
+            fl[:0] = range(self.slab - 1, old - 1, -1)
+
+    # ------------------------------------------------------------ training
+
+    def build(self, ids: np.ndarray, emb: SparseBatch) -> None:
+        """Offline build (paper §4.3): train partitions + codebooks, load."""
+        cfg = self.cfg
+        n = emb.batch
+        sk = count_sketch(emb, cfg.d_proj, cfg.seed)
+        self.centroids = part_mod.kmeans(
+            sk, cfg.n_partitions, cfg.kmeans_iters, cfg.eta, cfg.seed)
+        p1, _ = part_mod.assign_partitions(sk, self.centroids, cfg.eta,
+                                           max(cfg.soar_lambda, 0.0))
+        residuals = sk - self.centroids[p1]
+        self.books = pq.train_codebooks(
+            residuals, cfg.pq_subspaces, cfg.pq_centers,
+            cfg.pq_iters, cfg.eta, cfg.seed)
+        self.trained = True
+        per_copy = 2 if cfg.use_soar else 1
+        slab = 64
+        while slab * cfg.n_partitions < per_copy * n * 2:
+            slab *= 2
+        self._alloc(max(64, int(2 ** np.ceil(np.log2(max(n, 1) * 2)))), slab)
+        self.upsert(ids, emb)
+
+    @classmethod
+    def from_trained(cls, k_dims: int, cfg: ScannConfig, centroids, books,
+                     capacity: int = 1024, slab: int = 64) -> "ScannIndex":
+        """Create an EMPTY dynamic index from offline-trained structures
+        (paper §4.3: partitions/codebooks are trained offline and served;
+        every point then arrives through the mutation path)."""
+        idx = cls(k_dims, cfg)
+        idx.centroids = centroids
+        idx.books = books
+        idx.trained = True
+        cap = max(64, int(2 ** np.ceil(np.log2(max(capacity, 1)))))
+        s = max(64, int(2 ** np.ceil(np.log2(max(slab, 1)))))
+        idx._alloc(cap, s)
+        return idx
+
+    def rebuild(self) -> None:
+        """Periodic retrain + compaction on the live points (paper §4.3)."""
+        live = [(pid, rec[0]) for pid, rec in self.slot_of.items()]
+        if not live:
+            return
+        pids = np.asarray([p for p, _ in live], np.int64)
+        slots = np.asarray([s for _, s in live], np.int32)
+        emb = SparseBatch(self.sp_idx[slots], self.sp_val[slots])
+        self.slot_of.clear()
+        self.build(pids, emb)
+
+    # ----------------------------------------------------------- mutations
+
+    def upsert(self, ids: np.ndarray, emb: SparseBatch) -> None:
+        assert self.trained, "build() the index before mutating it"
+        cfg = self.cfg
+        ids = np.asarray(ids)
+        self.delete([pid for pid in ids.tolist() if pid in self.slot_of])
+        n = len(ids)
+        if len(self.slot_of) + n > self.capacity:
+            self._grow_slots(len(self.slot_of) + n)
+
+        sk = count_sketch(emb, cfg.d_proj, cfg.seed)
+        p1, p2 = part_mod.assign_partitions(sk, self.centroids, cfg.eta,
+                                            max(cfg.soar_lambda, 0.0))
+        codes1 = pq.encode(sk - self.centroids[p1], self.books)
+        codes2 = pq.encode(sk - self.centroids[p2], self.books)
+        p1_np, p2_np = np.asarray(p1), np.asarray(p2)
+
+        slots = np.empty((n,), np.int32)
+        assignments = []  # (row=partition, col=pos, slot, which_codes, i)
+        for i, pid in enumerate(ids.tolist()):
+            slot = self.free_slots.pop()
+            slots[i] = slot
+            self.ids[slot] = pid
+            copies = [(int(p1_np[i]), 0)]
+            if cfg.use_soar:
+                copies.append((int(p2_np[i]), 1))
+            recs = []
+            for p, which in copies:
+                if not self.part_free[p]:
+                    self._grow_slab()
+                pos = self.part_free[p].pop()
+                assignments.append((p, pos, slot, which, i))
+                recs.append((p, pos))
+            self.slot_of[pid] = (int(slot),) + tuple(recs)
+
+        # batched device writes
+        sl = jnp.asarray(slots)
+        self.sp_idx = self.sp_idx.at[sl].set(emb.indices)
+        self.sp_val = self.sp_val.at[sl].set(emb.values)
+        self.sketch = self.sketch.at[sl].set(sk)
+        rows = jnp.asarray(np.asarray([a[0] for a in assignments], np.int32))
+        cols = jnp.asarray(np.asarray([a[1] for a in assignments], np.int32))
+        aslots = jnp.asarray(np.asarray([a[2] for a in assignments], np.int32))
+        codes_all = np.where(
+            np.asarray([a[3] for a in assignments])[:, None] == 0,
+            np.asarray(codes1)[[a[4] for a in assignments]],
+            np.asarray(codes2)[[a[4] for a in assignments]])
+        self.members = _write_members(self.members, rows, cols, aslots)
+        self.codes_list = _write_members(
+            self.codes_list, rows, cols, jnp.asarray(codes_all))
+        self.valid_list = _write_members(
+            self.valid_list, rows, cols, jnp.ones((len(assignments),), bool))
+
+    def delete(self, ids) -> int:
+        rows, cols = [], []
+        n_del = 0
+        for pid in list(ids):
+            rec = self.slot_of.pop(int(pid), None)
+            if rec is None:
+                continue
+            n_del += 1
+            slot = rec[0]
+            self.ids[slot] = -1
+            self.free_slots.append(slot)
+            for p, pos in rec[1:]:
+                rows.append(p)
+                cols.append(pos)
+                self.part_free[p].append(pos)
+        if rows:
+            self.valid_list = _write_members(
+                self.valid_list, jnp.asarray(np.asarray(rows, np.int32)),
+                jnp.asarray(np.asarray(cols, np.int32)),
+                jnp.zeros((len(rows),), bool))
+        return n_del
+
+    # ------------------------------------------------------------- queries
+
+    def search(self, emb: SparseBatch, k: int):
+        """Top-k (ids [B,k], dists [B,k]); padding id=-1, dist=+inf."""
+        cfg = self.cfg
+        sk = count_sketch(emb, cfg.d_proj, cfg.seed)
+        nprobe = min(cfg.nprobe, cfg.n_partitions)
+        slots, dists = _query_step(
+            emb.indices, emb.values, sk, self.centroids, self.books,
+            self.members, self.codes_list, self.valid_list,
+            self.sp_idx, self.sp_val,
+            nprobe=nprobe, reorder=cfg.reorder, k=min(k, cfg.reorder),
+            use_kernels=cfg.use_kernels)
+        slots, dists = np.asarray(slots), np.asarray(dists)
+        ids = np.where(slots >= 0, self.ids[np.maximum(slots, 0)], -1)
+        if k > ids.shape[1]:
+            pad = ((0, 0), (0, k - ids.shape[1]))
+            ids = np.pad(ids, pad, constant_values=-1)
+            dists = np.pad(dists, pad, constant_values=np.inf)
+        return ids, dists.astype(np.float32)
+
+    def search_threshold(self, emb: SparseBatch, tau: float = 0.0):
+        """All shortlisted points with Dist < tau (approximate — bounded by
+        ``reorder``; the exact mode lives in BruteIndex)."""
+        ids, dists = self.search(emb, self.cfg.reorder)
+        out = []
+        for row_ids, row_d in zip(ids, dists):
+            hit = (row_d < tau) & (row_ids >= 0)
+            out.append((row_ids[hit], row_d[hit]))
+        return out

@@ -1,0 +1,257 @@
+"""Distributed GUS index: shard_map programs for the production mesh.
+
+This is the paper's serving pattern mapped onto a TPU pod (DESIGN.md §5):
+the index tower is sharded over every chip; queries are replicated in,
+answered by a scatter/merge dataflow with static shapes end-to-end:
+
+  query step   — each shard owns n_partitions/shards partitions (centroids
+                 sharded too). Per shard: centroid matmul over local
+                 partitions -> local top-nprobe -> PQ LUT scores over the
+                 probed slabs -> exact sparse rescore of the local
+                 shortlist -> local top-k. Then one all_gather of
+                 k-per-shard candidates and a final merge top-k.
+                 No all-to-all, no data-dependent gathers across chips.
+
+  mutate step  — mutation batch replicated in; each shard keeps the rows it
+                 owns (hash routing), appends them ring-buffer style into
+                 its slabs. Write amplification is 1 (each row lands on
+                 exactly one shard + its SOAR copy locally).
+
+These are the programs the dry-run lowers for the GUS cells, and the same
+functions run unmodified on the small CPU test mesh (tests/test_sharded.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import hashing
+from repro.core.types import PAD_INDEX
+
+
+@dataclasses.dataclass(frozen=True)
+class GusCellConfig:
+    """Shapes of one sharded-GUS dry-run cell."""
+    name: str = "gus_serve_100m"
+    n_rows: int = 1 << 27          # 134M points globally
+    k_dims: int = 16               # nnz per sparse embedding
+    d_proj: int = 128              # sketch dim
+    pq_m: int = 16                 # PQ subspaces
+    pq_centers: int = 256
+    n_partitions: int = 4096       # global partitions (sharded w/ slabs)
+    slab: int = 8192               # rows per partition slab
+    nprobe_local: int = 2          # partitions probed per shard
+    query_batch: int = 4096
+    mutate_batch: int = 65536
+    top_k: int = 100
+    # candidate-merge schedule: "flat" (paper-faithful single all_gather of
+    # k-per-shard over every chip) or "hier" (two-stage: intra-"model"
+    # gather + top-k, then cross-"data"/"pod" — the §Perf C optimization)
+    merge: str = "flat"
+
+
+def _flat_axes(mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def index_specs(cell: GusCellConfig, mesh):
+    """PartitionSpecs of the sharded index state."""
+    ax = _flat_axes(mesh)
+    return {
+        "centroids": P(ax, None),           # [C, d_proj] partitions sharded
+        "books": P(),                        # [M, 256, ds] replicated
+        "members_idx": P(ax, None, None),    # [C, S, K] sparse rows by slab
+        "members_val": P(ax, None, None),
+        "codes": P(ax, None, None),          # [C, S, M] u8
+        "valid": P(ax, None),                # [C, S]
+        "counts": P(ax),                     # [C] ring-buffer cursors
+    }
+
+
+def index_shapes(cell: GusCellConfig):
+    c, s = cell.n_partitions, cell.slab
+    return {
+        "centroids": jax.ShapeDtypeStruct((c, cell.d_proj), jnp.float32),
+        "books": jax.ShapeDtypeStruct(
+            (cell.pq_m, cell.pq_centers, cell.d_proj // cell.pq_m),
+            jnp.float32),
+        "members_idx": jax.ShapeDtypeStruct((c, s, cell.k_dims), jnp.uint32),
+        "members_val": jax.ShapeDtypeStruct((c, s, cell.k_dims), jnp.float32),
+        "codes": jax.ShapeDtypeStruct((c, s, cell.pq_m), jnp.uint8),
+        "valid": jax.ShapeDtypeStruct((c, s), jnp.bool_),
+        "counts": jax.ShapeDtypeStruct((c,), jnp.int32),
+    }
+
+
+def query_shapes(cell: GusCellConfig):
+    b = cell.query_batch
+    return (jax.ShapeDtypeStruct((b, cell.k_dims), jnp.uint32),
+            jax.ShapeDtypeStruct((b, cell.k_dims), jnp.float32),
+            jax.ShapeDtypeStruct((b, cell.d_proj), jnp.float32))
+
+
+def make_query_step(mesh, cell: GusCellConfig):
+    ax = _flat_axes(mesh)
+    n_shards = 1
+    for n in mesh.devices.shape:
+        n_shards *= n
+    ispec = index_specs(cell, mesh)
+
+    def local_query(q_idx, q_val, q_sketch, centroids, books,
+                    m_idx, m_val, codes, valid, counts):
+        # shapes here are per-shard: centroids [C/shards, d] etc.
+        b = q_idx.shape[0]
+        s = m_idx.shape[1]
+        m = books.shape[0]
+        # 1) local partition selection
+        pscores = q_sketch @ centroids.T                       # [B, C_loc]
+        top_ps, top_parts = jax.lax.top_k(pscores, cell.nprobe_local)
+        # 2) LUT scores over probed slabs
+        q_sub = q_sketch.reshape(b, m, -1)
+        lut = jnp.einsum("bmd,mcd->bmc", q_sub, books)         # [B, M, 256]
+        cand_codes = codes[top_parts]                          # [B, np, S, M]
+        cand_valid = valid[top_parts]
+
+        def score_one(lut_b, codes_b):
+            flat = codes_b.reshape(-1, m).astype(jnp.int32)
+            return jnp.sum(lut_b[jnp.arange(m)[None, :], flat], axis=-1)
+
+        approx = jax.vmap(score_one)(lut, cand_codes)          # [B, np*S]
+        approx = approx + jnp.repeat(top_ps, s, axis=-1)
+        approx = jnp.where(cand_valid.reshape(b, -1), approx, -jnp.inf)
+        # 3) local shortlist + exact sparse rescore
+        r = min(cell.top_k * 2, approx.shape[-1])
+        _, short = jax.lax.top_k(approx, r)                    # [B, r]
+        np_s = cell.nprobe_local
+        part_of = jnp.take_along_axis(
+            jnp.repeat(top_parts, s, axis=-1), short, axis=-1)
+        pos_of = jnp.take_along_axis(
+            jnp.tile(jnp.arange(s), (b, np_s)), short, axis=-1)
+        rows_idx = m_idx[part_of, pos_of]                      # [B, r, K]
+        rows_val = m_val[part_of, pos_of]
+        eq = (q_idx[:, None, :, None] == rows_idx[:, :, None, :]) \
+            & (q_idx[:, None, :, None] != PAD_INDEX)
+        prod = q_val[:, None, :, None] * rows_val[:, :, None, :]
+        exact = jnp.sum(jnp.where(eq, prod, 0.0), axis=(2, 3))  # [B, r]
+        valid_short = jnp.take_along_axis(
+            cand_valid.reshape(b, -1), short, axis=-1)
+        exact = jnp.where(valid_short, exact, -jnp.inf)
+        k = min(cell.top_k, r)
+        loc_scores, loc_pos = jax.lax.top_k(exact, k)
+        # globalize candidate ids: (shard, partition, pos) -> flat row id
+        shard_id = jnp.int32(0)
+        for name in ax:
+            shard_id = shard_id * mesh.devices.shape[
+                list(mesh.axis_names).index(name)] + jax.lax.axis_index(name)
+        loc_part = jnp.take_along_axis(part_of, loc_pos, axis=-1)
+        loc_slot = jnp.take_along_axis(pos_of, loc_pos, axis=-1)
+        c_loc = centroids.shape[0]
+        global_row = ((shard_id * c_loc + loc_part) * s + loc_slot)
+        # 4) merge each shard's local top-k into the global top-k
+        if cell.merge == "hier" and len(ax) > 1:
+            # stage 1: within the "model" row (16 shards) — gathers are
+            # 16x smaller than the flat 256-shard gather, and the top-k
+            # after stage 1 shrinks stage 2's operands by another 16x.
+            s1 = jax.lax.all_gather(loc_scores, "model", axis=1, tiled=True)
+            r1 = jax.lax.all_gather(global_row, "model", axis=1, tiled=True)
+            v1, p1 = jax.lax.top_k(s1, cell.top_k)
+            rows1 = jnp.take_along_axis(r1, p1, axis=-1)
+            rest = tuple(a for a in ax if a != "model")
+            s2 = jax.lax.all_gather(v1, rest, axis=1, tiled=True)
+            r2 = jax.lax.all_gather(rows1, rest, axis=1, tiled=True)
+            fin_scores, fin_pos = jax.lax.top_k(s2, cell.top_k)
+            fin_rows = jnp.take_along_axis(r2, fin_pos, axis=-1)
+        else:
+            all_scores = jax.lax.all_gather(loc_scores, ax, axis=1,
+                                            tiled=True)
+            all_rows = jax.lax.all_gather(global_row, ax, axis=1, tiled=True)
+            fin_scores, fin_pos = jax.lax.top_k(all_scores, cell.top_k)
+            fin_rows = jnp.take_along_axis(all_rows, fin_pos, axis=-1)
+        return fin_rows, -fin_scores                          # ids, distances
+
+    fn = shard_map(
+        local_query, mesh=mesh,
+        in_specs=(P(), P(), P(),
+                  ispec["centroids"], ispec["books"], ispec["members_idx"],
+                  ispec["members_val"], ispec["codes"], ispec["valid"],
+                  ispec["counts"]),
+        out_specs=(P(), P()),
+        check_rep=False)
+
+    def step(q_idx, q_val, q_sketch, state):
+        return fn(q_idx, q_val, q_sketch, state["centroids"], state["books"],
+                  state["members_idx"], state["members_val"], state["codes"],
+                  state["valid"], state["counts"])
+
+    return step
+
+
+def make_mutate_step(mesh, cell: GusCellConfig):
+    """Batched upsert: rows hash-route to one shard; each shard appends its
+    rows into the nearest local partition's slab (ring-buffer cursor)."""
+    ax = _flat_axes(mesh)
+    n_shards = 1
+    for n in mesh.devices.shape:
+        n_shards *= n
+    ispec = index_specs(cell, mesh)
+
+    def local_mutate(ids, new_idx, new_val, new_sketch, new_codes,
+                     centroids, m_idx, m_val, codes, valid, counts):
+        shard_id = jnp.int32(0)
+        for name in ax:
+            shard_id = shard_id * mesh.devices.shape[
+                list(mesh.axis_names).index(name)] + jax.lax.axis_index(name)
+        owner = (hashing.uhash(3, ids) % jnp.uint32(n_shards)).astype(jnp.int32)
+        mine = owner == shard_id
+        # nearest local partition for every row (masked rows write nowhere)
+        d2 = (jnp.sum(new_sketch ** 2, -1)[:, None]
+              - 2.0 * new_sketch @ centroids.T
+              + jnp.sum(centroids ** 2, -1)[None, :])
+        part = jnp.argmin(d2, axis=-1)                        # [Bm]
+        # ring-buffer position: cursor[part] + my running count within part
+        onehot = jax.nn.one_hot(part, centroids.shape[0],
+                                dtype=jnp.int32) * mine[:, None]
+        within = jnp.cumsum(onehot, axis=0) - onehot          # prior count
+        pos = (counts[part] + jnp.sum(within * onehot, axis=-1)) \
+            % m_idx.shape[1]
+        row = jnp.where(mine, part, centroids.shape[0])       # OOB drops
+        m_idx = m_idx.at[row, pos].set(new_idx, mode="drop")
+        m_val = m_val.at[row, pos].set(new_val, mode="drop")
+        codes = codes.at[row, pos].set(new_codes, mode="drop")
+        valid = valid.at[row, pos].set(True, mode="drop")
+        counts = counts + jnp.sum(onehot, axis=0)
+        return m_idx, m_val, codes, valid, counts
+
+    fn = shard_map(
+        local_mutate, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(),
+                  ispec["centroids"], ispec["members_idx"],
+                  ispec["members_val"], ispec["codes"], ispec["valid"],
+                  ispec["counts"]),
+        out_specs=(ispec["members_idx"], ispec["members_val"], ispec["codes"],
+                   ispec["valid"], ispec["counts"]),
+        check_rep=False)
+
+    def step(ids, new_idx, new_val, new_sketch, new_codes, state):
+        m_idx, m_val, codes, valid, counts = fn(
+            ids, new_idx, new_val, new_sketch, new_codes,
+            state["centroids"], state["members_idx"], state["members_val"],
+            state["codes"], state["valid"], state["counts"])
+        return {**state, "members_idx": m_idx, "members_val": m_val,
+                "codes": codes, "valid": valid, "counts": counts}
+
+    return step
+
+
+def mutate_shapes(cell: GusCellConfig):
+    b = cell.mutate_batch
+    return (jax.ShapeDtypeStruct((b,), jnp.uint32),
+            jax.ShapeDtypeStruct((b, cell.k_dims), jnp.uint32),
+            jax.ShapeDtypeStruct((b, cell.k_dims), jnp.float32),
+            jax.ShapeDtypeStruct((b, cell.d_proj), jnp.float32),
+            jax.ShapeDtypeStruct((b, cell.pq_m), jnp.uint8))

@@ -1,0 +1,2 @@
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+from repro.configs.registry import ARCHS, get_config, reduced_config

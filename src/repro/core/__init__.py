@@ -1,0 +1,25 @@
+"""The paper's primary contribution: Dynamic Grale Using ScaNN (Dynamic GUS).
+
+Light submodules re-export eagerly; DynamicGUS/grale load lazily to avoid
+the core -> ann -> core import cycle (ann.sparse uses core.hashing).
+"""
+from repro.core.types import (FeatureSpec, SparseBatch, NeighborResult,
+                              MutationBatch, PAD_INDEX, PAD_ITEM,
+                              MUTATION_INSERT, MUTATION_UPDATE, MUTATION_DELETE)
+from repro.core.buckets import BucketConfig
+from repro.core.embedding import EmbeddingGenerator
+
+_LAZY = {
+    "DynamicGUS": ("repro.core.gus", "DynamicGUS"),
+    "GusConfig": ("repro.core.gus", "GusConfig"),
+    "GraleConfig": ("repro.core.grale", "GraleConfig"),
+    "grale_graph": ("repro.core.grale", "grale_graph"),
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        module, attr = _LAZY[name]
+        return getattr(importlib.import_module(module), attr)
+    raise AttributeError(name)

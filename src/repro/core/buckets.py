@@ -1,0 +1,113 @@
+"""LSH bucket-ID generation — Grale's hashing layer, vectorized for TPU.
+
+Each point gets a fixed number of bucket IDs:
+
+* dense modes  -> SimHash (random hyperplanes; the sign computation is a
+  plain matmul, i.e. MXU work on TPU), ``tables`` IDs per mode;
+* set modes    -> MinHash over the item IDs, ``tables`` IDs per mode;
+* scalar modes -> quantization buckets (one ID per width), so numerically
+  close scalars (e.g. publication year) share buckets.
+
+Bucket IDs are raw 32-bit hashes; they double as the sparse-embedding
+dimension indices (paper §4.1). Points sharing any bucket ID have negative
+ScaNN distance — the Lemma 4.1 invariant the tests pin down.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.types import FeatureSpec, PAD_ITEM
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketConfig:
+    """LSH shape of the bucket generator (per-mode table counts)."""
+    dense_tables: int = 8          # SimHash tables per dense mode
+    dense_bits: int = 12           # hyperplanes (bits) per table
+    set_tables: int = 8            # MinHash tables per set mode
+    scalar_widths: tuple = (1.0,)  # one quantization bucket per width
+    seed: int = 0
+
+    def k_max(self, spec: FeatureSpec) -> int:
+        return (len(spec.dense) * self.dense_tables
+                + len(spec.sets) * self.set_tables
+                + len(spec.scalars) * len(self.scalar_widths))
+
+
+def _mode_tag(kind: str, name: str) -> jnp.ndarray:
+    return jnp.uint32(zlib.crc32(f"{kind}:{name}".encode()))
+
+
+def make_bucket_params(spec: FeatureSpec, cfg: BucketConfig) -> dict:
+    """Random LSH parameters (hyperplanes per dense mode). A pytree."""
+    params = {}
+    key = jax.random.PRNGKey(cfg.seed)
+    for name in sorted(spec.dense):
+        key, sub = jax.random.split(key)
+        dim = spec.dense[name]
+        params[f"hyperplanes:{name}"] = jax.random.normal(
+            sub, (cfg.dense_tables, dim, cfg.dense_bits), jnp.float32)
+    return params
+
+
+def generate_buckets(
+    features: Mapping[str, jax.Array],
+    spec: FeatureSpec,
+    cfg: BucketConfig,
+    params: dict,
+) -> tuple[jax.Array, jax.Array]:
+    """Compute bucket IDs for a batch of points.
+
+    Returns (bucket_ids uint32 [B, k_max], valid bool [B, k_max]).
+    Invalid slots (e.g. MinHash of an empty set) carry arbitrary IDs and
+    must be masked by the caller.
+    """
+    ids, valid = [], []
+    batch = None
+
+    for name in sorted(spec.dense):
+        x = features[f"dense:{name}"]
+        batch = x.shape[0]
+        planes = params[f"hyperplanes:{name}"]          # [T, D, Bits]
+        # [T, B, Bits] sign bits, packed into one uint32 code per table
+        proj = jnp.einsum("bd,tdk->tbk", x, planes)
+        bits = (proj > 0).astype(jnp.uint32)
+        weights = (jnp.uint32(1) << jnp.arange(cfg.dense_bits, dtype=jnp.uint32))
+        codes = jnp.sum(bits * weights[None, None, :], axis=-1)  # [T, B]
+        tag = _mode_tag("dense", name)
+        for t in range(cfg.dense_tables):
+            ids.append(hashing.hash_fields(tag, jnp.uint32(t), codes[t]))
+            valid.append(jnp.ones((batch,), bool))
+
+    for name in sorted(spec.sets):
+        items = features[f"set:{name}"]                  # int32 [B, cap]
+        batch = items.shape[0]
+        present = items != PAD_ITEM
+        any_item = jnp.any(present, axis=-1)
+        tag = _mode_tag("set", name)
+        for t in range(cfg.set_tables):
+            hashed = hashing.uhash(cfg.seed * 131 + t, items)
+            hashed = jnp.where(present, hashed, jnp.uint32(0xFFFFFFFF))
+            minh = jnp.min(hashed, axis=-1)              # [B]
+            ids.append(hashing.hash_fields(tag, jnp.uint32(t), minh))
+            valid.append(any_item)
+
+    for name in sorted(spec.scalars):
+        x = features[f"scalar:{name}"]                   # f32 [B]
+        batch = x.shape[0]
+        tag = _mode_tag("scalar", name)
+        for wi, width in enumerate(cfg.scalar_widths):
+            bin_id = jnp.floor(x / width).astype(jnp.int32).astype(jnp.uint32)
+            ids.append(hashing.hash_fields(tag, jnp.uint32(wi), bin_id))
+            valid.append(jnp.ones((batch,), bool))
+
+    bucket_ids = jnp.stack(ids, axis=-1)                 # [B, k_max]
+    valid_mask = jnp.stack(valid, axis=-1)
+    assert bucket_ids.shape[-1] == cfg.k_max(spec)
+    return bucket_ids, valid_mask

@@ -1,0 +1,75 @@
+"""The Embedding Generator (paper §3.2, §4.1).
+
+features --LSH--> bucket IDs --(filter, IDF)--> sparse embedding.
+
+The generator is a pure function of the point's own features plus two small
+precomputed tables — exactly the paper's latency-critical-path constraint
+("it needs to operate with local information"). It is jit-compiled once and
+reused by both mutation and query paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.buckets import BucketConfig, generate_buckets, make_bucket_params
+from repro.core.idf import FilterTable, IdfTable
+from repro.core.types import FeatureSpec, SparseBatch, sort_sparse
+
+
+@dataclasses.dataclass
+class EmbeddingGenerator:
+    spec: FeatureSpec
+    cfg: BucketConfig
+    params: dict
+    idf: IdfTable
+    filter: FilterTable
+
+    @staticmethod
+    def create(spec: FeatureSpec, cfg: BucketConfig,
+               idf: IdfTable | None = None,
+               filter_table: FilterTable | None = None) -> "EmbeddingGenerator":
+        return EmbeddingGenerator(
+            spec=spec, cfg=cfg, params=make_bucket_params(spec, cfg),
+            idf=idf or IdfTable.disabled(),
+            filter=filter_table or FilterTable.disabled())
+
+    def reload(self, idf: IdfTable | None = None,
+               filter_table: FilterTable | None = None) -> "EmbeddingGenerator":
+        """Hot-swap the precomputed tables (paper §4.3 periodic reload)."""
+        return dataclasses.replace(
+            self, idf=idf if idf is not None else self.idf,
+            filter=filter_table if filter_table is not None else self.filter)
+
+    @property
+    def k_max(self) -> int:
+        return self.cfg.k_max(self.spec)
+
+    def buckets(self, features: Mapping[str, jax.Array]):
+        return generate_buckets(features, self.spec, self.cfg, self.params)
+
+    def __call__(self, features: Mapping[str, jax.Array]) -> SparseBatch:
+        return embed_batch(features, self.spec, self.cfg, self.params,
+                           self.idf, self.filter)
+
+
+@partial(jax.jit, static_argnames=("spec", "cfg"))
+def embed_batch(features, spec: FeatureSpec, cfg: BucketConfig, params,
+                idf: IdfTable, filter_table: FilterTable) -> SparseBatch:
+    bucket_ids, valid = generate_buckets(features, spec, cfg, params)
+    weights = idf.lookup(bucket_ids)
+    keep = filter_table.keep_mask(bucket_ids) & valid
+    values = jnp.where(keep, weights, 0.0).astype(jnp.float32)
+
+    # Dedup within a row (a bucket ID is a *set* member in Grale): sort by
+    # index, zero out repeats, then re-canonicalize so padding sorts last.
+    first = sort_sparse(bucket_ids, values)
+    dup = jnp.concatenate(
+        [jnp.zeros((first.indices.shape[0], 1), bool),
+         first.indices[:, 1:] == first.indices[:, :-1]], axis=-1)
+    values = jnp.where(dup, 0.0, first.values)
+    return sort_sparse(first.indices, values)

@@ -1,0 +1,78 @@
+"""Graph assembly + the edge-weight-distribution metric of paper §5.
+
+The paper's quality plots report "edge weight at each percentile of edges
+ordered by weight" (Figs. 3-8) and compare algorithms at matched total edge
+counts. ``edge_weight_percentiles`` reproduces that statistic;
+``GraphAccumulator`` turns per-query NeighborResults into a deduped
+undirected edge list (the "graph" of graph building).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class GraphAccumulator:
+    """Collects (src, dst, weight) edges; canonicalizes to undirected."""
+
+    def __init__(self):
+        self._edges: dict[tuple, float] = {}
+
+    def add_result(self, src_ids: np.ndarray, result) -> None:
+        ids, weights = result.ids, result.weights
+        for r, src in enumerate(np.asarray(src_ids).tolist()):
+            for dst, w in zip(ids[r].tolist(), weights[r].tolist()):
+                if dst < 0 or dst == src or not np.isfinite(w):
+                    continue
+                key = (src, dst) if src < dst else (dst, src)
+                prev = self._edges.get(key)
+                if prev is None or w > prev:
+                    self._edges[key] = w
+
+    def add_pairs(self, pairs: np.ndarray, weights: np.ndarray) -> None:
+        for (a, b), w in zip(np.asarray(pairs).tolist(),
+                             np.asarray(weights).tolist()):
+            if a == b:
+                continue
+            key = (a, b) if a < b else (b, a)
+            prev = self._edges.get(key)
+            if prev is None or w > prev:
+                self._edges[key] = w
+
+    def edges(self) -> tuple:
+        if not self._edges:
+            return np.zeros((0, 2), np.int64), np.zeros((0,), np.float32)
+        pairs = np.asarray(sorted(self._edges), np.int64)
+        weights = np.asarray([self._edges[tuple(p)] for p in pairs], np.float32)
+        return pairs, weights
+
+    def __len__(self):
+        return len(self._edges)
+
+
+def edge_weight_percentiles(weights: np.ndarray,
+                            qs=(1, 5, 10, 20, 30, 40, 50, 60, 70, 80, 90, 99)
+                            ) -> dict:
+    """Paper Figs. 3-8 statistic: weight at each percentile of the edge set
+    ordered by weight (ascending), plus the total edge count."""
+    weights = np.asarray(weights)
+    if weights.size == 0:
+        return {"total_edges": 0}
+    out = {"total_edges": int(weights.size)}
+    for q in qs:
+        out[f"p{q}"] = float(np.percentile(weights, q))
+    return out
+
+
+def frac_above(weights: np.ndarray, threshold: float) -> float:
+    """E.g. "more than 97% of the edges ... have weight above 0.25"."""
+    weights = np.asarray(weights)
+    if weights.size == 0:
+        return 0.0
+    return float(np.mean(weights > threshold))
+
+
+def edge_sets_equal(pairs_a: np.ndarray, pairs_b: np.ndarray) -> bool:
+    """Exact edge-set equality (Lemma 4.1 check: Grale == GUS)."""
+    a = {tuple(sorted(p)) for p in np.asarray(pairs_a).tolist()}
+    b = {tuple(sorted(p)) for p in np.asarray(pairs_b).tolist()}
+    return a == b

@@ -1,0 +1,195 @@
+"""Dynamic GUS — the system of paper §3: Embedding Generator + ScaNN +
+Similarity Scorer behind two RPC surfaces (mutations, neighborhoods).
+
+``DynamicGUS`` is the single-replica engine: it owns the embedding
+generator (with its hot-reloadable IDF/filter tables), an ANN backend
+(exact ``BruteIndex`` or quantized ``ScannIndex``), a feature store (the
+scorer needs candidate features, paper §3.3.3 step "requests the closest
+points ... and their features"), and the scorer parameters. The
+multi-shard / multi-pod version wraps this engine via ``serve.engine`` and
+``ann.sharded``.
+
+Latency accounting mirrors the paper's Fig. 9/10: per-RPC wall-clock
+timers for mutation and neighborhood paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import numpy as np
+
+from repro.ann.brute import BruteIndex
+from repro.ann.scann import ScannConfig, ScannIndex
+from repro.core import idf as idf_mod
+from repro.core.buckets import BucketConfig
+from repro.core.embedding import EmbeddingGenerator
+from repro.core.scorer import pair_features, scorer_apply
+from repro.core.types import (FeatureSpec, MutationBatch, NeighborResult,
+                              MUTATION_DELETE)
+from repro.utils.timing import Timer
+
+
+@dataclasses.dataclass(frozen=True)
+class GusConfig:
+    scann_nn: int = 10          # ScaNN-NN: neighbors retrieved from the index
+    idf_size: int = 0           # IDF-S   : IDF table size (0 = unit weights)
+    filter_percent: float = 0.0  # Filter-P: % of most popular buckets dropped
+    backend: str = "scann"      # "scann" | "brute"
+    scann: ScannConfig = ScannConfig()
+
+
+class FeatureStore:
+    """Host-side feature store keyed by point id (numpy columns)."""
+
+    def __init__(self, spec: FeatureSpec):
+        self.spec = spec
+        self._rows: dict[int, dict] = {}
+
+    def put(self, ids: np.ndarray, features: Mapping[str, np.ndarray]) -> None:
+        for i, pid in enumerate(np.asarray(ids).tolist()):
+            self._rows[pid] = {k: np.asarray(v[i]) for k, v in features.items()}
+
+    def drop(self, ids) -> None:
+        for pid in np.asarray(ids).tolist():
+            self._rows.pop(pid, None)
+
+    def gather(self, ids: np.ndarray) -> dict:
+        """Batch features for ids (missing ids get zeros)."""
+        ids = np.asarray(ids)
+        proto = self.spec.feature_shapes(1)
+        out = {k: np.zeros((ids.size,) + tuple(s.shape[1:]),
+                           np.dtype(s.dtype.name)) for k, s in proto.items()}
+        for j, pid in enumerate(ids.reshape(-1).tolist()):
+            row = self._rows.get(pid)
+            if row is not None:
+                for k, v in row.items():
+                    out[k][j] = v
+        return {k: v.reshape(ids.shape + v.shape[1:]) for k, v in out.items()}
+
+    def __len__(self):
+        return len(self._rows)
+
+
+class DynamicGUS:
+    """The Dynamic Grale Using ScaNN engine."""
+
+    def __init__(self, spec: FeatureSpec, bucket_cfg: BucketConfig,
+                 scorer_params: dict, cfg: GusConfig = GusConfig()):
+        self.spec = spec
+        self.cfg = cfg
+        self.embedder = EmbeddingGenerator.create(spec, bucket_cfg)
+        self.scorer_params = scorer_params
+        self.store = FeatureStore(spec)
+        k_dims = self.embedder.k_max
+        if cfg.backend == "brute":
+            self.index = BruteIndex(k_dims)
+        else:
+            self.index = ScannIndex(k_dims, cfg.scann)
+        self.mutation_timer = Timer("mutation")
+        self.query_timer = Timer("neighbors")
+
+    # ----------------------------------------------------- offline (§4.3)
+
+    def bootstrap(self, ids: np.ndarray, features: Mapping[str, np.ndarray],
+                  ) -> None:
+        """Offline preprocessing: compute IDF/filter tables from the initial
+        corpus, (re)build the index, and load all points."""
+        bucket_ids, valid = self.embedder.buckets(features)
+        bucket_ids, valid = np.asarray(bucket_ids), np.asarray(valid)
+        n = len(ids)
+        self.embedder = self.embedder.reload(
+            idf=idf_mod.build_idf_table(bucket_ids, valid, n, self.cfg.idf_size),
+            filter_table=idf_mod.build_filter_table(
+                bucket_ids, valid, self.cfg.filter_percent))
+        emb = self.embedder(features)
+        if isinstance(self.index, ScannIndex):
+            self.index.build(ids, emb)
+        else:
+            self.index.upsert(ids, emb)
+        self.store.put(ids, features)
+
+    def periodic_reload(self) -> None:
+        """Recompute IDF/filter from the live corpus and retrain the index
+        (the paper's periodic consistency refresh)."""
+        ids = np.asarray(sorted(self.store._rows), np.int64)
+        if ids.size == 0:
+            return
+        feats = self.store.gather(ids)
+        bucket_ids, valid = self.embedder.buckets(feats)
+        bucket_ids, valid = np.asarray(bucket_ids), np.asarray(valid)
+        self.embedder = self.embedder.reload(
+            idf=idf_mod.build_idf_table(bucket_ids, valid, ids.size,
+                                        self.cfg.idf_size),
+            filter_table=idf_mod.build_filter_table(
+                bucket_ids, valid, self.cfg.filter_percent))
+        if isinstance(self.index, ScannIndex):
+            emb = self.embedder(feats)
+            self.index.slot_of.clear()
+            self.index.build(ids, emb)
+
+    # ------------------------------------------------------ mutation RPCs
+
+    def mutate(self, batch: MutationBatch) -> int:
+        """Insert / update / delete a batch of points (paper §3.3.1-.2).
+        Returns the number of points acknowledged."""
+        with self.mutation_timer:
+            kinds = np.asarray(batch.kinds)
+            ids = np.asarray(batch.ids)
+            del_mask = kinds == MUTATION_DELETE
+            if del_mask.any():
+                dels = ids[del_mask]
+                self.index.delete(dels)
+                self.store.drop(dels)
+            up_mask = ~del_mask
+            if up_mask.any():
+                up_ids = ids[up_mask]
+                feats = {k: np.asarray(v)[up_mask]
+                         for k, v in batch.features.items()}
+                emb = self.embedder(feats)
+                self.index.upsert(up_ids, emb)
+                self.store.put(up_ids, feats)
+        return int(ids.size)
+
+    # --------------------------------------------------- neighborhood RPC
+
+    def neighbors(self, features: Mapping[str, np.ndarray],
+                  k: int | None = None,
+                  exclude_ids: np.ndarray | None = None) -> NeighborResult:
+        """Neighborhood of (possibly new) points given their features
+        (paper §3.3.3): embed -> ANN search -> score -> respond."""
+        k = k or self.cfg.scann_nn
+        with self.query_timer:
+            emb = self.embedder(features)
+            ids, dists = self.index.search(emb, k + (exclude_ids is not None))
+            if exclude_ids is not None:
+                ids, dists = _drop_self(ids, dists, np.asarray(exclude_ids), k)
+            cand_feats = self.store.gather(ids)
+            flat_q = {kk: np.repeat(np.asarray(v), ids.shape[1], axis=0)
+                      for kk, v in features.items()}
+            flat_c = {kk: v.reshape((-1,) + v.shape[2:])
+                      for kk, v in cand_feats.items()}
+            weights = np.asarray(scorer_apply(
+                self.scorer_params, pair_features(flat_q, flat_c, self.spec)))
+            weights = weights.reshape(ids.shape)
+            weights = np.where(ids >= 0, weights, -np.inf)
+        return NeighborResult(ids=ids, weights=weights.astype(np.float32),
+                              distances=dists)
+
+    def neighbors_of_ids(self, ids: np.ndarray, k: int | None = None
+                         ) -> NeighborResult:
+        """Neighborhood of existing points (self-match excluded)."""
+        feats = self.store.gather(np.asarray(ids))
+        return self.neighbors(feats, k, exclude_ids=np.asarray(ids))
+
+
+def _drop_self(ids, dists, self_ids, k):
+    """Remove each query's own id from its result row, then trim to k."""
+    out_ids = np.full((ids.shape[0], k), -1, ids.dtype)
+    out_d = np.full((ids.shape[0], k), np.inf, dists.dtype)
+    for r in range(ids.shape[0]):
+        keep = ids[r] != self_ids[r]
+        sel_ids, sel_d = ids[r][keep][:k], dists[r][keep][:k]
+        out_ids[r, :sel_ids.size] = sel_ids
+        out_d[r, :sel_d.size] = sel_d
+    return out_ids, out_d

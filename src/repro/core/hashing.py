@@ -1,0 +1,43 @@
+"""Vectorized integer hashing used by the LSH bucket generator.
+
+All hashing is 32-bit murmur-style mixing on ``uint32`` lanes — TPU-friendly
+(no 64-bit ints needed) and deterministic across hosts, which matters because
+every replica of the serving fleet must map the same features to the same
+bucket IDs (paper §4.1: the embedding depends only on the point's features).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_GOLDEN = jnp.uint32(0x9E3779B9)
+
+
+def fmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 finalizer: a full-avalanche 32-bit mix."""
+    x = jnp.asarray(x, jnp.uint32)
+    x ^= x >> 16
+    x *= jnp.uint32(0x85EBCA6B)
+    x ^= x >> 13
+    x *= jnp.uint32(0xC2B2AE35)
+    x ^= x >> 16
+    return x
+
+
+def combine(h: jnp.ndarray, v) -> jnp.ndarray:
+    """Order-sensitive hash combine (boost-style, then re-mixed)."""
+    h = jnp.asarray(h, jnp.uint32)
+    v = jnp.asarray(v, jnp.uint32)
+    return fmix32(h ^ (v + _GOLDEN + (h << 6) + (h >> 2)))
+
+
+def hash_fields(*fields) -> jnp.ndarray:
+    """Hash a sequence of uint32-castable fields into one bucket ID."""
+    h = jnp.uint32(0x811C9DC5)
+    for f in fields:
+        h = combine(h, f)
+    return h
+
+
+def uhash(seed: int, x: jnp.ndarray) -> jnp.ndarray:
+    """Seeded universal-style hash of int arrays -> uint32."""
+    return fmix32(jnp.asarray(x, jnp.uint32) * _GOLDEN ^ fmix32(jnp.uint32(seed)))

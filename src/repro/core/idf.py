@@ -1,0 +1,98 @@
+"""IDF weighting and popular-bucket filtering (paper §4.2, §4.3).
+
+Both structures are computed *offline* over a snapshot of the corpus (the
+"offline preprocessing" of §4.3), kept in device memory as sorted arrays,
+and consulted with O(log S) ``searchsorted`` lookups when embeddings are
+generated. They are periodically recomputed and hot-swapped (``reload``),
+matching the paper's periodic-reload design.
+
+* ``IdfTable``    — the IDF-S mechanism: the top-``size`` bucket IDs by
+  inverse document frequency get their exact ``log(|P|/N(b))`` weight; every
+  other bucket gets the ``size``-th highest weight (the table's minimum).
+* ``FilterTable`` — the Filter-P mechanism: the top-``percent``% bucket IDs
+  by popularity are dropped from embeddings entirely (weight 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class IdfTable:
+    sorted_ids: jax.Array      # uint32 [S], ascending
+    weights: jax.Array         # float32 [S]
+    default_weight: jax.Array  # float32 []
+
+    @staticmethod
+    def disabled() -> "IdfTable":
+        """IDF-S = 0: unit weights everywhere (the paper's base embedding)."""
+        return IdfTable(jnp.zeros((0,), jnp.uint32), jnp.zeros((0,), jnp.float32),
+                        jnp.float32(1.0))
+
+    def lookup(self, bucket_ids: jax.Array) -> jax.Array:
+        if self.sorted_ids.shape[0] == 0:
+            return jnp.full(bucket_ids.shape, self.default_weight)
+        pos = jnp.searchsorted(self.sorted_ids, bucket_ids)
+        pos = jnp.minimum(pos, self.sorted_ids.shape[0] - 1)
+        hit = self.sorted_ids[pos] == bucket_ids
+        return jnp.where(hit, self.weights[pos], self.default_weight)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FilterTable:
+    sorted_ids: jax.Array      # uint32 [F], ascending
+
+    @staticmethod
+    def disabled() -> "FilterTable":
+        return FilterTable(jnp.zeros((0,), jnp.uint32))
+
+    def keep_mask(self, bucket_ids: jax.Array) -> jax.Array:
+        if self.sorted_ids.shape[0] == 0:
+            return jnp.ones(bucket_ids.shape, bool)
+        pos = jnp.searchsorted(self.sorted_ids, bucket_ids)
+        pos = jnp.minimum(pos, self.sorted_ids.shape[0] - 1)
+        return self.sorted_ids[pos] != bucket_ids
+
+
+def bucket_counts(bucket_ids: np.ndarray, valid: np.ndarray) -> tuple:
+    """Corpus statistics: unique bucket IDs and their document counts."""
+    flat = np.asarray(bucket_ids)[np.asarray(valid)]
+    return np.unique(flat, return_counts=True)
+
+
+def build_idf_table(bucket_ids: np.ndarray, valid: np.ndarray,
+                    n_points: int, size: int) -> IdfTable:
+    """IDF-S = ``size`` table from a corpus snapshot (size=0 disables)."""
+    if size <= 0:
+        return IdfTable.disabled()
+    uniq, counts = bucket_counts(bucket_ids, valid)
+    idf = np.log(np.maximum(n_points, 1) / counts.astype(np.float64))
+    if uniq.size > size:
+        top = np.argpartition(-idf, size - 1)[:size]
+        uniq, idf = uniq[top], idf[top]
+    default = float(idf.min()) if idf.size else 0.0
+    order = np.argsort(uniq)
+    return IdfTable(
+        jnp.asarray(uniq[order], jnp.uint32),
+        jnp.asarray(idf[order], jnp.float32),
+        jnp.float32(default),
+    )
+
+
+def build_filter_table(bucket_ids: np.ndarray, valid: np.ndarray,
+                       percent: float) -> FilterTable:
+    """Filter-P = ``percent`` table: drop the most popular percent% of IDs."""
+    if percent <= 0:
+        return FilterTable.disabled()
+    uniq, counts = bucket_counts(bucket_ids, valid)
+    n_drop = int(np.ceil(uniq.size * percent / 100.0))
+    if n_drop == 0:
+        return FilterTable.disabled()
+    top = np.argpartition(-counts, min(n_drop, counts.size) - 1)[:n_drop]
+    return FilterTable(jnp.asarray(np.sort(uniq[top]), jnp.uint32))

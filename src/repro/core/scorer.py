@@ -1,0 +1,125 @@
+"""The Similarity Scorer (paper §3.2 "Similarity Computation").
+
+Matches the paper's evaluation setup: a two-layer neural network (10 hidden
+units per layer by default) over *pair features* — per-modality similarity
+signals between the two points (cosine/L2 for dense modes, Jaccard/overlap
+for set modes, |Δ| for scalars). Trained offline with BCE on labeled pairs
+(§4.3), served online over the candidate set returned by ScaNN.
+
+The scorer is pluggable by design ("Any desired model can be used, e.g.,
+Deep Neural Networks, Decision Trees, and Large Language Models") — the
+serving engine only needs ``apply(params, pair_feats) -> scores``; an
+LM-backed scorer lives in ``examples/lm_scorer.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import FeatureSpec, PAD_ITEM
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def pair_feature_dim(spec: FeatureSpec) -> int:
+    return 2 * len(spec.dense) + 2 * len(spec.sets) + len(spec.scalars)
+
+
+def pair_features(fa: Mapping[str, jax.Array], fb: Mapping[str, jax.Array],
+                  spec: FeatureSpec) -> jax.Array:
+    """Per-pair similarity signals, f32 [B, F]. fa/fb are aligned batches."""
+    feats = []
+    for name in sorted(spec.dense):
+        a, b = fa[f"dense:{name}"], fb[f"dense:{name}"]
+        na = jnp.linalg.norm(a, axis=-1) + 1e-9
+        nb = jnp.linalg.norm(b, axis=-1) + 1e-9
+        feats.append(jnp.sum(a * b, axis=-1) / (na * nb))            # cosine
+        feats.append(-jnp.linalg.norm(a - b, axis=-1) / (na + nb))   # scaled L2
+    for name in sorted(spec.sets):
+        a, b = fa[f"set:{name}"], fb[f"set:{name}"]
+        va, vb = a != PAD_ITEM, b != PAD_ITEM
+        inter = jnp.sum(
+            (a[:, :, None] == b[:, None, :]) & va[:, :, None] & vb[:, None, :],
+            axis=(1, 2)).astype(jnp.float32)
+        size_a = jnp.sum(va, -1).astype(jnp.float32)
+        size_b = jnp.sum(vb, -1).astype(jnp.float32)
+        union = jnp.maximum(size_a + size_b - inter, 1.0)
+        feats.append(inter / union)                                   # Jaccard
+        feats.append(jnp.log1p(inter))                                # overlap
+    for name in sorted(spec.scalars):
+        a, b = fa[f"scalar:{name}"], fb[f"scalar:{name}"]
+        feats.append(-jnp.abs(a - b))
+    return jnp.stack(feats, axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScorerConfig:
+    hidden: int = 10     # paper: two layers, 10 hidden units each
+    layers: int = 2
+
+
+def scorer_init(key: jax.Array, spec: FeatureSpec,
+                cfg: ScorerConfig = ScorerConfig()) -> dict:
+    dims = [pair_feature_dim(spec)] + [cfg.hidden] * cfg.layers + [1]
+    params = {}
+    for i, (d_in, d_out) in enumerate(zip(dims[:-1], dims[1:])):
+        key, sub = jax.random.split(key)
+        params[f"w{i}"] = jax.random.normal(sub, (d_in, d_out)) * (2.0 / d_in) ** 0.5
+        params[f"b{i}"] = jnp.zeros((d_out,))
+    return params
+
+
+def scorer_logits(params: dict, feats: jax.Array) -> jax.Array:
+    h = feats
+    n_layers = len(params) // 2
+    for i in range(n_layers):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n_layers - 1:
+            h = jnp.tanh(h)
+    return h[..., 0]
+
+
+@jax.jit
+def scorer_apply(params: dict, feats: jax.Array) -> jax.Array:
+    """Edge weights in [0, 1]."""
+    return jax.nn.sigmoid(scorer_logits(params, feats))
+
+
+def score_pairs(params: dict, fa, fb, spec: FeatureSpec) -> jax.Array:
+    return scorer_apply(params, pair_features(fa, fb, spec))
+
+
+# ---------------------------------------------------------------- training
+
+def bce_loss(params, feats, labels):
+    logits = scorer_logits(params, feats)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+@partial(jax.jit, static_argnames=("opt_cfg",))
+def _scorer_train_step(params, opt_state, feats, labels, opt_cfg: AdamWConfig):
+    loss, grads = jax.value_and_grad(bce_loss)(params, feats, labels)
+    params, opt_state, _ = adamw_update(grads, opt_state, params, opt_cfg)
+    return params, opt_state, loss
+
+
+def train_scorer(key, spec: FeatureSpec, feats, labels, *,
+                 cfg: ScorerConfig = ScorerConfig(), steps: int = 500,
+                 batch: int = 1024, lr: float = 3e-3):
+    """Offline scorer training (paper §4.3). feats: [N,F]; labels: [N]."""
+    params = scorer_init(key, spec, cfg)
+    opt_cfg = AdamWConfig(lr=lr, clip_norm=1.0)
+    opt_state = adamw_init(params, opt_cfg)
+    n = feats.shape[0]
+    losses = []
+    for step in range(steps):
+        lo = (step * batch) % max(n - batch, 1)
+        fb, lb = feats[lo:lo + batch], labels[lo:lo + batch]
+        params, opt_state, loss = _scorer_train_step(
+            params, opt_state, fb, lb, opt_cfg)
+        losses.append(float(loss))
+    return params, losses

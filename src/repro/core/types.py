@@ -1,0 +1,124 @@
+"""Core data types for Dynamic GUS.
+
+Everything is batch-first and fixed-shape so it runs on TPU: points carry a
+dict of feature arrays, sparse embeddings use a fixed-nnz padded layout
+(see DESIGN.md §2 — this is the TPU adaptation of the paper's variable-length
+sparse vectors).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Padding sentinel for sparse dims: max uint32, sorts to the end, value 0.
+PAD_INDEX = np.uint32(0xFFFFFFFF)
+# Padding sentinel for set-feature items (absent item).
+PAD_ITEM = np.int32(-1)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class FeatureSpec:
+    """Schema of the multimodal features attached to every point.
+
+    dense:   mode name -> embedding dimension (float vectors)
+    sets:    mode name -> max item count (padded int32 id lists, PAD_ITEM pad)
+    scalars: tuple of scalar mode names (float)
+
+    Hashable (canonicalized) so it can ride through jit as a static arg.
+    """
+    dense: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    sets: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    scalars: tuple = ()
+
+    def _key(self):
+        return (tuple(sorted(self.dense.items())),
+                tuple(sorted(self.sets.items())), tuple(self.scalars))
+
+    def __hash__(self):
+        return hash(self._key())
+
+    def __eq__(self, other):
+        return isinstance(other, FeatureSpec) and self._key() == other._key()
+
+    def feature_shapes(self, batch: int) -> dict:
+        shapes = {}
+        for name, dim in self.dense.items():
+            shapes[f"dense:{name}"] = jax.ShapeDtypeStruct((batch, dim), jnp.float32)
+        for name, cap in self.sets.items():
+            shapes[f"set:{name}"] = jax.ShapeDtypeStruct((batch, cap), jnp.int32)
+        for name in self.scalars:
+            shapes[f"scalar:{name}"] = jax.ShapeDtypeStruct((batch,), jnp.float32)
+        return shapes
+
+    def validate(self, features: Mapping[str, jax.Array]) -> None:
+        want = set(self.feature_shapes(1))
+        have = set(features)
+        if want != have:
+            raise ValueError(f"feature keys mismatch: want {sorted(want)}, "
+                             f"have {sorted(have)}")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SparseBatch:
+    """Fixed-nnz padded sparse embeddings: one row per point.
+
+    indices: uint32 [B, K], sorted ascending per row, PAD_INDEX padding
+    values:  float32 [B, K], 0.0 at padding (and at filtered dims)
+    """
+    indices: jax.Array
+    values: jax.Array
+
+    @property
+    def batch(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.indices.shape[1]
+
+    def nnz(self) -> jax.Array:
+        return jnp.sum((self.indices != PAD_INDEX) & (self.values != 0.0), axis=-1)
+
+    def __getitem__(self, sl) -> "SparseBatch":
+        return SparseBatch(self.indices[sl], self.values[sl])
+
+
+def sort_sparse(indices: jax.Array, values: jax.Array) -> SparseBatch:
+    """Canonicalize: zero-value dims -> PAD_INDEX, then sort rows by index."""
+    indices = jnp.where(values == 0.0, PAD_INDEX, indices.astype(jnp.uint32))
+    order = jnp.argsort(indices, axis=-1)
+    return SparseBatch(
+        jnp.take_along_axis(indices, order, axis=-1),
+        jnp.take_along_axis(values, order, axis=-1),
+    )
+
+
+@dataclasses.dataclass
+class NeighborResult:
+    """Answer to a neighborhood RPC (paper §3.3.3).
+
+    ids/weights are padded to the request's k with id=-1, weight=-inf.
+    ``weights`` are model similarity scores, ``distances`` are the embedding
+    -dot distances from the ANN stage.
+    """
+    ids: np.ndarray        # int32 [B, k]
+    weights: np.ndarray    # float32 [B, k]
+    distances: np.ndarray  # float32 [B, k]
+
+
+MUTATION_INSERT = 0
+MUTATION_UPDATE = 1
+MUTATION_DELETE = 2
+
+
+@dataclasses.dataclass
+class MutationBatch:
+    """A batch of mutation RPCs: kind in {insert, update, delete}."""
+    kinds: np.ndarray            # int32 [B]
+    ids: np.ndarray              # int32 [B]
+    features: Mapping[str, np.ndarray] | None  # None for pure deletes

@@ -1,0 +1,2 @@
+from repro.data.synthetic import SyntheticConfig, make_dataset, OGB_ARXIV_LIKE, OGB_PRODUCTS_LIKE
+from repro.data.stream import MutationStream, StreamConfig

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for Dynamic GUS hot spots (+ jnp oracles in ref.py).
+
+Import surface: ``from repro.kernels import ops`` — ops.py wraps every
+kernel with alignment padding and the interpret/compile switch.
+"""
+from repro.kernels import ops, ref

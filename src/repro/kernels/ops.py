@@ -1,0 +1,81 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+On this CPU container the kernels execute in ``interpret=True`` mode (the
+kernel body runs op-by-op in Python/XLA-CPU, validating semantics); on a
+real TPU runtime set ``REPRO_PALLAS_COMPILE=1`` (or pass interpret=False)
+to lower through Mosaic. The wrappers also apply hardware-alignment
+padding so callers never need to know the lane/sublane grain.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import pq_score as _pq
+from repro.kernels import scorer_mlp as _mlp
+from repro.kernels import sparse_dot as _sd
+from repro.kernels import topk_select as _tk
+
+# interpret unless explicitly compiling for TPU
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def pq_score(lut: jax.Array, codes: jax.Array, *, block_n: int = 256,
+             interpret: bool | None = None) -> jax.Array:
+    """LUT scoring: lut f32 [B, M, C]; codes u8 [N, M] -> f32 [B, N]."""
+    return _pq.pq_score(lut, codes, block_n=block_n,
+                        interpret=INTERPRET if interpret is None else interpret)
+
+
+def pq_score_batched(lut, codes, *, block_n: int = 256,
+                     interpret: bool | None = None) -> jax.Array:
+    """Per-query slabs: lut f32 [B, M, C]; codes u8 [B, N, M] -> [B, N]."""
+    return _pq.pq_score_batched(
+        lut, codes, block_n=block_n,
+        interpret=INTERPRET if interpret is None else interpret)
+
+
+def sparse_dot(q_idx, q_val, db_idx, db_val, *, block_n: int = 128,
+               interpret: bool | None = None) -> jax.Array:
+    """Exact sparse-sparse scores: q [B,Kq] vs db [N,Kd] -> f32 [B, N]."""
+    return _sd.sparse_dot(q_idx, q_val, db_idx, db_val, block_n=block_n,
+                          interpret=INTERPRET if interpret is None else interpret)
+
+
+def sparse_dot_batched(q_idx, q_val, db_idx, db_val, *, block_n: int = 128,
+                       interpret: bool | None = None) -> jax.Array:
+    """Shortlist rescoring: q [B,Kq] vs db [B,R,Kd] -> f32 [B, R]."""
+    return _sd.sparse_dot_batched(
+        q_idx, q_val, db_idx, db_val, block_n=block_n,
+        interpret=INTERPRET if interpret is None else interpret)
+
+
+def topk_select(scores: jax.Array, k: int, *, interpret: bool | None = None):
+    """Row-wise top-k (vals, idxs). Kernel path for k <= 64, else lax."""
+    if k > 64:
+        return jax.lax.top_k(scores, k)
+    return _tk.topk_select(
+        scores, k, interpret=INTERPRET if interpret is None else interpret)
+
+
+def scorer_mlp(feats, params: dict, *, interpret: bool | None = None):
+    """Fused paper-scorer: feats [B, F] + core.scorer params -> f32 [B].
+
+    Pads hidden dims to the 128-lane grain once per params object.
+    """
+    w0, b0 = params["w0"], params["b0"]
+    w1, b1 = params["w1"], params["b1"]
+    w2, b2 = params["w2"], params["b2"]
+    h = w0.shape[1]
+    h_pad = -h % 8 if INTERPRET else -h % 128
+    if h_pad:
+        w0 = jnp.pad(w0, ((0, 0), (0, h_pad)))
+        b0 = jnp.pad(b0, ((0, h_pad),))
+        w1 = jnp.pad(w1, ((0, h_pad), (0, h_pad)))
+        b1 = jnp.pad(b1, ((0, h_pad),))
+        w2 = jnp.pad(w2, ((0, h_pad), (0, 0)))
+    return _mlp.scorer_mlp(
+        feats, w0, b0, w1, b1, w2, b2,
+        interpret=INTERPRET if interpret is None else interpret)

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: PQ lookup-table scoring (the ScaNN hot loop).
+
+CPU ScaNN does LUT scoring with AVX shuffle gathers; the TPU-native
+formulation (DESIGN.md §2) turns the per-subspace gather into a one-hot
+matmul so the inner loop runs on the MXU with 128x256-aligned operands:
+
+    scores[b, n] = sum_m lut[b, m, codes[n, m]]
+                 = sum_m onehot(codes[n, m], C) . lut[b, m, :]
+
+Tiling: queries stay resident one block at a time; the code matrix streams
+through VMEM in ``block_n`` rows. VMEM per step ~= block_n*M (codes, u8)
++ M*C*4 (one query LUT) + block_n*4 (acc) — a few hundred KiB at the
+default shapes, comfortably inside the ~16 MiB v5e VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pq_score_kernel(lut_ref, codes_ref, out_ref, *, n_centers: int):
+    lut = lut_ref[...]          # [M, C]   one query's table
+    codes = codes_ref[...]      # [BN, M]  u8
+    m = lut.shape[0]
+    acc = jnp.zeros((codes.shape[0],), jnp.float32)
+    for mi in range(m):         # static unroll over subspaces
+        onehot = (codes[:, mi].astype(jnp.int32)[:, None]
+                  == jnp.arange(n_centers, dtype=jnp.int32)[None, :])
+        acc += onehot.astype(jnp.float32) @ lut[mi]          # MXU row
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def pq_score_batched(lut: jax.Array, codes: jax.Array, *, block_n: int = 256,
+                     interpret: bool = True) -> jax.Array:
+    """Per-query candidate slabs: lut f32 [B, M, C]; codes u8 [B, N, M]
+    -> scores f32 [B, N]. (The serving path gathers a different partition
+    slab per query, so codes carry a batch dim here.)"""
+    b, m, c = lut.shape
+    n = codes.shape[1]
+    n_pad = -n % block_n
+    if n_pad:
+        codes = jnp.pad(codes, ((0, 0), (0, n_pad), (0, 0)))
+    grid = (b, (n + n_pad) // block_n)
+    out = pl.pallas_call(
+        functools.partial(_pq_score_kernel, n_centers=c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, m, c), lambda qb, nb: (qb, 0, 0)),
+            pl.BlockSpec((None, block_n, m), lambda qb, nb: (qb, nb, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_n), lambda qb, nb: (qb, nb)),
+        out_shape=jax.ShapeDtypeStruct((b, n + n_pad), jnp.float32),
+        interpret=interpret,
+    )(lut, codes)
+    return out[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def pq_score(lut: jax.Array, codes: jax.Array, *, block_n: int = 256,
+             interpret: bool = True) -> jax.Array:
+    """lut f32 [B, M, C]; codes u8 [N, M] -> scores f32 [B, N]."""
+    b, m, c = lut.shape
+    n = codes.shape[0]
+    n_pad = -n % block_n
+    if n_pad:
+        codes = jnp.pad(codes, ((0, n_pad), (0, 0)))
+    grid = (b, (n + n_pad) // block_n)
+    out = pl.pallas_call(
+        functools.partial(_pq_score_kernel, n_centers=c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, m, c), lambda qb, nb: (qb, 0, 0)),
+            pl.BlockSpec((block_n, m), lambda qb, nb: (nb, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_n), lambda qb, nb: (qb, nb)),
+        out_shape=jax.ShapeDtypeStruct((b, n + n_pad), jnp.float32),
+        interpret=interpret,
+    )(lut, codes)
+    return out[:, :n]

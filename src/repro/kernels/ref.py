@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel is tested against
+(tests/test_kernels.py sweeps shapes + dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import PAD_INDEX
+
+
+def pq_score_ref(lut: jax.Array, codes: jax.Array) -> jax.Array:
+    """LUT accumulation. lut f32 [B, M, C]; codes u8 [N, M] -> [B, N]."""
+    m = lut.shape[1]
+    idx = codes.astype(jnp.int32)                               # [N, M]
+    per = lut[:, jnp.arange(m)[None, :], idx]                   # [B, N, M]
+    return jnp.sum(per, axis=-1)
+
+
+def sparse_dot_ref(q_idx, q_val, db_idx, db_val) -> jax.Array:
+    """Padded sparse-sparse scores. q [B,Kq], db [N,Kd] -> [B, N]."""
+    eq = (q_idx[:, None, :, None] == db_idx[None, :, None, :]) \
+        & (q_idx[:, None, :, None] != PAD_INDEX)
+    prod = q_val[:, None, :, None].astype(jnp.float32) \
+        * db_val[None, :, None, :].astype(jnp.float32)
+    return jnp.sum(jnp.where(eq, prod, 0.0), axis=(2, 3))
+
+
+def topk_ref(scores: jax.Array, k: int):
+    """Row-wise top-k: (values [B,k], indices [B,k]), ties by lower index."""
+    return jax.lax.top_k(scores, k)
+
+
+def scorer_mlp_ref(feats, w0, b0, w1, b1, w2, b2) -> jax.Array:
+    """Fused 2-hidden-layer tanh MLP + sigmoid head. feats [B,F] -> [B]."""
+    h = jnp.tanh(feats.astype(jnp.float32) @ w0.astype(jnp.float32) + b0)
+    h = jnp.tanh(h @ w1.astype(jnp.float32) + b1)
+    return jax.nn.sigmoid((h @ w2.astype(jnp.float32) + b2)[..., 0])

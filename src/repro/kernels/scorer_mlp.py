@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: fused pair-scorer MLP (paper's 2-layer similarity NN).
+
+Serving scores |Q| x ScaNN-NN candidate pairs per neighborhood RPC; the
+model is tiny (F -> H -> H -> 1, H = 10 in the paper), so the win is not
+FLOPs but *fusion*: one VMEM-resident pass instead of five HBM round trips
+for the intermediate activations. Weights are broadcast to every grid step
+(index_map pins them to block 0) and the feature matrix streams through in
+``block_b`` rows.
+
+Note the hardware-alignment padding in ops.py: H=10 is far off the 128-lane
+VPU grain, so the wrapper zero-pads the hidden dims once at load time —
+padding weights, not activations, costs nothing per query.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scorer_kernel(feats_ref, w0_ref, b0_ref, w1_ref, b1_ref,
+                   w2_ref, b2_ref, out_ref):
+    x = feats_ref[...].astype(jnp.float32)           # [BB, F]
+    h = jnp.tanh(x @ w0_ref[...] + b0_ref[...][None, :])
+    h = jnp.tanh(h @ w1_ref[...] + b1_ref[...][None, :])
+    logit = h @ w2_ref[...] + b2_ref[...][None, :]   # [BB, 1]
+    out_ref[...] = jax.nn.sigmoid(logit[:, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def scorer_mlp(feats, w0, b0, w1, b1, w2, b2, *, block_b: int = 256,
+               interpret: bool = True) -> jax.Array:
+    """feats [B, F] + MLP params -> sigmoid scores f32 [B]."""
+    b, f = feats.shape
+    h = w0.shape[1]
+    b_pad = -b % block_b
+    if b_pad:
+        feats = jnp.pad(feats, ((0, b_pad), (0, 0)))
+    grid = ((b + b_pad) // block_b,)
+    fixed = lambda bb: (0, 0)
+    fixed1 = lambda bb: (0,)
+    out = pl.pallas_call(
+        _scorer_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, f), lambda bb: (bb, 0)),
+            pl.BlockSpec((f, h), fixed),
+            pl.BlockSpec((h,), fixed1),
+            pl.BlockSpec((h, h), fixed),
+            pl.BlockSpec((h,), fixed1),
+            pl.BlockSpec((h, 1), fixed),
+            pl.BlockSpec((1,), fixed1),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda bb: (bb,)),
+        out_shape=jax.ShapeDtypeStruct((b + b_pad,), jnp.float32),
+        interpret=interpret,
+    )(feats, w0.astype(jnp.float32), b0.astype(jnp.float32),
+      w1.astype(jnp.float32), b1.astype(jnp.float32),
+      w2.astype(jnp.float32), b2.astype(jnp.float32))
+    return out[:b]

@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: small-k top-k selection over scored candidates.
+
+ScaNN-NN is small (10-1000) while the scored candidate set is large; the
+selection is bandwidth-bound. The kernel runs k rounds of (max, argmax,
+mask-out) over a row resident in VMEM — O(kN) VPU work with no sort, the
+standard TPU idiom for k << N. Ties resolve to the lowest index, matching
+``jax.lax.top_k``.
+
+Grid: one program per query row; each program streams its row once into
+VMEM and iterates in-register.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_kernel(scores_ref, vals_ref, idxs_ref, *, k: int):
+    scores = scores_ref[...].astype(jnp.float32)     # [N]
+    n = scores.shape[0]
+    iota = jnp.arange(n, dtype=jnp.int32)
+
+    def body(i, carry):
+        cur = carry
+        best = jnp.max(cur)
+        # lowest index among ties, lax.top_k-compatible
+        best_idx = jnp.min(jnp.where(cur == best, iota, n))
+        vals_ref[i] = best
+        idxs_ref[i] = best_idx.astype(jnp.int32)
+        return jnp.where(iota == best_idx, -jnp.inf, cur)
+
+    jax.lax.fori_loop(0, k, body, scores)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_select(scores: jax.Array, k: int, *, interpret: bool = True):
+    """scores f32 [B, N] -> (values f32 [B, k], indices i32 [B, k])."""
+    b, n = scores.shape
+    vals, idxs = pl.pallas_call(
+        functools.partial(_topk_kernel, k=k),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((None, n), lambda qb: (qb, 0))],
+        out_specs=(pl.BlockSpec((None, k), lambda qb: (qb, 0)),
+                   pl.BlockSpec((None, k), lambda qb: (qb, 0))),
+        out_shape=(jax.ShapeDtypeStruct((b, k), jnp.float32),
+                   jax.ShapeDtypeStruct((b, k), jnp.int32)),
+        interpret=interpret,
+    )(scores)
+    return vals, idxs

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before any jax
+initialization.
+
+Axis semantics:
+  pod   — outermost, maps to DCN (inter-pod) links; batch/index sharding
+  data  — intra-pod DP/FSDP axis (and index-shard axis for GUS)
+  model — TP/EP axis
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for CPU tests (requires >= prod(shape) host devices)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes(mesh) -> tuple:
+    """The composite data-parallel axis names for this mesh."""
+    names = mesh.axis_names
+    return tuple(n for n in names if n in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    return "model"

@@ -1,0 +1,81 @@
+"""GUS serving launcher: bootstrap a corpus, run a live mutation + query
+workload through the engine, and report paper-style latency percentiles.
+
+    PYTHONPATH=src python -m repro.launch.serve --dataset arxiv \
+        --points 5000 --mutations 50 --queries 200
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+import numpy as np
+
+from repro.ann.scann import ScannConfig
+from repro.core import BucketConfig, DynamicGUS, GusConfig
+from repro.core.scorer import train_scorer
+from repro.data.stream import MutationStream, StreamConfig
+from repro.data.synthetic import (OGB_ARXIV_LIKE, OGB_PRODUCTS_LIKE,
+                                  labeled_pairs, make_dataset)
+from repro.serve.engine import EngineConfig, GusEngine
+
+DATASETS = {"arxiv": OGB_ARXIV_LIKE, "products": OGB_PRODUCTS_LIKE}
+
+
+def build_engine(dataset: str, n_points: int, *, scann_nn=10, idf_size=0,
+                 filter_percent=0.0, backend="scann", seed=0):
+    data_cfg = dataclasses.replace(DATASETS[dataset], n_points=n_points)
+    ids, feats, cluster = make_dataset(data_cfg)
+    pf, lbl = labeled_pairs(feats, cluster, min(4 * n_points, 20000),
+                            data_cfg.spec, seed=seed)
+    scorer, _ = train_scorer(jax.random.PRNGKey(seed), data_cfg.spec,
+                             pf, lbl, steps=300)
+    bcfg = BucketConfig(dense_tables=8, dense_bits=10, set_tables=6,
+                        scalar_widths=(2.0,))
+    gus = DynamicGUS(data_cfg.spec, bcfg, scorer, GusConfig(
+        scann_nn=scann_nn, idf_size=idf_size, filter_percent=filter_percent,
+        backend=backend,
+        scann=ScannConfig(d_proj=64, n_partitions=max(16, n_points // 256),
+                          nprobe=8, reorder=max(128, scann_nn * 4))))
+    stream = MutationStream(data_cfg, StreamConfig(seed=seed),
+                            bootstrap_fraction=0.6)
+    boot_ids, boot_feats = stream.bootstrap()
+    gus.bootstrap(boot_ids, boot_feats)
+    return GusEngine(gus), stream, cluster
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", choices=DATASETS, default="arxiv")
+    ap.add_argument("--points", type=int, default=5000)
+    ap.add_argument("--mutations", type=int, default=50)
+    ap.add_argument("--queries", type=int, default=200)
+    ap.add_argument("--scann-nn", type=int, default=10)
+    ap.add_argument("--idf-size", type=int, default=0)
+    ap.add_argument("--filter-percent", type=float, default=0.0)
+    ap.add_argument("--backend", choices=("scann", "brute"), default="scann")
+    args = ap.parse_args()
+
+    engine, stream, cluster = build_engine(
+        args.dataset, args.points, scann_nn=args.scann_nn,
+        idf_size=args.idf_size, filter_percent=args.filter_percent,
+        backend=args.backend)
+    print(f"[serve] bootstrapped {len(engine.gus.index)} points")
+
+    for i, batch in zip(range(args.mutations), stream):
+        engine.submit_mutations(batch)
+        if args.queries and i % max(args.mutations // 10, 1) == 0:
+            qids = stream.query_ids(min(16, args.queries))
+            res = engine.gus.neighbors_of_ids(qids)
+            same = [cluster[n] == cluster[q]
+                    for r, q in enumerate(qids)
+                    for n in res.ids[r] if 0 <= n < len(cluster)]
+            print(f"[serve] after batch {i}: index={len(engine.gus.index)} "
+                  f"same-cluster={np.mean(same):.2f}")
+    print(json.dumps(engine.stats(), indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+"""Sharding policy: PartitionSpecs for params, optimizer state, batches and
+caches of every (arch x shape) cell.
+
+Baseline policy ("auto"): for each parameter leaf, skip its stacked layer
+dims, then shard the largest remaining dim divisible by the model-axis
+size on "model" and the largest remaining divisible dim on the (composite)
+FSDP axis. Small leaves (norm scales, biases) stay replicated. This is
+deliberately generic — it holds up across all ten families and gives the
+§Perf hillclimb a well-defined baseline to beat with hand-tuned specs.
+
+Divisibility fallbacks (DESIGN.md §5) are implicit: a dim that doesn't
+divide simply isn't sharded on that axis, and the next-largest candidate
+is taken instead (e.g. qwen2-vl's 28 heads fall back to head_dim=128).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# leaves smaller than this stay replicated (norm scales, biases, gates)
+REPLICATE_BELOW = 1 << 16
+
+
+def _stack_depth(cfg: ModelConfig, top_key: str) -> int:
+    """How many leading dims of a leaf under this top-level key are layer
+    stacks (scan carriers) that must not be sharded."""
+    if cfg.family == "ssm":
+        return {"mlstm": 2, "slstm": 1}.get(top_key, 0)
+    if cfg.family == "hybrid":
+        return {"attn": 1, "mamba_moe": 2, "mamba_dense": 2}.get(top_key, 0)
+    if cfg.family == "encdec":
+        return {"enc": 1, "dec": 1}.get(top_key, 0)
+    return {"blocks": 1}.get(top_key, 0)
+
+
+def _mesh_axes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def auto_param_spec(path_keys, shape, cfg: ModelConfig, mesh) -> P:
+    """Megatron-style name rules + divisibility fallbacks.
+
+    Column-parallel (output dim on "model"): wq/wk/wv, gate/up, in/up_proj,
+    expert w_gate/w_up (TP form), lm_head. Row-parallel (input dim on
+    "model", psum after): wo, down, out/down_proj. The other large dim goes
+    to the composite FSDP axis. Experts shard on "model" (EP) when E
+    divides it. Dims that don't divide fall back to the next candidate
+    (e.g. 28 heads -> head_dim).
+    """
+    axes = _mesh_axes(mesh)
+    model_n = axes.get("model", 1)
+    fsdp_names = tuple(n for n in ("pod", "data") if n in axes)
+    fsdp_n = int(np.prod([axes[n] for n in fsdp_names])) if fsdp_names else 1
+    fsdp = (fsdp_names if len(fsdp_names) > 1 else fsdp_names[0]) \
+        if fsdp_names else None
+
+    skip = _stack_depth(cfg, str(path_keys[0])) if path_keys else 0
+    name = str(path_keys[-1])
+    # norm scales, biases and other small vectors replicate
+    if int(np.prod(shape)) < REPLICATE_BELOW or "norm" in name \
+            or name in ("gn", "b", "D", "dt_bias", "conv_b", "bq", "bk",
+                        "bv", "bo", "x_bq", "x_bk", "x_bv", "x_bo",
+                        "b_up", "b_down"):
+        return P(*([None] * len(shape)))
+    body = shape[skip:]
+    nd = len(body)
+
+    def div(i, n):
+        return n > 1 and body[i] % n == 0 and body[i] >= n
+
+    def compose(model_dim, fsdp_dim):
+        entries = [None] * nd
+        if model_dim is not None:
+            entries[model_dim] = "model"
+        if fsdp_dim is not None and fsdp_dim != model_dim:
+            entries[fsdp_dim] = fsdp
+        return P(*([None] * skip + entries))
+
+    def pick(pref_model: list, pref_fsdp: list):
+        m = next((i for i in pref_model if div(i, model_n)), None)
+        f = next((i for i in pref_fsdp
+                  if i != m and fsdp is not None and div(i, fsdp_n)), None)
+        return compose(m, f)
+
+    # attention projections [d, H|Hkv, Dh] / [H, Dh, d].
+    # NEVER shard Dh: RoPE's half-split slicing on a Dh-sharded tensor
+    # forces involuntary full rematerialization in SPMD. When heads don't
+    # divide the model axis, the projection replicates across it instead.
+    if name in ("wq", "wk", "wv") and nd == 3:
+        if body[0] <= 64:                 # mlstm block-diag [H, Dh, Dh]
+            return pick([2], [1])         # column-parallel on Dh_out
+        return pick([1], [0])             # heads on model; d -> fsdp
+    if name == "wo" and nd == 3:
+        return pick([0], [2])
+    if name in ("wq", "wk", "wv") and nd == 2:   # mlstm block-diag [Dh, Dh]
+        return pick([1], [0])
+    # MoE expert stacks [E, d, ff] / [E, ff, d]: EP when E divides model
+    if name in ("w_gate", "w_up") and nd == 3:
+        return pick([0, 2], [1])           # EP on E, else TP on ff
+    if name == "w_down" and nd == 3:
+        return pick([0, 1], [2])           # EP on E, else TP on ff
+    # column-parallel matmuls
+    if name in ("gate", "up", "w_up", "in_proj", "up_proj", "w",
+                "x_w_up", "lm_head"):
+        return pick([1], [0])
+    # row-parallel matmuls
+    if name in ("down", "w_down", "out_proj", "down_proj"):
+        return pick([0], [1])
+    if name == "embed":
+        return pick([0], [1])             # vocab on model, d on fsdp
+    if name in ("w_if", "x_proj"):
+        return pick([0], [1])
+    if name == "dt_proj":
+        return pick([1], [])
+    if name in ("A_log",):
+        return pick([0], [])
+    if name == "conv_w":
+        return pick([1], [])
+    if name == "r":                        # slstm recurrent [Dh, 4Dh]
+        return pick([1], [0])
+    if name in ("shared_gate", "shared_up"):
+        return pick([1], [0])
+    if name == "shared_down":
+        return pick([0], [1])
+    if name == "router":
+        return pick([], [0])
+    # whisper cross/self attn under x_ prefix
+    if name.startswith("x_w") and nd == 3:
+        if name == "x_wo":
+            return pick([0, 1], [2])
+        return pick([1, 2], [0])
+    # generic fallback: largest divisible dim -> model, next -> fsdp
+    cands = sorted(range(nd), key=lambda i: -body[i])
+    m = next((i for i in cands if div(i, model_n)), None)
+    f = next((i for i in cands
+              if i != m and fsdp is not None and div(i, fsdp_n)), None)
+    return compose(m, f)
+
+
+def _path_keys(path) -> tuple:
+    return tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_specs(params_shape, cfg: ModelConfig, mesh):
+    """Pytree of PartitionSpec matching the params eval_shape tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = [auto_param_spec(_path_keys(p), v.shape, cfg, mesh)
+             for p, v in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_specs(opt_shape, p_specs):
+    """Optimizer state: moments inherit the param spec; step replicated."""
+    return {"step": P(), "m": p_specs, "v": p_specs}
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, batch_shape):
+    dp = tuple(n for n in ("pod", "data") if n in mesh.axis_names)
+    dp = dp if len(dp) > 1 else dp[0]
+    dp_n = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[n]
+                        for n in (dp if isinstance(dp, tuple) else (dp,))]))
+
+    def spec_of(key, s):
+        b = s.shape[0]
+        lead = dp if b % dp_n == 0 else None
+        return P(*([lead] + [None] * (len(s.shape) - 1)))
+
+    return {k: spec_of(k, v) for k, v in batch_shape.items()}
+
+
+def cache_specs_tree(cfg: ModelConfig, shape: ShapeConfig, mesh, cache_shape):
+    """Decode caches: batch on the dp axes when divisible, the long (seq)
+    dim on "model"; O(1) SSM states shard their channel dim on "model"."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_n = axes.get("model", 1)
+    dp = tuple(n for n in ("pod", "data") if n in axes)
+    dp_entry = dp if len(dp) > 1 else dp[0]
+    dp_n = int(np.prod([axes[n] for n in dp]))
+    b = shape.global_batch
+
+    def spec_of(path, v):
+        keys = _path_keys(path)
+        name = keys[-1]
+        if name == "len":
+            return P(None)
+        nd = len(v.shape)
+        entries = [None] * nd
+        # find the batch dim: first dim equal to global_batch after stacks
+        for i, s in enumerate(v.shape):
+            if s == b and b % dp_n == 0 and b >= dp_n:
+                entries[i] = dp_entry
+                break
+        # KV caches: shard the seq dim (== shape.seq_len) on model
+        for i, s in enumerate(v.shape):
+            if entries[i] is None and s == shape.seq_len \
+                    and s % model_n == 0:
+                entries[i] = "model"
+                return P(*entries)
+        # SSM states: shard the largest remaining divisible dim on model
+        cands = sorted(
+            [(i, s) for i, s in enumerate(v.shape) if entries[i] is None],
+            key=lambda t: -t[1])
+        for i, s in cands:
+            if model_n > 1 and s % model_n == 0 and s >= model_n \
+                    and s > 128:
+                entries[i] = "model"
+                break
+        # if batch couldn't shard on dp, also try it on dp via seq/channels
+        if all(e is None or e == "model" for e in entries) and dp_n > 1:
+            for i, s in cands:
+                if entries[i] is None and s % dp_n == 0 and s > 128:
+                    entries[i] = dp_entry
+                    break
+        return P(*entries)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_of(p, v) for p, v in flat])
+
+
+def named(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

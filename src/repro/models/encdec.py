@@ -1,0 +1,216 @@
+"""Whisper-style encoder-decoder backbone (conv frontend STUBBED).
+
+Per the brief the modality frontend is a stub: the encoder consumes
+precomputed mel-frame embeddings [B, n_frames, d_model] from
+``input_specs()``. Whisper internals kept: LayerNorm + biases, GELU MLPs,
+absolute (sinusoidal) positions; adaptation note — the decoder uses
+sinusoidal rather than learned positions so 32k-token decode shapes don't
+require a 32k-row learned table (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def _sinusoid(positions, d_model: int):
+    """positions [.., S] -> [.., S, d] classic sin/cos table."""
+    half = d_model // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                   / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _init_attn(key, cfg, prefix=""):
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    return {
+        f"{prefix}norm_w": jnp.ones((d,), jnp.float32),
+        f"{prefix}norm_b": jnp.zeros((d,), jnp.float32),
+        f"{prefix}wq": L.dense_init(ks[0], d, h * dh, cfg.pdtype).reshape(d, h, dh),
+        f"{prefix}wk": L.dense_init(ks[1], d, hkv * dh, cfg.pdtype).reshape(d, hkv, dh),
+        f"{prefix}wv": L.dense_init(ks[2], d, hkv * dh, cfg.pdtype).reshape(d, hkv, dh),
+        f"{prefix}wo": L.dense_init(ks[3], h * dh, d, cfg.pdtype).reshape(h, dh, d),
+        f"{prefix}bq": jnp.zeros((h, dh), cfg.pdtype),
+        f"{prefix}bk": jnp.zeros((hkv, dh), cfg.pdtype),
+        f"{prefix}bv": jnp.zeros((hkv, dh), cfg.pdtype),
+        f"{prefix}bo": jnp.zeros((d,), cfg.pdtype),
+    }
+
+
+def _init_mlp(key, cfg):
+    ks = jax.random.split(key, 2)
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "mlp_norm_w": jnp.ones((d,), jnp.float32),
+        "mlp_norm_b": jnp.zeros((d,), jnp.float32),
+        "w_up": L.dense_init(ks[0], d, ff, cfg.pdtype),
+        "b_up": jnp.zeros((ff,), cfg.pdtype),
+        "w_down": L.dense_init(ks[1], ff, d, cfg.pdtype),
+        "b_down": jnp.zeros((d,), cfg.pdtype),
+    }
+
+
+def init_params(key, cfg) -> dict:
+    ks = jax.random.split(key, 6)
+    stack = lambda ts: jax.tree.map(lambda *xs: jnp.stack(xs), *ts)
+    enc = stack([{**_init_attn(k1, cfg), **_init_mlp(k2, cfg)}
+                 for k1, k2 in zip(jax.random.split(ks[0], cfg.n_enc_layers),
+                                   jax.random.split(ks[1], cfg.n_enc_layers))])
+    dec = stack([{**_init_attn(k1, cfg), **_init_attn(k2, cfg, "x_"),
+                  **_init_mlp(k3, cfg)}
+                 for k1, k2, k3 in zip(
+                     jax.random.split(ks[2], cfg.n_layers),
+                     jax.random.split(ks[3], cfg.n_layers),
+                     jax.random.split(ks[4], cfg.n_layers))])
+    kk = jax.random.split(ks[5], 3)
+    return {
+        "embed": L.embed_init(kk[0], cfg.padded_vocab, cfg.d_model,
+                              cfg.pdtype),
+        "enc": enc, "dec": dec,
+        "enc_norm_w": jnp.ones((cfg.d_model,), jnp.float32),
+        "enc_norm_b": jnp.zeros((cfg.d_model,), jnp.float32),
+        "final_norm_w": jnp.ones((cfg.d_model,), jnp.float32),
+        "final_norm_b": jnp.zeros((cfg.d_model,), jnp.float32),
+        "lm_head": L.dense_init(kk[1], cfg.d_model, cfg.padded_vocab,
+                                cfg.pdtype),
+    }
+
+
+def _attn(p, cfg, x, kv_src, *, causal, prefix=""):
+    b, s, _ = x.shape
+    hkv, g, dh = cfg.n_kv_heads, cfg.q_groups, cfg.head_dim_
+    h = L.layer_norm(x, p[f"{prefix}norm_w"], p[f"{prefix}norm_b"])
+    q = jnp.einsum("bsd,dhk->bshk", h, p[f"{prefix}wq"]) + p[f"{prefix}bq"]
+    kv_in = h if kv_src is None else kv_src
+    k = jnp.einsum("bsd,dhk->bshk", kv_in, p[f"{prefix}wk"]) + p[f"{prefix}bk"]
+    v = jnp.einsum("bsd,dhk->bshk", kv_in, p[f"{prefix}wv"]) + p[f"{prefix}bv"]
+    q = q.reshape(b, s, hkv, g, dh)
+    if s > cfg.attn_chunk or k.shape[1] > cfg.attn_chunk:
+        ctx = L.flash_attention(q, k, v, causal=causal,
+                                kv_chunk=cfg.attn_chunk)
+    else:
+        ctx = L.full_attention(q, k, v, causal=causal)
+    ctx = ctx.reshape(b, s, cfg.n_heads, dh)
+    return jnp.einsum("bshk,hkd->bsd", ctx, p[f"{prefix}wo"]) + p[f"{prefix}bo"]
+
+
+def _mlp(p, cfg, x):
+    h = L.layer_norm(x, p["mlp_norm_w"], p["mlp_norm_b"])
+    return L.gelu_mlp(h, p["w_up"], p["b_up"], p["w_down"], p["b_down"])
+
+
+def encode(params, cfg, frames):
+    """frames [B, n_frames, d] (stub frontend output) -> enc states."""
+    pos = jnp.arange(frames.shape[1])
+    x = frames.astype(cfg.cdtype) + _sinusoid(pos, cfg.d_model)[None].astype(
+        cfg.cdtype)
+
+    def body(h, lp):
+        h = L.constrain_act(h, cfg)
+        h = h + _attn(lp, cfg, h, None, causal=False)
+        h = h + _mlp(lp, cfg, h)
+        return h, ()
+
+    x, _ = L.scan_stack(body, L.constrain_act(x, cfg), params["enc"],
+                        scan=cfg.scan_layers, remat=cfg.remat)
+    return L.layer_norm(x, params["enc_norm_w"], params["enc_norm_b"])
+
+
+def features(params, cfg, batch):
+    """batch {tokens [B,S], frames [B,F,d]} -> (decoder states, aux)."""
+    enc_out = encode(params, cfg, batch["frames"])
+    tokens = batch["tokens"]
+    pos = jnp.arange(tokens.shape[1])
+    x = params["embed"][tokens].astype(cfg.cdtype) \
+        + _sinusoid(pos, cfg.d_model)[None].astype(cfg.cdtype)
+
+    def body(h, lp):
+        h = L.constrain_act(h, cfg)
+        h = h + _attn(lp, cfg, h, None, causal=True)
+        h = h + _attn(lp, cfg, h, enc_out, causal=False, prefix="x_")
+        h = h + _mlp(lp, cfg, h)
+        return h, ()
+
+    x, _ = L.scan_stack(body, L.constrain_act(x, cfg), params["dec"],
+                        scan=cfg.scan_layers, remat=cfg.remat)
+    return L.layer_norm(x, params["final_norm_w"],
+                        params["final_norm_b"]), jnp.float32(0)
+
+
+def apply(params, cfg, batch):
+    x, aux = features(params, cfg, batch)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits, aux  # compute dtype; CE upcasts per-element
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    dh, hkv = cfg.head_dim_, cfg.n_kv_heads
+    shape = (cfg.n_layers, batch, max_len, hkv, dh)
+    xshape = (cfg.n_layers, batch, cfg.n_frames, hkv, dh)
+    return {"k": jnp.zeros(shape, cfg.cdtype),
+            "v": jnp.zeros(shape, cfg.cdtype),
+            "xk": jnp.zeros(xshape, cfg.cdtype),
+            "xv": jnp.zeros(xshape, cfg.cdtype),
+            "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def encode_prefill(params, cfg, frames, cache):
+    """Run the encoder and fill per-layer cross-attention KV caches."""
+    enc_out = encode(params, cfg, frames)
+
+    def body(_, lp):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["x_wk"]) + lp["x_bk"]
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["x_wv"]) + lp["x_bv"]
+        return (), (k, v)
+
+    _, (xk, xv) = jax.lax.scan(body, (), params["dec"])
+    return {**cache, "xk": xk.astype(cfg.cdtype), "xv": xv.astype(cfg.cdtype)}
+
+
+def decode_step(params, cfg, batch, cache):
+    """One decoder token against self-KV + precomputed cross-KV caches."""
+    b = batch["tokens"].shape[0]
+    tokens = batch["tokens"][:, None]
+    x = params["embed"][tokens].astype(cfg.cdtype) \
+        + _sinusoid(cache["len"][:, None], cfg.d_model).astype(cfg.cdtype)
+    hkv, g, dh = cfg.n_kv_heads, cfg.q_groups, cfg.head_dim_
+    cache_len = cache["len"]
+
+    def body(h, xs):
+        lp, kc, vc, xk, xv = xs
+        # causal self-attention against the cache
+        hn = L.layer_norm(h, lp["norm_w"], lp["norm_b"])
+        q = (jnp.einsum("bsd,dhk->bshk", hn, lp["wq"]) + lp["bq"]
+             ).reshape(b, 1, hkv, g, dh)
+        k = jnp.einsum("bsd,dhk->bshk", hn, lp["wk"]) + lp["bk"]
+        v = jnp.einsum("bsd,dhk->bshk", hn, lp["wv"]) + lp["bv"]
+        upd = jax.vmap(lambda c, kn, i: jax.lax.dynamic_update_slice_in_dim(
+            c, kn, i, axis=0))
+        kc = upd(kc, k, cache_len)
+        vc = upd(vc, v, cache_len)
+        ctx = L.decode_attention(q, kc, vc, cache_len + 1)
+        ctx = ctx.reshape(b, 1, cfg.n_heads, dh)
+        h = h + jnp.einsum("bshk,hkd->bsd", ctx, lp["wo"]) + lp["bo"]
+        # cross-attention against the (prefilled) encoder KV
+        hn = L.layer_norm(h, lp["x_norm_w"], lp["x_norm_b"])
+        q = (jnp.einsum("bsd,dhk->bshk", hn, lp["x_wq"]) + lp["x_bq"]
+             ).reshape(b, 1, hkv, g, dh)
+        xlen = jnp.full((b,), cfg.n_frames, jnp.int32)
+        ctx = L.decode_attention(q, xk, xv, xlen)
+        ctx = ctx.reshape(b, 1, cfg.n_heads, dh)
+        h = h + jnp.einsum("bshk,hkd->bsd", ctx, lp["x_wo"]) + lp["x_bo"]
+        h = h + _mlp(lp, cfg, h)
+        return h, (kc, vc)
+
+    x, (new_k, new_v) = L.scan_stack(
+        body, x, (params["dec"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]),
+        scan=cfg.scan_layers, remat=False)
+    x = L.layer_norm(x, params["final_norm_w"], params["final_norm_b"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    new_cache = {**cache, "k": new_k, "v": new_v, "len": cache["len"] + 1}
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,248 @@
+"""Jamba-style hybrid: Mamba + attention 1:7 interleave, MoE every 2nd layer.
+
+Layer pattern within each period-``attn_period`` group (global layer index
+g*P + j):
+    j == 0      : attention + dense MLP
+    j odd       : mamba + MoE FFN
+    j even > 0  : mamba + dense MLP
+
+Attention layers carry KV caches; mamba layers carry O(1) conv+SSM state —
+that asymmetry is exactly why this family serves long_500k (cache exists
+for only 1/P of the layers, and it is the only thing that grows with
+context). Jamba uses no explicit positional encoding (the recurrence
+carries order), so attention here is NoPE.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.transformer import (_attn_out, _project_qkv)
+
+
+def _init_attn_layer(key, cfg) -> dict:
+    d, hkv, dh, h = cfg.d_model, cfg.n_kv_heads, cfg.head_dim_, cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "attn_norm": jnp.ones((d,), jnp.float32),
+        "wq": L.dense_init(ks[0], d, h * dh, cfg.pdtype).reshape(d, h, dh),
+        "wk": L.dense_init(ks[1], d, hkv * dh, cfg.pdtype).reshape(d, hkv, dh),
+        "wv": L.dense_init(ks[2], d, hkv * dh, cfg.pdtype).reshape(d, hkv, dh),
+        "wo": L.dense_init(ks[3], h * dh, d, cfg.pdtype).reshape(h, dh, d),
+        "ffn_norm": jnp.ones((d,), jnp.float32),
+        "gate": L.dense_init(ks[4], d, cfg.d_ff, cfg.pdtype),
+        "up": L.dense_init(ks[5], d, cfg.d_ff, cfg.pdtype),
+        "down": L.dense_init(ks[6], cfg.d_ff, d, cfg.pdtype),
+    }
+
+
+def _init_mamba_layer(key, cfg, use_moe: bool) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"mamba": ssm.init_mamba(ks[0], cfg),
+         "ffn_norm": jnp.ones((cfg.d_model,), jnp.float32)}
+    if use_moe:
+        p["moe"] = init_moe(ks[1], cfg)
+    else:
+        p["gate"] = L.dense_init(ks[1], cfg.d_model, cfg.d_ff, cfg.pdtype)
+        up_down = jax.random.split(ks[2], 2)
+        p["up"] = L.dense_init(up_down[0], cfg.d_model, cfg.d_ff, cfg.pdtype)
+        p["down"] = L.dense_init(up_down[1], cfg.d_ff, cfg.d_model, cfg.pdtype)
+    return p
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(key, cfg) -> dict:
+    per = cfg.attn_period
+    assert cfg.n_layers % per == 0
+    groups = cfg.n_layers // per
+    n_moe = per // 2                 # j odd
+    n_md = per // 2 - 1              # j even > 0
+    ks = jax.random.split(key, 6)
+    attn = _stack([_init_attn_layer(k, cfg)
+                   for k in jax.random.split(ks[0], groups)])
+    moe_l = _stack([_init_mamba_layer(k, cfg, True)
+                    for k in jax.random.split(ks[1], groups * n_moe)])
+    moe_l = jax.tree.map(
+        lambda a: a.reshape((groups, n_moe) + a.shape[1:]), moe_l)
+    dense_l = _stack([_init_mamba_layer(k, cfg, False)
+                      for k in jax.random.split(ks[2], groups * n_md)])
+    dense_l = jax.tree.map(
+        lambda a: a.reshape((groups, n_md) + a.shape[1:]), dense_l)
+    return {
+        "embed": L.embed_init(ks[3], cfg.padded_vocab, cfg.d_model,
+                              cfg.pdtype),
+        "attn": attn, "mamba_moe": moe_l, "mamba_dense": dense_l,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": L.dense_init(ks[4], cfg.d_model, cfg.padded_vocab,
+                                cfg.pdtype),
+    }
+
+
+def _attn_train(p, cfg, x):
+    h = L.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    q, k, v = _project_qkv(p, cfg, h)          # NoPE: no rotary applied
+    if x.shape[1] > cfg.attn_chunk:
+        ctx = L.flash_attention(q, k, v, causal=True, kv_chunk=cfg.attn_chunk)
+    else:
+        ctx = L.full_attention(q, k, v, causal=True)
+    return _attn_out(p, cfg, ctx)
+
+
+def _dense_ffn(p, cfg, x):
+    h = L.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+    return L.swiglu(h, p["gate"], p["up"], p["down"])
+
+
+def _group_train(gp, cfg, x):
+    """One interleave group: attn layer + (P-1) mamba layers.
+
+    Each sub-layer is checkpointed individually: the outer scan remats a
+    whole group, and without per-sublayer boundaries the backward holds
+    all 8 layers' recompute live at once (hundreds of GB at d=8192)."""
+    aux = jnp.float32(0)
+    ckpt = jax.checkpoint if cfg.remat else (lambda f: f)
+
+    # sub-layer *outputs* are SP-constrained so the row-parallel psums
+    # (mamba out_proj, ffn down) lower as reduce-scatter into the SP
+    # sharding instead of a full [B,S,d] all-reduce (1/TP the traffic)
+    cc = lambda t: L.constrain_act(t, cfg)
+
+    @ckpt
+    def attn_sub(xx, lp):
+        xx = xx + cc(_attn_train(lp, cfg, xx))
+        return xx + cc(_dense_ffn(lp, cfg, xx))
+
+    @ckpt
+    def mamba_moe_sub(xx, lp):
+        xx = L.constrain_act(xx, cfg)
+        xx = xx + cc(ssm.mamba_train(lp["mamba"], cfg, xx))
+        h = L.rms_norm(xx, lp["ffn_norm"], cfg.norm_eps)
+        y, a = moe_ffn(lp["moe"], cfg, h)
+        return xx + cc(y), a
+
+    @ckpt
+    def mamba_dense_sub(xx, lp):
+        xx = L.constrain_act(xx, cfg)
+        xx = xx + cc(ssm.mamba_train(lp["mamba"], cfg, xx))
+        return xx + cc(_dense_ffn(lp, cfg, xx))
+
+    x = attn_sub(x, gp["attn"])
+    per = cfg.attn_period
+    i_moe = i_dense = 0
+    for j in range(1, per):
+        if j % 2 == 1:
+            lp = jax.tree.map(lambda a: a[i_moe], gp["mamba_moe"])
+            i_moe += 1
+            x, a = mamba_moe_sub(x, lp)
+            aux = aux + a
+        else:
+            lp = jax.tree.map(lambda a: a[i_dense], gp["mamba_dense"])
+            i_dense += 1
+            x = mamba_dense_sub(x, lp)
+    return x, aux
+
+
+def features(params, cfg, batch):
+    x = params["embed"][batch["tokens"]].astype(cfg.cdtype)
+
+    x = L.constrain_act(x, cfg)
+
+    def body(carry, gp):
+        h, aux = carry
+        h, a = _group_train(gp, cfg, L.constrain_act(h, cfg))
+        return (h, aux + a), ()
+
+    # NOTE: the group scan itself is NOT remat'd — each sub-layer inside
+    # _group_train is checkpointed individually, so the scan's per-step
+    # residuals are just the sub-layer boundary activations. Wrapping the
+    # group again would recompute recomputes (4.6x FLOPs, measured).
+    (x, aux), _ = L.scan_stack(
+        body, (x, jnp.float32(0)),
+        {"attn": params["attn"], "mamba_moe": params["mamba_moe"],
+         "mamba_dense": params["mamba_dense"]},
+        scan=cfg.scan_layers, remat=False)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def apply(params, cfg, batch):
+    x, aux = features(params, cfg, batch)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits, aux  # compute dtype; CE upcasts per-element (fused)
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    per = cfg.attn_period
+    groups = cfg.n_layers // per
+    tile = lambda c, *lead: jax.tree.map(
+        lambda a: jnp.broadcast_to(a, tuple(lead) + a.shape).copy(), c)
+    return {
+        "k": jnp.zeros((groups, batch, max_len, cfg.n_kv_heads,
+                        cfg.head_dim_), cfg.cdtype),
+        "v": jnp.zeros((groups, batch, max_len, cfg.n_kv_heads,
+                        cfg.head_dim_), cfg.cdtype),
+        "mamba_moe": tile(ssm.mamba_cache(cfg, batch), groups, per // 2),
+        "mamba_dense": tile(ssm.mamba_cache(cfg, batch), groups,
+                            per // 2 - 1),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(params, cfg, batch, cache):
+    x = params["embed"][batch["tokens"][:, None]].astype(cfg.cdtype)
+    cache_len = cache["len"]
+
+    def body(carry, xs):
+        h = carry
+        gp, kc, vc, mm_c, md_c = xs
+        # attention sub-layer (NoPE)
+        hn = L.rms_norm(h, gp["attn"]["attn_norm"], cfg.norm_eps)
+        q, k, v = _project_qkv(gp["attn"], cfg, hn)
+        upd = jax.vmap(lambda c, kn, i: jax.lax.dynamic_update_slice_in_dim(
+            c, kn, i, axis=0))
+        kc = upd(kc, k, cache_len)
+        vc = upd(vc, v, cache_len)
+        ctx = L.decode_attention(q, kc, vc, cache_len + 1)
+        h = h + _attn_out(gp["attn"], cfg, ctx)
+        h = h + _dense_ffn(gp["attn"], cfg, h)
+        per = cfg.attn_period
+        new_mm, new_md = [], []
+        i_moe = i_dense = 0
+        for j in range(1, per):
+            if j % 2 == 1:
+                lp = jax.tree.map(lambda a: a[i_moe], gp["mamba_moe"])
+                lc = jax.tree.map(lambda a: a[i_moe], mm_c)
+            else:
+                lp = jax.tree.map(lambda a: a[i_dense], gp["mamba_dense"])
+                lc = jax.tree.map(lambda a: a[i_dense], md_c)
+            delta, lc = ssm.mamba_decode(lp["mamba"], cfg, h, lc)
+            h = h + delta
+            if j % 2 == 1:
+                hn = L.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+                y, _ = moe_ffn(lp["moe"], cfg, hn)
+                h = h + y
+                new_mm.append(lc)
+                i_moe += 1
+            else:
+                h = h + _dense_ffn(lp, cfg, h)
+                new_md.append(lc)
+                i_dense += 1
+        stack = lambda cs: jax.tree.map(lambda *xs: jnp.stack(xs), *cs)
+        return h, (kc, vc, stack(new_mm), stack(new_md))
+
+    x, (new_k, new_v, new_mm, new_md) = L.scan_stack(
+        body, x,
+        ({"attn": params["attn"], "mamba_moe": params["mamba_moe"],
+          "mamba_dense": params["mamba_dense"]},
+         cache["k"], cache["v"], cache["mamba_moe"], cache["mamba_dense"]),
+        scan=cfg.scan_layers, remat=False)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    return logits.astype(jnp.float32), {
+        "k": new_k, "v": new_v, "mamba_moe": new_mm, "mamba_dense": new_md,
+        "len": cache["len"] + 1}

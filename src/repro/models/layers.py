@@ -1,0 +1,252 @@
+"""Shared model layers: norms, RoPE / M-RoPE, GQA attention (full + chunked
+flash form), MLPs. Everything is a pure function over plain dict params.
+
+Conventions:
+* activations run in ``cfg.compute_dtype`` (bf16 on TPU), softmax and norms
+  accumulate in f32;
+* attention is grouped-query throughout — q is [B, S, Hkv, G, Dh] against
+  k/v [B, S, Hkv, Dh], so KV replication is never materialized;
+* ``flash_attention`` is the O(L) -memory chunked form (online softmax over
+  KV blocks via lax.scan) used for the 32k prefill shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ----------------------------------------------------------------- init
+
+def dense_init(key, d_in, d_out, dtype, scale: float | None = None):
+    scale = (1.0 / d_in) ** 0.5 if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ rope
+
+def rope_freqs(head_dim: int, theta: float = 1e4) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def rope_cos_sin(positions, head_dim: int, theta: float = 1e4):
+    """positions [.., S] int -> cos/sin [.., S, head_dim//2] f32."""
+    ang = positions.astype(jnp.float32)[..., None] * rope_freqs(head_dim, theta)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [B, S, ..., Dh]; cos/sin [B, S, Dh//2] broadcast over head dims."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # insert singleton head dims so cos/sin broadcast against x[..., Dh//2]
+    for _ in range(x.ndim - cos.ndim):
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    c = cos.astype(jnp.float32)
+    s = sin.astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(x.dtype)
+
+
+def mrope_cos_sin(positions3, head_dim: int, sections: tuple,
+                  theta: float = 1e4):
+    """Qwen2-VL multimodal RoPE: positions3 [B, S, 3] (t, h, w) with the
+    rotary spectrum split into per-axis sections (|sections| = 3, summing
+    to head_dim//2). Text tokens use t = h = w = position."""
+    freqs = rope_freqs(head_dim, theta)                      # [Dh/2]
+    ang_axes = positions3.astype(jnp.float32)[..., None] \
+        * freqs[None, None, None, :]                          # [B, S, 3, Dh/2]
+    # frequency j takes its angle from axis sec_ids[j]
+    sec_ids = np_repeat_sections(sections)                   # [Dh/2] in {0,1,2}
+    ang = ang_axes[:, :, sec_ids, jnp.arange(sec_ids.shape[0])]  # [B, S, Dh/2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def np_repeat_sections(sections: tuple):
+    import numpy as _np
+    return jnp.asarray(_np.repeat(_np.arange(3), _np.asarray(sections)))
+
+
+# ------------------------------------------------------------- attention
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k, scale):
+    # q [B,Sq,Hkv,G,Dh], k [B,Sk,Hkv,Dh] -> [B,Hkv,G,Sq,Sk] f32
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def full_attention(q, k, v, *, causal: bool, q_offset=0):
+    """Quadratic GQA attention. q [B,Sq,Hkv,G,Dh]; k,v [B,Sk,Hkv,Dh]."""
+    scale = q.shape[-1] ** -0.5
+    scores = _gqa_scores(q, k, scale)
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qpos = jnp.arange(sq) + q_offset
+        mask = qpos[:, None] >= jnp.arange(sk)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+
+
+def flash_attention(q, k, v, *, causal: bool, kv_chunk: int = 1024):
+    """Chunked online-softmax attention — O(Sk/kv_chunk) memory.
+
+    Scans KV chunks carrying (m, l, acc); exact same math as
+    full_attention (the oracle in tests/test_models.py).
+    """
+    b, sq, hkv, g, dh = q.shape
+    sk = k.shape[1]
+    if sk % kv_chunk:
+        pad = -sk % kv_chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_valid = jnp.arange(sk + pad) < sk
+        sk += pad
+    else:
+        kv_valid = jnp.ones((sk,), bool)
+    scale = dh ** -0.5
+    n_chunks = sk // kv_chunk
+    k_ch = k.reshape(b, n_chunks, kv_chunk, hkv, dh)
+    v_ch = v.reshape(b, n_chunks, kv_chunk, hkv, dh)
+    valid_ch = kv_valid.reshape(n_chunks, kv_chunk)
+    qpos = jnp.arange(sq)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kc, vc, valid_c, c_idx = xs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q, kc,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = c_idx * kv_chunk + jnp.arange(kv_chunk)
+        mask = valid_c[None, :]
+        if causal:
+            mask = mask & (qpos[:, None] >= kpos[None, :])
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(q.dtype), vc,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), ()
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, sq, dh), jnp.float32)
+    xs = (jnp.moveaxis(k_ch, 1, 0), jnp.moveaxis(v_ch, 1, 0), valid_ch,
+          jnp.arange(n_chunks))
+    # checkpoint the chunk body: without it, the backward of this scan
+    # saves every chunk's probability matrix — i.e. the full O(Sq x Sk)
+    # attention matrix in f32, defeating the point of the flash form.
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, acc0), xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.transpose(out, (0, 3, 1, 2, 4)).astype(q.dtype)  # [B,Sq,Hkv,G,Dh]
+
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """Single-token decode: q [B,1,Hkv,G,Dh] vs cache [B,Smax,Hkv,Dh].
+
+    Entries past ``cache_len`` are masked; softmax is over the full padded
+    cache so the compiled shape is static (sharding-friendly).
+    """
+    scale = q.shape[-1] ** -0.5
+    s = _gqa_scores(q, k_cache, scale)                       # [B,Hkv,G,1,Smax]
+    smax = k_cache.shape[1]
+    mask = jnp.arange(smax)[None, :] < cache_len[:, None]    # [B, Smax]
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v_cache)
+
+
+# ------------------------------------------------------- sharding anchors
+
+def constrain_act(x, cfg):
+    """Anchor activations to batch-on-DP (+ optionally seq-on-model, i.e.
+    sequence parallelism) sharding. No-op when cfg.dp_axes is empty.
+    Applied at embed output and block boundaries so the scan carry keeps
+    batch sharded under GSPMD propagation — and, with sp_axis set, so the
+    per-layer saved activations are 1/TP-degree per device."""
+    if not cfg.dp_axes:
+        return x
+    from jax.sharding import PartitionSpec
+    dp = cfg.dp_axes if len(cfg.dp_axes) > 1 else cfg.dp_axes[0]
+    rest = [None] * (x.ndim - 1)
+    if cfg.sp_axis and x.ndim >= 3 and x.shape[1] >= 4096:
+        rest[0] = cfg.sp_axis
+    spec = PartitionSpec(dp, *rest)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_channels(x, cfg):
+    """Anchor a [B, ..., C] activation to batch-on-DP + channels-on-model
+    (TP) sharding — used inside mamba/mLSTM where the expanded inner dim
+    carries the TP split and reshapes/scans would otherwise lose it."""
+    m = cfg.model_axis_size
+    if not cfg.dp_axes or not m or x.shape[-1] % m:
+        return x
+    from jax.sharding import PartitionSpec
+    dp = cfg.dp_axes if len(cfg.dp_axes) > 1 else cfg.dp_axes[0]
+    spec = PartitionSpec(dp, *([None] * (x.ndim - 2)), "model")
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ------------------------------------------------------------ layer stacks
+
+def scan_stack(body, carry, stacked, *, scan: bool, remat: bool):
+    """Run ``body(carry, layer_params) -> (carry, y)`` over a stacked
+    [L, ...] params tree, either as lax.scan (O(1) program size — the
+    deployment path) or as an unrolled python loop (``scan=False`` — the
+    dry-run probe path, so HLO cost analysis sees every layer).
+
+    remat applies per layer in both modes, keeping probe FLOPs consistent
+    with the scan program's recompute."""
+    if remat:
+        body = jax.checkpoint(body)
+    if scan:
+        return jax.lax.scan(body, carry, stacked)
+    length = jax.tree.leaves(stacked)[0].shape[0]
+    ys = []
+    for i in range(length):
+        layer = jax.tree.map(lambda a: a[i], stacked)
+        carry, y = body(carry, layer)
+        ys.append(y)
+    if ys and ys[0] is not None and not (isinstance(ys[0], tuple)
+                                         and len(ys[0]) == 0):
+        ys = jax.tree.map(lambda *xs: jnp.stack(xs), *ys)
+    else:
+        ys = ()
+    return carry, ys
+
+
+# ------------------------------------------------------------------ mlps
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def gelu_mlp(x, w_up, b_up, w_down, b_down):
+    return jax.nn.gelu(x @ w_up + b_up, approximate=True) @ w_down + b_down

@@ -1,0 +1,81 @@
+"""Family dispatch: one uniform model API over all 10 architectures.
+
+    api = build_model(cfg)
+    params = api.init_params(key, cfg)
+    logits, aux = api.apply(params, cfg, batch)          # train/prefill
+    cache = api.init_cache(cfg, batch_size, max_len)
+    logits, cache = api.decode_step(params, cfg, batch, cache)
+
+``input_specs(cfg, shape)`` produces ShapeDtypeStruct stand-ins for every
+model input of a dry-run cell (tokens, labels, frames/patches for the stub
+frontends, caches for decode) — no device allocation, per the brief.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, hybrid, transformer, xlstm
+
+
+class ModelApi(NamedTuple):
+    init_params: Callable
+    apply: Callable
+    features: Callable     # apply minus the lm_head (for chunked CE)
+    init_cache: Callable
+    decode_step: Callable
+
+
+def build_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.family in ("dense", "moe", "vlm"):
+        m = transformer
+    elif cfg.family == "ssm":
+        m = xlstm
+    elif cfg.family == "hybrid":
+        m = hybrid
+    elif cfg.family == "encdec":
+        m = encdec
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return ModelApi(m.init_params, m.apply, m.features, m.init_cache,
+                    m.decode_step)
+
+
+# -------------------------------------------------------- input specs
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for one (arch x shape) dry-run cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), cfg.cdtype)
+            batch["positions"] = jax.ShapeDtypeStruct((b, s, 3), i32)
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frames, cfg.d_model), cfg.cdtype)
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": jax.ShapeDtypeStruct((b,), i32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    """Cache ShapeDtypeStructs for decode cells (eval_shape of init_cache)."""
+    api = build_model(cfg)
+    return jax.eval_shape(
+        lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+def params_specs(cfg: ModelConfig, key=None) -> Any:
+    api = build_model(cfg)
+    return jax.eval_shape(
+        lambda k: api.init_params(k, cfg), jax.random.PRNGKey(0))

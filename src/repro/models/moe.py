@@ -1,0 +1,147 @@
+"""Mixture-of-Experts FFN with capacity-based sort dispatch (GShard-style).
+
+Dense all-experts compute is ruled out at 60 experts; the TPU-friendly
+dropping formulation used here:
+
+  router top-k -> stable sort (token,expert) pairs by expert
+  -> rank within expert = position - first-occurrence (sorted order)
+  -> tokens with rank >= capacity are dropped (capacity_factor bounds it)
+  -> scatter into [E, capacity, d] buffers -> batched expert einsums
+  -> gather back with routing weights.
+
+Expert weights are stacked [E, ...] so EP shards axis 0 when E divides the
+model axis, else the ff dim is tensor-parallel (DESIGN.md §4). Shared
+experts (qwen2-moe) are a single always-on swiglu of n_shared * expert_ff.
+
+Returns (out, aux_loss); aux is the standard load-balance loss
+E * sum_e f_e * p_e, accumulated across layers by the caller's scan.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, swiglu
+
+
+def init_moe(key, cfg) -> dict:
+    d, e = cfg.d_model, cfg.n_experts
+    ff = cfg.expert_ff()
+    keys = jax.random.split(key, 8)
+    p = {
+        "router": dense_init(keys[0], d, e, jnp.float32),  # router in f32
+        "w_gate": jax.vmap(lambda k: dense_init(k, d, ff, cfg.pdtype))(
+            jax.random.split(keys[1], e)),
+        "w_up": jax.vmap(lambda k: dense_init(k, d, ff, cfg.pdtype))(
+            jax.random.split(keys[2], e)),
+        "w_down": jax.vmap(lambda k: dense_init(k, ff, d, cfg.pdtype))(
+            jax.random.split(keys[3], e)),
+    }
+    if cfg.n_shared_experts:
+        sff = cfg.n_shared_experts * ff
+        p["shared_gate"] = dense_init(keys[4], d, sff, cfg.pdtype)
+        p["shared_up"] = dense_init(keys[5], d, sff, cfg.pdtype)
+        p["shared_down"] = dense_init(keys[6], sff, d, cfg.pdtype)
+    return p
+
+
+def _constrain_experts(buf, cfg):
+    """Anchor [B, E, cap, d] buffers to DP x EP sharding when E divides
+    the model axis (set by the launcher); otherwise leave GSPMD to
+    propagate the per-expert TP sharding."""
+    m = cfg.model_axis_size
+    if not cfg.dp_axes or not m or buf.shape[1] % m:
+        return buf
+    from jax.sharding import PartitionSpec
+    dp = cfg.dp_axes if len(cfg.dp_axes) > 1 else cfg.dp_axes[0]
+    return jax.lax.with_sharding_constraint(
+        buf, PartitionSpec(dp, "model", None, None))
+
+
+def moe_ffn(p: dict, cfg, x: jax.Array):
+    """x [B, S, d] -> (y [B, S, d], aux_loss scalar).
+
+    Dispatch is **per sequence** (batched over the leading dim): sort,
+    rank and capacity are computed within each row, so every step of the
+    pipeline keeps the batch dim sharded on DP. A single global dispatch
+    (flatten -> argsort over B*S*k) forces GSPMD to materialize unsharded
+    [T*k, d] gather/scatter buffers — measured at >400 GB/device on the
+    398B config. Capacity is per sequence: cap = ceil(S*k/E * cf).
+    """
+    if x.ndim == 2:
+        x = x[:, None, :]
+        squeeze = True
+    else:
+        squeeze = False
+    from repro.models import layers as L
+    if cfg.sp_axis and x.shape[1] >= 4096:
+        # one explicit unshard of the SP axis at MoE entry: the dispatch's
+        # row-wise sort/gather otherwise makes GSPMD re-gather the
+        # sequence dim several times per layer (measured 45 GB/device of
+        # all-gathers on jamba x prefill_32k).
+        import dataclasses as _dc
+        x = L.constrain_act(x, _dc.replace(cfg, sp_axis=""))
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    cap = max(int(math.ceil(s * k / e * cfg.capacity_factor)), 1)
+
+    logits = (x.astype(jnp.float32) @ p["router"])             # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                     # [B, S, k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)     # renormalize
+
+    # load-balance aux (f_e: fraction routed, p_e: mean router prob)
+    f_e = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, e, dtype=jnp.float32), axis=2),
+        axis=(0, 1)) / k
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(f_e * p_e)
+
+    # ---- routing tables (all int32, [B, S*k] or [B, E*cap] — tiny). The
+    # heavy tensors only ever move through axis-1 take_along_axis gathers
+    # (embedding-lookup pattern), which GSPMD shards on the batch dim;
+    # multi-index scatters of [.., d] tensors fall back to replicated and
+    # were measured at several hundred GB/device.
+    flat_e = top_e.reshape(b, s * k)                           # [B, S*k]
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    first = jax.vmap(
+        lambda se: jnp.searchsorted(se, se, side="left"))(sorted_e)
+    rank = jnp.arange(s * k)[None, :] - first                  # pos in expert
+    keep = rank < cap
+    token_sorted = order // k                                  # [B, S*k]
+
+    b_iota = jnp.broadcast_to(jnp.arange(b)[:, None], (b, s * k))
+    slot_sorted = jnp.where(keep, sorted_e * cap + rank, e * cap)
+    # slot -> source token index (int table; OOB sentinel = s)
+    slot_token = jnp.full((b, e * cap + 1), s, jnp.int32).at[
+        b_iota, slot_sorted].set(token_sorted.astype(jnp.int32), mode="drop")
+    slot_token = slot_token[:, :e * cap]
+
+    # dispatch: gather tokens into [B, E, cap, d] via axis-1 lookup
+    x_pad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    buf = jnp.take_along_axis(
+        x_pad, jnp.minimum(slot_token, s)[..., None], axis=1)
+    buf = _constrain_experts(buf.reshape(b, e, cap, d), cfg)
+
+    # batched expert swiglu: [B, E, cap, d] x [E, d, ff]
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["w_gate"])) \
+        * jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    y_buf = jnp.einsum("becf,efd->becd", h, p["w_down"])       # [B,E,cap,d]
+
+    # combine: slot id per (token, k) in original order, then axis-1 gather
+    inv_order = jnp.argsort(order, axis=-1)
+    slot_orig = jnp.take_along_axis(slot_sorted, inv_order, axis=-1)
+    y_flat = jnp.concatenate(
+        [y_buf.reshape(b, e * cap, d),
+         jnp.zeros((b, 1, d), y_buf.dtype)], axis=1)           # drop sentinel
+    gathered = jnp.take_along_axis(y_flat, slot_orig[..., None], axis=1)
+    weighted = gathered * top_p.reshape(b, s * k, 1).astype(gathered.dtype)
+    out = jnp.sum(weighted.reshape(b, s, k, d), axis=2)
+
+    if cfg.n_shared_experts:
+        out = out + swiglu(x, p["shared_gate"], p["shared_up"],
+                           p["shared_down"])
+    return (out[:, 0] if squeeze else out), aux

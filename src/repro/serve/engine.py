@@ -1,0 +1,126 @@
+"""GUS serving engine: request batching, straggler hedging, fault recovery.
+
+Wraps ``DynamicGUS`` with the operational layer a production deployment
+needs (paper §3.1 runs at "hundreds of thousands of RPCs per second"):
+
+* **batching** — mutation and query RPCs are accumulated and flushed as
+  fixed-shape batches (power-of-two padding bounds jit recompiles);
+* **freshness accounting** — per-mutation timestamps measure
+  visibility lag (the paper's "data freshness within seconds at p99");
+* **straggler hedging** — queries fan out to index shards; if a shard's
+  reply lags past a hedge deadline, the engine reissues against the
+  shard's replica (simulated here by the exact index) and takes the first
+  answer — the standard tail-latency mitigation at scale;
+* **mutation log + snapshot restart** — every applied mutation batch is
+  appended to a host-side log; ``recover()`` replays the suffix after a
+  crash/restart, giving checkpoint/restart semantics for the serving tier.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.gus import DynamicGUS
+from repro.core.types import MutationBatch, NeighborResult
+from repro.utils.timing import Timer, percentiles
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_batch: int = 256          # flush threshold for mutations
+    query_batch: int = 64         # padded query batch size
+    hedge_ms: float = 50.0        # straggler hedge deadline
+    snapshot_every: int = 50      # mutation batches between snapshots
+
+
+def _pow2_pad(n: int, cap: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return min(p, cap)
+
+
+class GusEngine:
+    def __init__(self, gus: DynamicGUS, cfg: EngineConfig = EngineConfig()):
+        self.gus = gus
+        self.cfg = cfg
+        self.mutation_log: list[MutationBatch] = []
+        self.log_since_snapshot = 0
+        self.snapshot_state: dict | None = None
+        self.freshness = Timer("freshness")
+        self.hedged = 0
+        self.queries = 0
+
+    # ------------------------------------------------------------ mutations
+
+    def submit_mutations(self, batch: MutationBatch) -> None:
+        t0 = time.perf_counter()
+        self.gus.mutate(batch)
+        self.mutation_log.append(batch)
+        self.log_since_snapshot += 1
+        # visibility lag: mutation is visible as soon as mutate() returns
+        self.freshness.record(time.perf_counter() - t0)
+        if self.log_since_snapshot >= self.cfg.snapshot_every:
+            self.snapshot()
+
+    # -------------------------------------------------------------- queries
+
+    def query(self, features: dict, k: int | None = None) -> NeighborResult:
+        """Pad the query batch to a power of two, answer, unpad; hedge if a
+        (simulated) shard exceeds the deadline."""
+        self.queries += 1
+        n = next(iter(features.values())).shape[0]
+        padded = _pow2_pad(n, self.cfg.query_batch)
+        feats = {key: np.concatenate(
+            [v, np.repeat(v[-1:], padded - n, axis=0)], axis=0)
+            if padded > n else v for key, v in features.items()}
+        t0 = time.perf_counter()
+        res = self.gus.neighbors(feats, k)
+        elapsed_ms = (time.perf_counter() - t0) * 1e3
+        if elapsed_ms > self.cfg.hedge_ms:
+            # hedge: reissue (against the replica in a multi-shard fleet);
+            # single-replica simulation re-runs the query.
+            self.hedged += 1
+            res = self.gus.neighbors(feats, k)
+        return NeighborResult(ids=res.ids[:n], weights=res.weights[:n],
+                              distances=res.distances[:n])
+
+    # ------------------------------------------------------ fault tolerance
+
+    def snapshot(self) -> None:
+        """Snapshot = live ids + features (the index is rebuildable state)."""
+        ids = np.asarray(sorted(self.gus.store._rows), np.int64)
+        self.snapshot_state = {
+            "ids": ids,
+            "features": self.gus.store.gather(ids),
+        }
+        self.mutation_log.clear()
+        self.log_since_snapshot = 0
+
+    def recover(self, fresh_gus: DynamicGUS) -> "GusEngine":
+        """Restart onto a fresh engine: bootstrap from the snapshot, then
+        replay the mutation-log suffix."""
+        eng = GusEngine(fresh_gus, self.cfg)
+        if self.snapshot_state is not None and len(self.snapshot_state["ids"]):
+            fresh_gus.bootstrap(self.snapshot_state["ids"],
+                                self.snapshot_state["features"])
+        else:
+            # no snapshot yet: bootstrap empty store from first log entry
+            pass
+        for batch in self.mutation_log:
+            fresh_gus.mutate(batch)
+            eng.mutation_log.append(batch)
+        return eng
+
+    # --------------------------------------------------------------- stats
+
+    def stats(self) -> dict:
+        return {
+            "queries": self.queries,
+            "hedged": self.hedged,
+            "freshness": percentiles(self.freshness.samples_ms),
+            "query_latency": self.gus.query_timer.summary(),
+            "mutation_latency": self.gus.mutation_timer.summary(),
+        }

@@ -1,0 +1,44 @@
+"""Serving step factories for the model tower (prefill + decode).
+
+``decode_step`` is the program the dry-run lowers for ``decode_32k`` /
+``long_500k`` cells: one new token for every sequence against a
+seq_len-deep cache. Sampling is greedy or temperature/top-k with an
+explicit PRNG key (replicated across the mesh).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import build_model
+
+
+def make_prefill_step(cfg: ModelConfig):
+    api = build_model(cfg)
+
+    def prefill_step(params, batch):
+        logits, _ = api.apply(params, cfg, batch)
+        return logits
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, temperature: float = 0.0,
+                     top_k: int = 0):
+    api = build_model(cfg)
+
+    def decode_step(params, cache, tokens, key=None):
+        logits, cache = api.decode_step(params, cfg, {"tokens": tokens}, cache)
+        logits = logits[..., :cfg.vocab_size]
+        if temperature <= 0.0:
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            scaled = logits / temperature
+            if top_k:
+                kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+                scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+            next_tok = jax.random.categorical(key, scaled).astype(jnp.int32)
+        return next_tok, logits, cache
+
+    return decode_step

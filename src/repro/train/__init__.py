@@ -1,0 +1,2 @@
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   clip_by_global_norm, warmup_cosine)

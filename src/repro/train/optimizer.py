@@ -1,0 +1,89 @@
+"""Pure-JAX AdamW with schedules and global-norm clipping.
+
+No optax in this environment, so the optimizer is its own substrate:
+
+* moments can be kept in ``bf16`` (``moment_dtype``) — at the 100B+ configs
+  fp32 moments alone (8 bytes/param) exceed a 256-chip v5e pod's HBM, so the
+  giant configs run with bf16 moments + stochastic-free rounding on update
+  (see DESIGN.md §5);
+* state is a plain pytree ``{step, m, v}`` so it shards/checkpoints with the
+  same PartitionSpecs as the parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float | Callable = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float | None = 1.0
+    moment_dtype: jnp.dtype = jnp.float32
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable:
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return schedule
+
+
+def adamw_init(params, cfg: AdamWConfig) -> dict:
+    zeros = lambda p: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, cfg.moment_dtype), p)
+    return {"step": jnp.zeros((), jnp.int32), "m": zeros(params), "v": zeros(params)}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(grads, state: dict, params, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    metrics = {}
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        metrics["grad_norm"] = gnorm
+    step = state["step"] + 1
+    lr = cfg.lr(step) if callable(cfg.lr) else jnp.float32(cfg.lr)
+    metrics["lr"] = lr
+    b1, b2 = jnp.float32(cfg.b1), jnp.float32(cfg.b2)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+        step_dir = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        if cfg.weight_decay:
+            step_dir = step_dir + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step_dir
+        return (new_p.astype(p.dtype), m32.astype(cfg.moment_dtype),
+                v32.astype(cfg.moment_dtype))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_params, {"step": step, "m": new_m, "v": new_v}, metrics

@@ -1,0 +1,35 @@
+"""Pytree helpers shared by train/serve/checkpoint substrates."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_param_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_size_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    """Cast all inexact leaves to ``dtype`` (leave ints/bools alone)."""
+    def _cast(x):
+        if jnp.issubdtype(jnp.asarray(x).dtype, jnp.inexact):
+            return jnp.asarray(x, dtype)
+        return x
+    return jax.tree.map(_cast, tree)
+
+
+def tree_zeros_like(tree, dtype=None):
+    return jax.tree.map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests must see the default single CPU device (the 512-device override is
+# the dry-run's business only — see src/repro/launch/dryrun.py)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,163 @@
+"""ANN substrate: exact-index semantics, quantized-index recall vs brute,
+dynamic mutation behavior, anisotropic k-means + SOAR invariants."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ann.brute import BruteIndex
+from repro.ann.partition import anisotropic_cost, assign_partitions, kmeans
+from repro.ann.quantize import encode, lut_scores, query_lut, train_codebooks
+from repro.ann.scann import ScannConfig, ScannIndex
+from repro.ann.sparse import count_sketch, sparse_dot_many_many
+from repro.core import BucketConfig
+from repro.core.embedding import EmbeddingGenerator
+from repro.data.synthetic import OGB_ARXIV_LIKE, make_dataset
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    data = dataclasses.replace(OGB_ARXIV_LIKE, n_points=1200, n_clusters=15)
+    ids, feats, cluster = make_dataset(data)
+    gen = EmbeddingGenerator.create(
+        data.spec, BucketConfig(dense_tables=8, dense_bits=10,
+                                scalar_widths=(2.0,)))
+    return ids, gen(feats), cluster
+
+
+def test_brute_update_changes_results(corpus):
+    ids, emb, _ = corpus
+    idx = BruteIndex(emb.k)
+    idx.upsert(ids[:100], emb[:100])
+    before, _ = idx.search(emb[:1], 5)
+    # update point 0 to a far-away embedding (another point's)
+    idx.upsert(ids[:1], emb[500:501])
+    after, dists = idx.search(emb[500:501], 1)
+    assert after[0, 0] == 0 and dists[0, 0] < 0
+
+
+def test_brute_delete_then_query(corpus):
+    ids, emb, _ = corpus
+    idx = BruteIndex(emb.k)
+    idx.upsert(ids[:50], emb[:50])
+    assert idx.delete(ids[:10]) == 10
+    got, _ = idx.search(emb[:5], 50)
+    live = set(got[got >= 0].tolist())
+    assert not live & set(range(10))
+    assert len(idx) == 40
+
+
+def test_scann_tie_aware_recall(corpus):
+    ids, emb, _ = corpus
+    brute = BruteIndex(emb.k)
+    brute.upsert(ids, emb)
+    scann = ScannIndex(emb.k, ScannConfig(
+        d_proj=64, n_partitions=16, pq_subspaces=8, nprobe=12, reorder=256))
+    scann.build(ids, emb)
+    bids, bd = brute.search(emb[:60], 6)
+    sids, sd = scann.search(emb[:60], 6)
+    ok = tot = 0
+    for r in range(60):
+        kth = bd[r][bids[r] >= 0][:6].max()
+        got = sd[r][sids[r] >= 0]
+        tot += min(6, (bd[r] < 0).sum())
+        ok += ((got <= kth) & (got < 0)).sum()
+    assert ok / max(tot, 1) > 0.9
+
+
+def test_scann_dynamic_insert_visible(corpus):
+    ids, emb, _ = corpus
+    scann = ScannIndex(emb.k, ScannConfig(
+        d_proj=64, n_partitions=8, pq_subspaces=8, nprobe=8, reorder=128))
+    scann.build(ids[:800], emb[:800])
+    probe = emb[900:901]
+    before, _ = scann.search(probe, 5)
+    assert 900 not in set(before[before >= 0].tolist())
+    scann.upsert(ids[900:901], emb[900:901])
+    after, dists = scann.search(probe, 5)
+    assert after[0, 0] == 900  # its own embedding must now be nearest
+    scann.delete([900])
+    gone, _ = scann.search(probe, 5)
+    assert 900 not in set(gone[gone >= 0].tolist())
+
+
+def test_scann_kernel_path_matches(corpus):
+    ids, emb, _ = corpus
+    base = ScannConfig(d_proj=64, n_partitions=8, pq_subspaces=8, nprobe=4,
+                       reorder=64)
+    a = ScannIndex(emb.k, base)
+    a.build(ids[:500], emb[:500])
+    b = ScannIndex(emb.k, dataclasses.replace(base, use_kernels=True))
+    b.build(ids[:500], emb[:500])
+    _, da = a.search(emb[:8], 8)
+    _, db = b.search(emb[:8], 8)
+    np.testing.assert_array_equal(da, db)
+
+
+def test_count_sketch_preserves_dots(corpus):
+    _, emb, _ = corpus
+    exact = np.asarray(sparse_dot_many_many(emb[:30], emb[:200]))
+    sk = count_sketch(emb[:200], d_proj=512)
+    approx = np.asarray(sk[:30] @ sk.T)
+    # unbiased estimator: correlation should be strong at d_proj=512
+    c = np.corrcoef(exact.ravel(), approx.ravel())[0, 1]
+    assert c > 0.9
+
+
+def test_anisotropic_cost_penalizes_parallel_error():
+    x = jnp.asarray([[1.0, 0.0]])
+    c_par = jnp.asarray([[0.5, 0.0]])   # error parallel to x
+    c_orth = jnp.asarray([[1.0, 0.5]])  # same magnitude, orthogonal
+    plain_p = anisotropic_cost(x, c_par, 1.0)[0, 0]
+    plain_o = anisotropic_cost(x, c_orth, 1.0)[0, 0]
+    assert abs(plain_p - plain_o) < 1e-6
+    aniso_p = anisotropic_cost(x, c_par, 4.0)[0, 0]
+    aniso_o = anisotropic_cost(x, c_orth, 4.0)[0, 0]
+    assert aniso_p > aniso_o
+
+
+def test_soar_secondary_differs_and_decorrelates():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(200, 16)), jnp.float32)
+    cents = kmeans(x, 8, iters=8)
+    p1, p2 = assign_partitions(x, cents, eta=1.0, soar_lambda=1.0)
+    assert (np.asarray(p1) != np.asarray(p2)).all()
+
+
+def test_pq_reconstruction_and_lut():
+    # random gaussian data is PQ's worst case; use the index's default
+    # rate (8 subspaces) and check the rate/quality monotonicity too.
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(500, 32)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(3, 32)), jnp.float32)
+    exact = np.asarray(q @ x.T)
+
+    def corr(m, n_centers):
+        books = train_codebooks(x, m=m, n_centers=n_centers, iters=6)
+        codes = encode(x, books)
+        lut = query_lut(q, books)
+        approx = np.stack([np.asarray(lut_scores(lut[i], codes))
+                           for i in range(3)])
+        return np.corrcoef(exact.ravel(), approx.ravel())[0, 1]
+
+    low, high = corr(4, 16), corr(8, 64)
+    assert high > 0.85
+    assert high > low  # more bits -> better reconstruction
+
+
+def test_anisotropic_pq_beats_plain_on_dot_error():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(600, 32)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(32, 32)), jnp.float32)
+    errs = {}
+    for eta in (1.0, 4.0):
+        books = train_codebooks(x, m=4, n_centers=16, iters=8, eta=eta)
+        codes = encode(x, books)
+        lut = query_lut(q, books)
+        approx = np.stack([np.asarray(lut_scores(lut[i], codes))
+                           for i in range(q.shape[0])])
+        exact = np.asarray(q @ x.T)
+        errs[eta] = float(np.mean((approx - exact) ** 2))
+    # score-aware loss should not be (much) worse for dot products
+    assert errs[4.0] <= errs[1.0] * 1.1

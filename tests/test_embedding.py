@@ -1,0 +1,104 @@
+"""Embedding Generator properties: determinism, IDF weighting, Filter-P
+semantics, canonical sparse form. Hypothesis pins the invariants."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BucketConfig
+from repro.core.embedding import EmbeddingGenerator
+from repro.core.idf import build_filter_table, build_idf_table
+from repro.core.types import PAD_INDEX, sort_sparse
+from repro.data.synthetic import OGB_ARXIV_LIKE, OGB_PRODUCTS_LIKE, make_dataset
+
+
+def _gen(cfg_data, **bucket_kw):
+    ids, feats, cluster = make_dataset(cfg_data)
+    bcfg = BucketConfig(**bucket_kw)
+    return ids, feats, EmbeddingGenerator.create(cfg_data.spec, bcfg)
+
+
+def test_embedding_is_deterministic_and_local():
+    data = dataclasses.replace(OGB_ARXIV_LIKE, n_points=128)
+    _, feats, gen = _gen(data, dense_tables=4, dense_bits=8)
+    a = gen(feats)
+    b = gen({k: v.copy() for k, v in feats.items()})
+    np.testing.assert_array_equal(a.indices, b.indices)
+    np.testing.assert_array_equal(a.values, b.values)
+    # locality: embedding of a subset == subset of embeddings
+    sub = gen({k: v[:10] for k, v in feats.items()})
+    np.testing.assert_array_equal(np.asarray(sub.indices),
+                                  np.asarray(a.indices[:10]))
+
+
+def test_set_features_produce_buckets():
+    data = dataclasses.replace(OGB_PRODUCTS_LIKE, n_points=64)
+    _, feats, gen = _gen(data, dense_tables=4, dense_bits=8, set_tables=4)
+    emb = gen(feats)
+    assert int(np.asarray(emb.nnz()).min()) >= 4  # minhash buckets exist
+
+
+def test_idf_downweights_popular_buckets():
+    data = dataclasses.replace(OGB_ARXIV_LIKE, n_points=256)
+    _, feats, gen = _gen(data, dense_tables=4, dense_bits=4)  # few buckets
+    bid, valid = gen.buckets(feats)
+    bid, valid = np.asarray(bid), np.asarray(valid)
+    idf = build_idf_table(bid, valid, 256, size=10_000)
+    uniq, counts = np.unique(bid[valid], return_counts=True)
+    w = np.asarray(idf.lookup(jnp.asarray(uniq)))
+    # rarer bucket -> weight >= weight of any more-popular bucket
+    order = np.argsort(counts)
+    assert (np.diff(w[order]) <= 1e-5).all()
+
+
+def test_filter_removes_top_percent():
+    data = dataclasses.replace(OGB_ARXIV_LIKE, n_points=256)
+    _, feats, gen = _gen(data, dense_tables=4, dense_bits=4)
+    bid, valid = gen.buckets(feats)
+    bid, valid = np.asarray(bid), np.asarray(valid)
+    ft = build_filter_table(bid, valid, percent=20)
+    uniq, counts = np.unique(bid[valid], return_counts=True)
+    keep = np.asarray(ft.keep_mask(jnp.asarray(uniq)))
+    dropped = counts[~keep]
+    kept = counts[keep]
+    assert (~keep).sum() == int(np.ceil(uniq.size * 0.2))
+    assert dropped.min() >= kept.max() - 1  # most popular were dropped
+
+
+def test_filtered_embedding_has_zero_weight():
+    data = dataclasses.replace(OGB_ARXIV_LIKE, n_points=128)
+    ids, feats, gen = _gen(data, dense_tables=4, dense_bits=4)
+    bid, valid = gen.buckets(feats)
+    ft = build_filter_table(np.asarray(bid), np.asarray(valid), percent=50)
+    gen2 = gen.reload(filter_table=ft)
+    emb = gen2(feats)
+    assert int(np.asarray(emb.nnz()).sum()) \
+        < int(np.asarray(gen(feats).nnz()).sum())
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_sort_sparse_canonical(data):
+    n = data.draw(st.integers(1, 8))
+    k = data.draw(st.integers(1, 10))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    idx = rng.integers(0, 50, (n, k)).astype(np.uint32)
+    val = rng.random((n, k)).astype(np.float32)
+    val[rng.random((n, k)) < 0.4] = 0.0
+    sp = sort_sparse(jnp.asarray(idx), jnp.asarray(val))
+    si, sv = np.asarray(sp.indices), np.asarray(sp.values)
+    # sorted rows, zero values always carry PAD_INDEX, dot preserved
+    assert (np.diff(si.astype(np.uint64), axis=-1) >= 0).all()
+    assert ((sv == 0) == (si == PAD_INDEX)).all()
+    for r in range(n):
+        want, got = {}, {}
+        for i, v in zip(idx[r], val[r]):
+            if v != 0:
+                want[int(i)] = want.get(int(i), 0.0) + float(v)
+        for i, v in zip(si[r], sv[r]):
+            if v != 0:
+                got[int(i)] = got.get(int(i), 0.0) + float(v)
+        assert got.keys() == want.keys()
+        for key in want:
+            assert abs(got[key] - want[key]) < 1e-5

@@ -1,0 +1,56 @@
+"""Graph assembly + metrics + Grale helpers."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import (GraphAccumulator, edge_sets_equal,
+                              edge_weight_percentiles, frac_above)
+from repro.core.grale import _split_large_buckets, top_k_per_point
+from repro.core.types import NeighborResult
+
+
+def test_accumulator_dedups_and_canonicalizes():
+    acc = GraphAccumulator()
+    res = NeighborResult(
+        ids=np.asarray([[2, 3, -1]]), weights=np.asarray([[0.9, 0.4, -np.inf]]),
+        distances=np.zeros((1, 3), np.float32))
+    acc.add_result(np.asarray([1]), res)
+    res2 = NeighborResult(
+        ids=np.asarray([[1]]), weights=np.asarray([[0.7]]),
+        distances=np.zeros((1, 1), np.float32))
+    acc.add_result(np.asarray([2]), res2)  # duplicate edge (1,2), lower w
+    pairs, weights = acc.edges()
+    assert pairs.tolist() == [[1, 2], [1, 3]]
+    assert weights[0] == np.float32(0.9)   # max weight kept
+
+
+def test_edge_sets_equal():
+    assert edge_sets_equal([[1, 2], [3, 4]], [[4, 3], [2, 1]])
+    assert not edge_sets_equal([[1, 2]], [[1, 3]])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(0, 1), min_size=1, max_size=200))
+def test_percentiles_monotone(ws):
+    stats = edge_weight_percentiles(np.asarray(ws))
+    keys = [k for k in stats if k.startswith("p")]
+    vals = [stats[k] for k in sorted(keys, key=lambda s: int(s[1:]))]
+    assert all(a <= b + 1e-9 for a, b in zip(vals, vals[1:]))
+    assert 0.0 <= frac_above(np.asarray(ws), 0.5) <= 1.0
+
+
+def test_top_k_per_point_keeps_best():
+    pairs = np.asarray([[0, 1], [0, 2], [0, 3], [1, 2]])
+    weights = np.asarray([0.9, 0.1, 0.8, 0.5], np.float32)
+    keep = top_k_per_point(pairs, weights, 4, k=2)
+    kept = {tuple(p) for p in pairs[keep].tolist()}
+    assert (0, 1) in kept and (0, 3) in kept  # point 0's best two
+    assert (1, 2) in kept                      # point 1/2's best
+
+
+def test_bucket_split_bounds_sizes():
+    rng = np.random.default_rng(0)
+    bucket_of = np.zeros(100, np.uint64)  # all in one bucket
+    out = _split_large_buckets(bucket_of, 10, rng)
+    _, counts = np.unique(out, return_counts=True)
+    assert counts.max() <= 10 + 10  # random split: approximately bounded
+    assert len(counts) >= 10

@@ -1,0 +1,100 @@
+"""Per-kernel allclose vs the pure-jnp oracles, swept over shapes/dtypes."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.types import PAD_INDEX
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+def _sparse_rows(n, k, pad_frac=0.3, vocab=64):
+    idx = RNG.integers(0, vocab, (n, k)).astype(np.uint32)
+    val = RNG.random((n, k)).astype(np.float32) + 0.1
+    pad = RNG.random((n, k)) < pad_frac
+    idx[pad] = PAD_INDEX
+    val[pad] = 0.0
+    order = np.argsort(idx, axis=-1)
+    return (jnp.asarray(np.take_along_axis(idx, order, -1)),
+            jnp.asarray(np.take_along_axis(val, order, -1)))
+
+
+@pytest.mark.parametrize("b,m,c,n", [(1, 4, 16, 64), (3, 8, 256, 1000),
+                                     (2, 16, 256, 333)])
+def test_pq_score(b, m, c, n):
+    lut = jnp.asarray(RNG.normal(size=(b, m, c)), jnp.float32)
+    codes = jnp.asarray(RNG.integers(0, c, (n, m)), jnp.uint8)
+    np.testing.assert_allclose(ops.pq_score(lut, codes),
+                               ref.pq_score_ref(lut, codes), rtol=1e-5)
+
+
+def test_pq_score_batched():
+    b, m, c, n = 3, 8, 256, 500
+    lut = jnp.asarray(RNG.normal(size=(b, m, c)), jnp.float32)
+    codes = jnp.asarray(RNG.integers(0, c, (b, n, m)), jnp.uint8)
+    got = ops.pq_score_batched(lut, codes)
+    want = jnp.stack([ref.pq_score_ref(lut[i:i+1], codes[i])[0]
+                      for i in range(b)])
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@pytest.mark.parametrize("bq,kq,n,kd", [(1, 4, 32, 4), (5, 13, 777, 13),
+                                        (2, 8, 129, 16)])
+def test_sparse_dot(bq, kq, n, kd):
+    qi, qv = _sparse_rows(bq, kq)
+    di, dv = _sparse_rows(n, kd)
+    np.testing.assert_allclose(ops.sparse_dot(qi, qv, di, dv),
+                               ref.sparse_dot_ref(qi, qv, di, dv), rtol=1e-5)
+
+
+def test_sparse_dot_bf16_values():
+    qi, qv = _sparse_rows(3, 8)
+    di, dv = _sparse_rows(100, 8)
+    got = ops.sparse_dot(qi, qv.astype(jnp.bfloat16), di,
+                         dv.astype(jnp.bfloat16))
+    want = ref.sparse_dot_ref(qi, qv.astype(jnp.bfloat16), di,
+                              dv.astype(jnp.bfloat16))
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=1e-2)
+
+
+def test_sparse_dot_batched():
+    b, r, k = 4, 50, 8
+    qi, qv = _sparse_rows(b, k)
+    di, dv = _sparse_rows(b * r, k)
+    di = di.reshape(b, r, k)
+    dv = dv.reshape(b, r, k)
+    got = ops.sparse_dot_batched(qi, qv, di, dv)
+    want = jnp.stack([ref.sparse_dot_ref(qi[i:i+1], qv[i:i+1],
+                                         di[i], dv[i])[0] for i in range(b)])
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@pytest.mark.parametrize("b,n,k", [(1, 16, 1), (4, 333, 7), (2, 64, 64)])
+def test_topk_select(b, n, k):
+    scores = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32)
+    gv, gi = ops.topk_select(scores, k)
+    wv, wi = ref.topk_ref(scores, k)
+    np.testing.assert_allclose(gv, wv, rtol=1e-6)
+    np.testing.assert_array_equal(gi, wi)
+
+
+def test_topk_with_ties_matches_lax():
+    scores = jnp.asarray(np.repeat(RNG.normal(size=(2, 8)), 4, axis=1),
+                         jnp.float32)
+    gv, gi = ops.topk_select(scores, 5)
+    wv, wi = ref.topk_ref(scores, 5)
+    np.testing.assert_array_equal(gi, wi)
+
+
+def test_scorer_mlp_matches_core_scorer():
+    from repro.core.scorer import scorer_apply, scorer_init
+    from repro.core.types import FeatureSpec
+    spec = FeatureSpec(dense={"a": 8}, sets={"s": 4}, scalars=("x",))
+    params = scorer_init(jax.random.PRNGKey(0), spec)
+    feats = jnp.asarray(RNG.normal(size=(130, params["w0"].shape[0])),
+                        jnp.float32)
+    got = ops.scorer_mlp(feats, params)
+    np.testing.assert_allclose(got, scorer_apply(params, feats),
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,91 @@
+"""Paper Lemma 4.1: for any point p, the neighborhood of p is exactly the
+same in Grale and Dynamic GUS if we retrieve all points with negative
+distance from ScaNN.
+
+We pin the exact set equality: {q : Dist(p,q) < 0} == {q : p,q share a
+bucket ID} == Grale's scoring pairs — on synthetic corpora and under
+hypothesis-generated random bucket assignments.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ann.brute import BruteIndex
+from repro.core import BucketConfig
+from repro.core.embedding import EmbeddingGenerator
+from repro.core.grale import GraleConfig, scoring_pairs
+from repro.data.synthetic import OGB_ARXIV_LIKE, make_dataset
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    cfg = dataclasses.replace(OGB_ARXIV_LIKE, n_points=400, n_clusters=12)
+    ids, feats, cluster = make_dataset(cfg)
+    bcfg = BucketConfig(dense_tables=6, dense_bits=8, scalar_widths=(2.0,))
+    gen = EmbeddingGenerator.create(cfg.spec, bcfg)
+    return ids, feats, gen
+
+
+def test_negative_distance_iff_shared_bucket(corpus):
+    ids, feats, gen = corpus
+    emb = gen(feats)
+    bid, valid = gen.buckets(feats)
+    bid, valid = np.asarray(bid), np.asarray(valid)
+
+    index = BruteIndex(gen.k_max)
+    index.upsert(ids, emb)
+    results = index.search_threshold(emb[:60], tau=0.0)
+
+    bucket_sets = [set(bid[i][valid[i]].tolist()) for i in range(len(ids))]
+    for i, (got_ids, dists) in enumerate(results):
+        expect = {int(j) for j in range(len(ids))
+                  if bucket_sets[i] & bucket_sets[j]}
+        assert set(got_ids.tolist()) == expect, f"query {i}"
+        assert (dists < 0).all()
+
+
+def test_equals_grale_scoring_pairs(corpus):
+    """End-to-end edge-set equality with the Grale baseline (Fig. 3)."""
+    ids, feats, gen = corpus
+    emb = gen(feats)
+    bid, valid = gen.buckets(feats)
+    bid, valid = np.asarray(bid), np.asarray(valid)
+
+    pairs = scoring_pairs(bid, valid, GraleConfig(bucket_split=None))
+    grale_edges = {tuple(p) for p in pairs.tolist()}
+
+    index = BruteIndex(gen.k_max)
+    index.upsert(ids, emb)
+    gus_edges = set()
+    results = index.search_threshold(emb, tau=0.0)
+    for i, (got_ids, _) in enumerate(results):
+        for j in got_ids.tolist():
+            if i != j:
+                gus_edges.add((min(i, j), max(i, j)))
+    assert gus_edges == grale_edges
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_lemma_on_random_bucket_assignments(data):
+    """Property form: random bucket IDs, exact equality must still hold."""
+    n = data.draw(st.integers(4, 24))
+    k = data.draw(st.integers(1, 5))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    bid = rng.integers(0, 10, size=(n, k)).astype(np.uint32)
+    valid = rng.random((n, k)) < 0.9
+
+    import jax.numpy as jnp
+    from repro.core.types import sort_sparse
+    vals = np.where(valid, 1.0, 0.0).astype(np.float32)
+    emb = sort_sparse(jnp.asarray(bid), jnp.asarray(vals))
+
+    index = BruteIndex(k)
+    index.upsert(np.arange(n), emb)
+    results = index.search_threshold(emb, tau=0.0)
+    bucket_sets = [set(bid[i][valid[i]].tolist()) for i in range(n)]
+    for i, (got_ids, _) in enumerate(results):
+        expect = {j for j in range(n) if bucket_sets[i] & bucket_sets[j]}
+        assert set(got_ids.tolist()) == expect

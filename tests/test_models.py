@@ -1,0 +1,178 @@
+"""Per-arch smoke tests (reduced configs, CPU) + layer-level equivalences:
+flash vs full attention, mLSTM parallel vs recurrent, decode parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, applicable
+from repro.configs.registry import ARCHS, get_config, reduced_config
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.model import build_model
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+RNG = np.random.default_rng(0)
+
+
+def _batch_for(cfg, b, s):
+    batch = {"tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (b, s))),
+             "labels": jnp.asarray(RNG.integers(0, cfg.vocab_size, (b, s)))}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.asarray(
+            RNG.normal(size=(b, min(cfg.n_patches, s), cfg.d_model)) * 0.1,
+            jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        batch["positions"] = jnp.broadcast_to(
+            pos[..., None], (b, s, 3)).astype(jnp.int32)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            RNG.normal(size=(b, cfg.n_frames, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_forward_and_train_step(arch):
+    """Reduced config of the same family: one forward + one train step,
+    asserting output shapes and finiteness (the brief's smoke contract)."""
+    cfg = reduced_config(arch)
+    api = build_model(cfg)
+    b, s = 2, 16
+    batch = _batch_for(cfg, b, s)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    logits, aux = api.apply(params, cfg, batch)
+    assert logits.shape == (b, s, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    opt_cfg = AdamWConfig(lr=1e-3)
+    params, opt_state = init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    new_params, new_opt, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually moved
+    delta = jax.tree.map(lambda a, b_: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b_.astype(jnp.float32)))),
+        params, new_params)
+    assert max(jax.tree.leaves(delta)) > 0
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_decode_step(arch):
+    cfg = reduced_config(arch)
+    api = build_model(cfg)
+    b = 2
+    cache = api.init_cache(cfg, b, 8)
+    params = api.init_params(jax.random.PRNGKey(1), cfg)
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        frames = jnp.asarray(RNG.normal(size=(b, cfg.n_frames, cfg.d_model)),
+                             jnp.float32)
+        cache = encdec.encode_prefill(params, cfg, frames, cache)
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (b,)))
+    logits, cache = api.decode_step(params, cfg, {"tokens": toks}, cache)
+    assert logits.shape == (b, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert int(cache["len"][0]) == 1
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "qwen2-moe-a2.7b",
+                                  "whisper-tiny", "jamba-1.5-large-398b",
+                                  "xlstm-1.3b"])
+def test_decode_matches_teacher_forced(arch):
+    cfg = reduced_config(arch)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=1000.0)  # no drops
+    api = build_model(cfg)
+    b, s = 2, 10
+    batch = _batch_for(cfg, b, s)
+    params = api.init_params(jax.random.PRNGKey(2), cfg)
+    tf_logits, _ = api.apply(params, cfg, batch)
+    cache = api.init_cache(cfg, b, s + 2)
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        cache = encdec.encode_prefill(params, cfg, batch["frames"], cache)
+    errs = []
+    for t in range(s):
+        dl, cache = api.decode_step(
+            params, cfg, {"tokens": batch["tokens"][:, t]}, cache)
+        errs.append(float(jnp.max(jnp.abs(dl - tf_logits[:, t]))))
+    assert max(errs) < 1e-3, errs
+
+
+def test_flash_matches_full_attention():
+    b, s, hkv, g, dh = 2, 64, 2, 2, 16
+    q = jnp.asarray(RNG.normal(size=(b, s, hkv, g, dh)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, s, hkv, dh)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, hkv, dh)), jnp.float32)
+    for causal in (True, False):
+        full = L.full_attention(q, k, v, causal=causal)
+        for chunk in (16, 24, 64):
+            flash = L.flash_attention(q, k, v, causal=causal, kv_chunk=chunk)
+            np.testing.assert_allclose(flash, full, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_matches_full():
+    b, smax, hkv, g, dh = 2, 32, 2, 2, 8
+    k = jnp.asarray(RNG.normal(size=(b, smax, hkv, dh)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, smax, hkv, dh)), jnp.float32)
+    q = jnp.asarray(RNG.normal(size=(b, 1, hkv, g, dh)), jnp.float32)
+    n = 20
+    out = L.decode_attention(q, k, v, jnp.full((b,), n))
+    want = L.full_attention(q, k[:, :n], v[:, :n], causal=False)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+def test_mlstm_parallel_matches_recurrent():
+    cfg = reduced_config("xlstm-1.3b")
+    p = ssm.init_mlstm(jax.random.PRNGKey(3), cfg)
+    b, s = 2, 12
+    x = jnp.asarray(RNG.normal(size=(b, s, cfg.d_model)) * 0.3, jnp.float32)
+    par = ssm.mlstm_train(p, cfg, x)
+    cache = ssm.mlstm_cache(cfg, b)
+    outs = []
+    for t in range(s):
+        o, cache = ssm.mlstm_decode(p, cfg, x[:, t:t + 1], cache)
+        outs.append(o[:, 0])
+    rec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(par, rec, rtol=5e-3, atol=5e-3)
+
+
+def test_mamba_train_matches_stepwise():
+    cfg = reduced_config("jamba-1.5-large-398b")
+    p = ssm.init_mamba(jax.random.PRNGKey(4), cfg)
+    b, s = 2, 9
+    x = jnp.asarray(RNG.normal(size=(b, s, cfg.d_model)) * 0.3, jnp.float32)
+    par = ssm.mamba_train(p, cfg, x)
+    cache = ssm.mamba_cache(cfg, b)
+    outs = []
+    for t in range(s):
+        o, cache = ssm.mamba_decode(p, cfg, x[:, t:t + 1], cache)
+        outs.append(o[:, 0])
+    rec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(par, rec, rtol=5e-3, atol=5e-3)
+
+
+def test_selective_scan_chunking_invariant():
+    b, l, di, ds = 2, 40, 8, 4
+    x = jnp.asarray(RNG.normal(size=(b, l, di)), jnp.float32)
+    dt = jnp.asarray(RNG.random(size=(b, l, di)) * 0.1, jnp.float32)
+    a = -jnp.asarray(RNG.random(size=(di, ds)) + 0.5, jnp.float32)
+    bm = jnp.asarray(RNG.normal(size=(b, l, ds)), jnp.float32)
+    cm = jnp.asarray(RNG.normal(size=(b, l, ds)), jnp.float32)
+    y8 = ssm.selective_scan(x, dt, a, bm, cm, chunk=8)
+    y40 = ssm.selective_scan(x, dt, a, bm, cm, chunk=40)
+    y7 = ssm.selective_scan(x, dt, a, bm, cm, chunk=7)  # padding path
+    np.testing.assert_allclose(y8, y40, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(y7, y40, rtol=1e-4, atol=1e-5)
+
+
+def test_long_500k_applicability_matrix():
+    """Skips match DESIGN.md §4: only ssm/hybrid serve long_500k."""
+    live = {a for a in ARCHS
+            if applicable(get_config(a), SHAPES["long_500k"])[0]}
+    assert live == {"xlstm-1.3b", "jamba-1.5-large-398b"}
+    for a in ARCHS:
+        assert applicable(get_config(a), SHAPES["train_4k"])[0]

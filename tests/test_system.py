@@ -1,0 +1,159 @@
+"""End-to-end Dynamic GUS behaviour: the paper's RPC surfaces, quality vs
+the Grale baseline, and the serving engine's fault-tolerance contract."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.ann.scann import ScannConfig
+from repro.core import (BucketConfig, DynamicGUS, GusConfig, MutationBatch,
+                        MUTATION_DELETE, MUTATION_INSERT, MUTATION_UPDATE)
+from repro.core.graph import (GraphAccumulator, edge_weight_percentiles,
+                              frac_above)
+from repro.core.grale import GraleConfig, grale_graph
+from repro.core.scorer import train_scorer
+from repro.data.stream import MutationStream, StreamConfig
+from repro.data.synthetic import OGB_ARXIV_LIKE, labeled_pairs, make_dataset
+from repro.serve.engine import EngineConfig, GusEngine
+
+DATA = dataclasses.replace(OGB_ARXIV_LIKE, n_points=1500, n_clusters=15)
+BUCKETS = BucketConfig(dense_tables=8, dense_bits=10, scalar_widths=(2.0,))
+
+
+@pytest.fixture(scope="module")
+def world():
+    ids, feats, cluster = make_dataset(DATA)
+    pf, lbl = labeled_pairs(feats, cluster, 3000, DATA.spec, seed=1)
+    scorer, losses = train_scorer(jax.random.PRNGKey(0), DATA.spec, pf, lbl,
+                                  steps=300)
+    assert losses[-1] < losses[0] * 0.8  # the model actually learned
+    return ids, feats, cluster, scorer
+
+
+def _gus(scorer, **kw):
+    defaults = dict(scann_nn=10, idf_size=0, filter_percent=0,
+                    scann=ScannConfig(d_proj=64, n_partitions=16,
+                                      nprobe=10, reorder=128))
+    defaults.update(kw)
+    return DynamicGUS(DATA.spec, BUCKETS, scorer, GusConfig(**defaults))
+
+
+def test_neighborhood_quality(world):
+    ids, feats, cluster, scorer = world
+    gus = _gus(scorer)
+    gus.bootstrap(ids, feats)
+    res = gus.neighbors_of_ids(ids[:40], k=5)
+    same = [cluster[n] == cluster[q]
+            for r, q in enumerate(ids[:40])
+            for n in res.ids[r] if n >= 0]
+    assert np.mean(same) > 0.8
+    assert np.isfinite(res.weights[res.ids >= 0]).all()
+
+
+def test_mutation_semantics(world):
+    ids, feats, cluster, scorer = world
+    gus = _gus(scorer)
+    gus.bootstrap(ids[:1000], {k: v[:1000] for k, v in feats.items()})
+    # insert 100 new, delete 50 old, update 50
+    kinds = np.concatenate([
+        np.full(100, MUTATION_INSERT), np.full(50, MUTATION_DELETE),
+        np.full(50, MUTATION_UPDATE)]).astype(np.int32)
+    mids = np.concatenate([ids[1000:1100], ids[:50], ids[100:150]])
+    mb = MutationBatch(kinds=kinds, ids=mids,
+                       features={k: v[mids % len(ids)]
+                                 for k, v in feats.items()})
+    gus.mutate(mb)
+    assert len(gus.index) == 1000 + 100 - 50
+    # deleted ids never appear in any neighborhood
+    res = gus.neighbors_of_ids(ids[200:240], k=10)
+    assert not set(res.ids[res.ids >= 0].tolist()) & set(ids[:50].tolist())
+    # inserted points are queryable
+    res2 = gus.neighbors({k: v[1000:1001] for k, v in feats.items()}, k=3)
+    assert res2.ids[0, 0] == 1000  # finds itself
+
+
+def test_gus_vs_grale_quality_and_cost(world):
+    """Paper §5.1 third experiment, faithfully: at Top-K=10 the two systems
+    produce high and comparable edge weights (on arxiv-like data GUS may be
+    *slightly lower*, as the paper reports), while GUS's scoring cost is a
+    fraction of Grale's — Grale scores every within-bucket pair regardless
+    of K."""
+    ids, feats, cluster, scorer = world
+    sub = 500
+    sub_feats = {k: v[:sub] for k, v in feats.items()}
+    gus = _gus(scorer, filter_percent=10)
+    gus.bootstrap(ids[:sub], sub_feats)
+    acc = GraphAccumulator()
+    res = gus.neighbors_of_ids(ids[:sub], k=10)
+    acc.add_result(ids[:sub], res)
+    _, gus_w = acc.edges()
+    gus_scored_pairs = sub * 10
+
+    bid, valid = gus.embedder.buckets(sub_feats)
+    from repro.core.grale import scoring_pairs
+    all_pairs = scoring_pairs(np.asarray(bid), np.asarray(valid),
+                              GraleConfig(bucket_split=32))
+    pairs, grale_w = grale_graph(
+        np.asarray(bid), np.asarray(valid), sub_feats, DATA.spec, scorer,
+        GraleConfig(bucket_split=32, top_k=10))
+    # quality: both produce strong median edges; GUS within paper's
+    # "slightly lower on arxiv" envelope
+    g_med = float(np.median(gus_w))
+    b_med = float(np.median(grale_w))
+    assert g_med > 0.5
+    assert frac_above(gus_w, 0.5) > frac_above(grale_w, 0.5) - 0.35
+    # cost asymmetry: Grale scored every within-bucket pair
+    assert all_pairs.shape[0] > 2 * gus_scored_pairs
+    stats = edge_weight_percentiles(gus_w)
+    assert stats["total_edges"] > 0
+
+
+def test_engine_snapshot_recovery(world):
+    ids, feats, cluster, scorer = world
+    gus = _gus(scorer)
+    stream = MutationStream(DATA, StreamConfig(batch_size=32, seed=5),
+                            bootstrap_fraction=0.5)
+    bids, bfeats = stream.bootstrap()
+    gus.bootstrap(bids, bfeats)
+    engine = GusEngine(gus, EngineConfig(snapshot_every=3))
+    for _, mb in zip(range(7), stream):
+        engine.submit_mutations(mb)
+    live_before = set(gus.store._rows)
+    # crash: recover onto a fresh engine, replay the log
+    fresh = _gus(scorer)
+    engine2 = engine.recover(fresh)
+    assert set(fresh.store._rows) == live_before
+    qids = np.asarray(sorted(live_before)[:8])
+    r1 = gus.neighbors_of_ids(qids, k=5)
+    r2 = fresh.neighbors_of_ids(qids, k=5)
+    # same live corpus => same exact neighbor distances for most queries
+    assert (r1.distances[r1.ids >= 0].sum()
+            == pytest.approx(r2.distances[r2.ids >= 0].sum(), rel=0.2))
+
+
+def test_engine_freshness_and_stats(world):
+    ids, feats, cluster, scorer = world
+    gus = _gus(scorer)
+    gus.bootstrap(ids[:500], {k: v[:500] for k, v in feats.items()})
+    engine = GusEngine(gus)
+    mb = MutationBatch(kinds=np.full(16, MUTATION_INSERT, np.int32),
+                       ids=ids[500:516],
+                       features={k: v[500:516] for k, v in feats.items()})
+    engine.submit_mutations(mb)
+    res = engine.query({k: v[500:501] for k, v in feats.items()}, k=3)
+    assert res.ids.shape == (1, 3)
+    stats = engine.stats()
+    assert stats["freshness"]["n"] == 1
+    assert stats["query_latency"]["n"] >= 1
+
+
+def test_periodic_reload_keeps_quality(world):
+    ids, feats, cluster, scorer = world
+    gus = _gus(scorer, idf_size=10_000, filter_percent=5)
+    gus.bootstrap(ids[:800], {k: v[:800] for k, v in feats.items()})
+    gus.periodic_reload()
+    res = gus.neighbors_of_ids(ids[:20], k=5)
+    same = [cluster[n] == cluster[q]
+            for r, q in enumerate(ids[:20]) for n in res.ids[r] if n >= 0]
+    assert np.mean(same) > 0.7

@@ -1,7 +1,20 @@
 """Paper Fig. 9: query-latency distribution of Dynamic GUS in a dynamic
 setting, swept over ScaNN-NN / IDF-S / Filter-P (sequential queries,
-wall-clock request-to-response, percentiles)."""
+wall-clock request-to-response, percentiles) — plus the scale-out sweep:
+per-request latency of the sharded backend over ``shards in {1, 2, 4}``.
+
+Run standalone for the multi-shard sweep (forces 4 host devices before jax
+initializes):
+
+    PYTHONPATH=src python -m benchmarks.latency [--smoke]
+"""
 from __future__ import annotations
+
+if __name__ == "__main__":
+    # must precede any jax import: the shard sweep needs >= 4 host devices
+    import os
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
 import numpy as np
 
@@ -11,6 +24,7 @@ from repro.core import DynamicGUS, GusConfig
 
 SWEEP = [(10, 0, 0), (10, 10_000, 10), (100, 0, 0), (100, 10_000, 10),
          (1000, 0, 10)]
+SHARD_SWEEP = (1, 2, 4)
 
 
 def run(dataset: str = "arxiv", n: int = 4000, queries: int = 200) -> list:
@@ -39,7 +53,57 @@ def run(dataset: str = "arxiv", n: int = 4000, queries: int = 200) -> list:
     return rows
 
 
+def run_sharded(dataset: str = "arxiv", n: int = 2000, queries: int = 100,
+                shards=SHARD_SWEEP, scann_nn: int = 10) -> list:
+    """Scale-out trajectory: the same workload against the sharded backend
+    at 1/2/4 index shards. Shard counts beyond the visible device count are
+    reported as skipped (run this module standalone to force 4 devices)."""
+    import jax
+
+    from repro.ann.sharded_index import ShardedConfig
+
+    ids, feats, cluster, spec, scorer, _ = corpus(dataset)
+    sub = {k: v[:n] for k, v in feats.items()}
+    rows = []
+    rng = np.random.default_rng(0)
+    sample = rng.choice(n, queries, replace=False)
+    for n_shards in shards:
+        if n_shards > len(jax.devices()):
+            emit(f"latency_sharded_{dataset}_s{n_shards}", 0.0,
+                 f"SKIP:need_{n_shards}_devices")
+            continue
+        gus = DynamicGUS(spec, BUCKET_CFG, scorer, GusConfig(
+            scann_nn=scann_nn, backend="sharded",
+            sharded=ShardedConfig(
+                n_shards=n_shards, d_proj=64,
+                n_partitions=max(16, n_shards * 8), nprobe_local=0,
+                reorder=max(128, scann_nn * 4), pq_m=8,
+                kmeans_iters=8, pq_iters=4)))
+        gus.bootstrap(ids[:n], sub)
+        gus.neighbors_of_ids(ids[:1], k=scann_nn)      # warm jit caches
+        gus.query_timer.samples_ms.clear()
+        for q in sample:
+            gus.neighbors_of_ids(ids[q:q + 1], k=scann_nn)
+        s = gus.query_timer.summary()
+        rows.append({"dataset": dataset, "shards": n_shards, **s})
+        emit(f"latency_sharded_{dataset}_s{n_shards}", s["p50_ms"] * 1e3,
+             f"p95_ms={s['p95_ms']:.1f};p99_ms={s['p99_ms']:.1f}")
+    return rows
+
+
 if __name__ == "__main__":
-    for ds in ("arxiv", "products"):
-        for r in run(ds):
-            print(r)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus / few queries (the CI lane)")
+    args = ap.parse_args()
+    if args.smoke:
+        run("arxiv", n=800, queries=30)
+        run_sharded("arxiv", n=800, queries=20, shards=(1, 2))
+    else:
+        for ds in ("arxiv", "products"):
+            for r in run(ds):
+                print(r)
+            for r in run_sharded(ds):
+                print(r)

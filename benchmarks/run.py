@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   grale_buckets— Fig. 7 (Bucket-S sweep)
   topk_compare — Fig. 5/8 (Top-K matched-output comparison)
   latency      — Fig. 9 (query latency distribution)
+  latency_sharded — scale-out: sharded backend over shards in {1,2,4}
   resources    — Fig. 10 (CPU time / max memory)
   mutations    — §5.2 insert/update/delete latencies
   kernels      — kernel microbenchmarks
@@ -48,6 +49,11 @@ def main() -> None:
                                   for ds in ("arxiv", "products")]),
         ("latency", lambda: [latency.run(ds, n=n_lat, queries=queries)
                              for ds in ("arxiv", "products")]),
+        # scale-out sweep: shard counts beyond the visible device count are
+        # emitted as SKIP rows (run benchmarks.latency standalone for 4)
+        ("latency_sharded",
+         lambda: [latency.run_sharded(ds, n=n_mid, queries=queries // 2)
+                  for ds in ("arxiv", "products")]),
         ("resources", lambda: [resources.run(ds, n=n_lat,
                                              queries=queries // 2)
                                for ds in ("arxiv", "products")]),

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Minimal CI: quick tier-1 lane (no subprocess-mesh tests) + a CPU latency
+# smoke that exercises the single- and multi-shard serving paths.
+#
+#   ./ci.sh          # quick lane
+#   ./ci.sh --full   # the whole tier-1 suite, slow tests included
+set -euo pipefail
+cd "$(dirname "$0")"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--full" ]]; then
+    python -m pytest -x -q
+else
+    python -m pytest -x -q -m "not slow"
+fi
+
+python -m benchmarks.latency --smoke

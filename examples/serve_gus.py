@@ -2,38 +2,46 @@
 batched requests — the paper's kind of system.
 
 Drives the full production path: offline bootstrap -> engine with request
-batching -> a mixed workload of mutation batches and batched neighborhood
-queries -> latency/freshness report (the paper's Fig. 9/10 shape).
+batching + replica hedging -> a mixed workload of mutation batches and
+batched neighborhood queries -> latency/freshness report (the paper's
+Fig. 9/10 shape). ``--sweep-shards`` replays the same workload against the
+sharded backend at 1/2/4 index shards (forcing 4 CPU host devices), so the
+report captures the scale-out trajectory, not just single-replica latency.
 
     PYTHONPATH=src python examples/serve_gus.py --requests 40
+    PYTHONPATH=src python examples/serve_gus.py --sweep-shards
 """
 import argparse
 import json
-
-import numpy as np
-
-from repro.launch.serve import build_engine
+import os
 
 
-def main():
+def parse_args():
     ap = argparse.ArgumentParser()
     ap.add_argument("--points", type=int, default=4000)
     ap.add_argument("--requests", type=int, default=40)
     ap.add_argument("--batch", type=int, default=16)
-    args = ap.parse_args()
+    ap.add_argument("--backend", choices=("scann", "brute", "sharded"),
+                    default="scann")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="index shards for --backend sharded")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="replica fleet backing straggler hedging")
+    ap.add_argument("--sweep-shards", action="store_true",
+                    help="run the workload at shards=1,2,4 (sharded "
+                         "backend) and report per-shard latency")
+    return ap.parse_args()
 
-    engine, stream, cluster = build_engine(
-        "arxiv", args.points, scann_nn=10, idf_size=10_000,
-        filter_percent=10)
-    print(f"[serve_gus] bootstrapped {len(engine.gus.index)} points")
 
+def drive(engine, stream, cluster, requests: int, batch: int):
+    import numpy as np
     rng = np.random.default_rng(0)
     quality = []
-    for i in range(args.requests):
+    for _ in range(requests):
         if rng.random() < 0.4:                      # mutation RPC batch
             engine.submit_mutations(next(stream))
         else:                                       # batched query RPC
-            qids = stream.query_ids(args.batch)
+            qids = stream.query_ids(batch)
             feats = engine.gus.store.gather(qids)
             res = engine.query(feats, k=10)
             same = [cluster[n % len(cluster)] == cluster[q % len(cluster)]
@@ -42,11 +50,35 @@ def main():
             quality.append(np.mean(same))
     stats = engine.stats()
     stats["mean_same_cluster"] = float(np.mean(quality))
-    print(json.dumps(stats, indent=1, default=str))
-    q = stats["query_latency"]
-    print(f"[serve_gus] query p50={q['p50_ms']:.1f}ms p99={q['p99_ms']:.1f}ms"
-          f" | quality={stats['mean_same_cluster']:.2f}"
-          f" | hedged={stats['hedged']}")
+    return stats
+
+
+def main():
+    args = parse_args()
+    sweep = (1, 2, 4) if args.sweep_shards else (args.shards,)
+    if max(sweep) > 1:
+        # must precede the first jax import (device count locks at init)
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            f"--xla_force_host_platform_device_count={max(4, max(sweep))}")
+    from repro.launch.serve import build_engine
+
+    backend = "sharded" if args.sweep_shards else args.backend
+    for shards in sweep:
+        engine, stream, cluster = build_engine(
+            "arxiv", args.points, scann_nn=10, idf_size=10_000,
+            filter_percent=10, backend=backend, shards=shards,
+            replicas=args.replicas)
+        tag = f"backend={backend} shards={shards}"
+        print(f"[serve_gus] bootstrapped {len(engine.gus.index)} points "
+              f"({tag})")
+        stats = drive(engine, stream, cluster, args.requests, args.batch)
+        print(json.dumps(stats, indent=1, default=str))
+        q = stats["query_latency"]
+        print(f"[serve_gus] {tag} query p50={q['p50_ms']:.1f}ms "
+              f"p99={q['p99_ms']:.1f}ms"
+              f" | quality={stats['mean_same_cluster']:.2f}"
+              f" | hedged={stats['hedged']}")
 
 
 if __name__ == "__main__":

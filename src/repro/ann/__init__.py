@@ -1,2 +1,3 @@
 from repro.ann.brute import BruteIndex
 from repro.ann.scann import ScannConfig, ScannIndex
+from repro.ann.sharded_index import ShardedConfig, ShardedGusIndex

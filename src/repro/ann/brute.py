@@ -80,6 +80,14 @@ class BruteIndex:
 
     # ------------------------------------------------------------ mutations
 
+    def build(self, ids: np.ndarray, emb: SparseBatch) -> None:
+        """(Re)load from scratch — protocol parity with the trained
+        backends (there is nothing to train for exact search)."""
+        self._alloc(self.capacity)
+        self.slot_of.clear()
+        self.free = list(range(self.capacity - 1, -1, -1))
+        self.upsert(ids, emb)
+
     def upsert(self, ids: np.ndarray, emb: SparseBatch) -> None:
         """Insert new points / update existing ones (paper §3.3.1)."""
         ids = np.asarray(ids)

@@ -202,8 +202,12 @@ class ScannIndex:
     # ------------------------------------------------------------ training
 
     def build(self, ids: np.ndarray, emb: SparseBatch) -> None:
-        """Offline build (paper §4.3): train partitions + codebooks, load."""
+        """Offline build (paper §4.3): train partitions + codebooks, load.
+
+        Idempotent: any previously loaded state is discarded, so callers
+        (bootstrap, periodic reload) can rebuild in place."""
         cfg = self.cfg
+        self.slot_of.clear()
         n = emb.batch
         sk = count_sketch(emb, cfg.d_proj, cfg.seed)
         self.centroids = part_mod.kmeans(

@@ -15,10 +15,18 @@ answered by a scatter/merge dataflow with static shapes end-to-end:
   mutate step  — mutation batch replicated in; each shard keeps the rows it
                  owns (hash routing), appends them ring-buffer style into
                  its slabs. Write amplification is 1 (each row lands on
-                 exactly one shard + its SOAR copy locally).
+                 exactly one shard + its SOAR copy locally). The step also
+                 returns each row's landing site (global partition, slot) —
+                 replicated via psum — so a host-side engine can maintain
+                 the id -> row map that deletes and result translation need.
 
-These are the programs the dry-run lowers for the GUS cells, and the same
-functions run unmodified on the small CPU test mesh (tests/test_sharded.py).
+  delete step  — tombstones: (global partition, slot) pairs replicated in;
+                 each shard clears the validity bits of the slots it owns.
+
+These are the programs the dry-run lowers for the GUS cells, and the very
+same functions serve live traffic on a small CPU mesh through
+``repro.ann.sharded_index.ShardedGusIndex`` (tests/test_sharded.py,
+tests/test_dynamic_equivalence.py).
 """
 from __future__ import annotations
 
@@ -49,14 +57,29 @@ class GusCellConfig:
     query_batch: int = 4096
     mutate_batch: int = 65536
     top_k: int = 100
+    reorder: int = 0               # per-shard exact-rescore shortlist
+    #                                (0 = the historical default, 2*top_k)
     # candidate-merge schedule: "flat" (paper-faithful single all_gather of
     # k-per-shard over every chip) or "hier" (two-stage: intra-"model"
     # gather + top-k, then cross-"data"/"pod" — the §Perf C optimization)
     merge: str = "flat"
 
 
+# reserved id that no shard ever owns: mutation batches are padded with it
+PAD_ID = jnp.uint32(0xFFFFFFFF)
+
+
 def _flat_axes(mesh) -> tuple:
     return tuple(mesh.axis_names)
+
+
+def _linear_shard_id(mesh) -> jax.Array:
+    """This device's linearized position in the (possibly nD) mesh."""
+    shard_id = jnp.int32(0)
+    for name in mesh.axis_names:
+        shard_id = shard_id * mesh.devices.shape[
+            list(mesh.axis_names).index(name)] + jax.lax.axis_index(name)
+    return shard_id
 
 
 def index_specs(cell: GusCellConfig, mesh):
@@ -125,7 +148,8 @@ def make_query_step(mesh, cell: GusCellConfig):
         approx = approx + jnp.repeat(top_ps, s, axis=-1)
         approx = jnp.where(cand_valid.reshape(b, -1), approx, -jnp.inf)
         # 3) local shortlist + exact sparse rescore
-        r = min(cell.top_k * 2, approx.shape[-1])
+        r = min(cell.reorder if cell.reorder > 0 else cell.top_k * 2,
+                approx.shape[-1])
         _, short = jax.lax.top_k(approx, r)                    # [B, r]
         np_s = cell.nprobe_local
         part_of = jnp.take_along_axis(
@@ -144,10 +168,7 @@ def make_query_step(mesh, cell: GusCellConfig):
         k = min(cell.top_k, r)
         loc_scores, loc_pos = jax.lax.top_k(exact, k)
         # globalize candidate ids: (shard, partition, pos) -> flat row id
-        shard_id = jnp.int32(0)
-        for name in ax:
-            shard_id = shard_id * mesh.devices.shape[
-                list(mesh.axis_names).index(name)] + jax.lax.axis_index(name)
+        shard_id = _linear_shard_id(mesh)
         loc_part = jnp.take_along_axis(part_of, loc_pos, axis=-1)
         loc_slot = jnp.take_along_axis(pos_of, loc_pos, axis=-1)
         c_loc = centroids.shape[0]
@@ -193,7 +214,13 @@ def make_query_step(mesh, cell: GusCellConfig):
 
 def make_mutate_step(mesh, cell: GusCellConfig):
     """Batched upsert: rows hash-route to one shard; each shard appends its
-    rows into the nearest local partition's slab (ring-buffer cursor)."""
+    rows into the nearest local partition's slab (ring-buffer cursor).
+
+    Besides the updated index state, the step returns each row's landing
+    site ``(global partition, slot)`` (replicated across shards via psum;
+    ``(-1, 0)`` for ``PAD_ID`` padding rows) so the serving engine can keep
+    its host-side id -> row map in lockstep with the device truth.
+    """
     ax = _flat_axes(mesh)
     n_shards = 1
     for n in mesh.devices.shape:
@@ -202,12 +229,9 @@ def make_mutate_step(mesh, cell: GusCellConfig):
 
     def local_mutate(ids, new_idx, new_val, new_sketch, new_codes,
                      centroids, m_idx, m_val, codes, valid, counts):
-        shard_id = jnp.int32(0)
-        for name in ax:
-            shard_id = shard_id * mesh.devices.shape[
-                list(mesh.axis_names).index(name)] + jax.lax.axis_index(name)
+        shard_id = _linear_shard_id(mesh)
         owner = (hashing.uhash(3, ids) % jnp.uint32(n_shards)).astype(jnp.int32)
-        mine = owner == shard_id
+        mine = (owner == shard_id) & (ids != PAD_ID)
         # nearest local partition for every row (masked rows write nowhere)
         d2 = (jnp.sum(new_sketch ** 2, -1)[:, None]
               - 2.0 * new_sketch @ centroids.T
@@ -225,7 +249,14 @@ def make_mutate_step(mesh, cell: GusCellConfig):
         codes = codes.at[row, pos].set(new_codes, mode="drop")
         valid = valid.at[row, pos].set(True, mode="drop")
         counts = counts + jnp.sum(onehot, axis=0)
-        return m_idx, m_val, codes, valid, counts
+        # landing sites, replicated out: exactly one shard owns each row,
+        # so the psum reconstructs (part, pos) on every shard.
+        part_global = shard_id * centroids.shape[0] + part
+        route_part = jax.lax.psum(
+            jnp.where(mine, part_global + 1, 0), ax) - 1
+        route_pos = jax.lax.psum(
+            jnp.where(mine, pos, 0).astype(jnp.int32), ax)
+        return m_idx, m_val, codes, valid, counts, route_part, route_pos
 
     fn = shard_map(
         local_mutate, mesh=mesh,
@@ -234,16 +265,47 @@ def make_mutate_step(mesh, cell: GusCellConfig):
                   ispec["members_val"], ispec["codes"], ispec["valid"],
                   ispec["counts"]),
         out_specs=(ispec["members_idx"], ispec["members_val"], ispec["codes"],
-                   ispec["valid"], ispec["counts"]),
+                   ispec["valid"], ispec["counts"], P(), P()),
         check_rep=False)
 
     def step(ids, new_idx, new_val, new_sketch, new_codes, state):
-        m_idx, m_val, codes, valid, counts = fn(
+        m_idx, m_val, codes, valid, counts, r_part, r_pos = fn(
             ids, new_idx, new_val, new_sketch, new_codes,
             state["centroids"], state["members_idx"], state["members_val"],
             state["codes"], state["valid"], state["counts"])
-        return {**state, "members_idx": m_idx, "members_val": m_val,
-                "codes": codes, "valid": valid, "counts": counts}
+        return ({**state, "members_idx": m_idx, "members_val": m_val,
+                 "codes": codes, "valid": valid, "counts": counts},
+                (r_part, r_pos))
+
+    return step
+
+
+def make_delete_step(mesh, cell: GusCellConfig):
+    """Tombstone step: clear validity at (global partition, slot) pairs.
+
+    Deletes are host-routed — the engine knows each id's landing site from
+    the mutate step's returned routes — so the program is a pure masked
+    scatter: each shard clears the slots that fall in its partition range,
+    everything else drops. Pairs with ``part == -1`` (padding) are ignored.
+    """
+    ispec = index_specs(cell, mesh)
+
+    def local_clear(parts, poss, valid):
+        shard_id = _linear_shard_id(mesh)
+        c_loc = valid.shape[0]
+        local = parts - shard_id * c_loc
+        ok = (parts >= 0) & (local >= 0) & (local < c_loc)
+        row = jnp.where(ok, local, c_loc)                     # OOB drops
+        return valid.at[row, poss].set(False, mode="drop")
+
+    fn = shard_map(
+        local_clear, mesh=mesh,
+        in_specs=(P(), P(), ispec["valid"]),
+        out_specs=ispec["valid"],
+        check_rep=False)
+
+    def step(parts, poss, state):
+        return {**state, "valid": fn(parts, poss, state["valid"])}
 
     return step
 
@@ -255,3 +317,9 @@ def mutate_shapes(cell: GusCellConfig):
             jax.ShapeDtypeStruct((b, cell.k_dims), jnp.float32),
             jax.ShapeDtypeStruct((b, cell.d_proj), jnp.float32),
             jax.ShapeDtypeStruct((b, cell.pq_m), jnp.uint8))
+
+
+def delete_shapes(cell: GusCellConfig):
+    b = cell.mutate_batch
+    return (jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32))

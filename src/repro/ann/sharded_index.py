@@ -1,0 +1,307 @@
+"""Live sharded GUS backend: the shard_map programs behind the index protocol.
+
+``ShardedGusIndex`` takes the distributed query/mutate/delete programs of
+``repro.ann.sharded`` — the exact programs the dry-run lowers for the pod
+cells — and runs them on a small local mesh (``launch.mesh.make_gus_mesh``)
+behind the same ``build / upsert / delete / search`` protocol as
+``BruteIndex`` and ``ScannIndex``, so ``DynamicGUS`` can serve from it
+unchanged (``GusConfig(backend="sharded")``).
+
+Serving dataflow (paper §3.1 mapped onto shards, static shapes end-to-end):
+
+  mutate  — batch replicated to every shard; rows hash-route to their owner
+            shard, append ring-buffer style into the nearest local
+            partition's slab. The device returns each row's landing site
+            (global partition, slot), which the host mirrors into an
+            id -> row map (needed for deletes and result translation).
+  delete  — host looks up landing sites, the tombstone program clears the
+            validity bits on the owning shard.
+  search  — per-shard: centroid matmul -> local top-nprobe -> PQ LUT
+            scoring -> exact sparse rescore -> local top-k; one all_gather
+            + merge top-k across shards. The host translates global rows
+            back to point ids.
+
+Storage is fixed-capacity (partitions x slab ring buffers): when a
+partition's cursor wraps, the oldest rows in that slab are overwritten and
+their ids silently age out of the host map — the incremental, bounded-
+memory discipline of online k-NN-graph maintenance. Size ``slab`` to the
+expected per-partition occupancy with headroom (``build`` auto-grows it to
+8x the mean occupancy of the bootstrap corpus).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.ann import partition as part_mod
+from repro.ann import quantize as pq
+from repro.ann.sharded import (GusCellConfig, index_specs, make_delete_step,
+                               make_mutate_step, make_query_step)
+from repro.ann.sparse import count_sketch
+from repro.core import hashing
+from repro.core.types import PAD_INDEX, SparseBatch
+from repro.launch.mesh import make_gus_mesh, mesh_context
+from repro.utils import pow2_pad
+
+_PAD_ID = 0xFFFFFFFF  # reserved: mutation-batch padding, never a point id
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedConfig:
+    n_shards: int = 1
+    d_proj: int = 64            # CountSketch dimension
+    n_partitions: int = 16      # global partition count (divisible by shards)
+    slab: int = 512             # ring-buffer rows per partition
+    nprobe_local: int = 0       # partitions probed per shard (0 = all local)
+    reorder: int = 256          # per-shard exact-rescore shortlist
+    query_batch: int = 64       # max padded query batch per device call
+    mutate_batch: int = 256     # padded mutation batch per device call
+    pq_m: int = 8               # PQ subspaces
+    pq_centers: int = 256
+    kmeans_iters: int = 12
+    pq_iters: int = 6
+    eta: float = 1.0            # anisotropic weight for codebook training
+    seed: int = 13
+
+
+class ShardedGusIndex:
+    """Dynamic sharded index over sparse embeddings (multi-device)."""
+
+    def __init__(self, k_dims: int, cfg: ShardedConfig = ShardedConfig()):
+        if cfg.n_partitions % cfg.n_shards:
+            raise ValueError(
+                f"n_partitions={cfg.n_partitions} must be divisible by "
+                f"n_shards={cfg.n_shards}")
+        if cfg.d_proj % cfg.pq_m:
+            raise ValueError(
+                f"d_proj={cfg.d_proj} must split into pq_m={cfg.pq_m} "
+                "subspaces")
+        self.k_dims = k_dims
+        self.cfg = cfg
+        self.mesh = make_gus_mesh(cfg.n_shards)
+        self.trained = False
+        self.slab = cfg.slab
+        self.state: dict | None = None
+        self.row_of: dict[int, int] = {}     # id -> global row (part*S + pos)
+        self.id_of_row: np.ndarray | None = None
+        self._query_steps: dict = {}         # (padded B, k) -> jitted step
+        self._mutate = None
+        self._tombstone = None
+
+    def __len__(self) -> int:
+        return len(self.row_of)
+
+    # ------------------------------------------------------------- plumbing
+
+    def _cell(self, query_batch: int | None = None,
+              top_k: int | None = None) -> GusCellConfig:
+        cfg = self.cfg
+        c_loc = cfg.n_partitions // cfg.n_shards
+        npl = min(cfg.nprobe_local or c_loc, c_loc)
+        return GusCellConfig(
+            name="gus_live", n_rows=cfg.n_partitions * self.slab,
+            k_dims=self.k_dims, d_proj=cfg.d_proj, pq_m=cfg.pq_m,
+            pq_centers=cfg.pq_centers, n_partitions=cfg.n_partitions,
+            slab=self.slab, nprobe_local=npl,
+            query_batch=query_batch or cfg.query_batch,
+            mutate_batch=cfg.mutate_batch, top_k=top_k or 10,
+            reorder=cfg.reorder, merge="flat")
+
+    def _sketch(self, emb: SparseBatch) -> jax.Array:
+        return count_sketch(emb, self.cfg.d_proj, self.cfg.seed)
+
+    def _owners(self, ids: np.ndarray) -> np.ndarray:
+        """Hash routing, identical to the device program."""
+        h = np.asarray(hashing.uhash(3, jnp.asarray(ids, jnp.uint32)))
+        return (h % np.uint32(self.cfg.n_shards)).astype(np.int64)
+
+    def _route_partitions(self, sk: np.ndarray, owners: np.ndarray
+                          ) -> np.ndarray:
+        """Mirror of the device assignment: nearest partition within the
+        owner shard's local centroid block (used to encode PQ residuals
+        before shipping the batch; placements themselves come back from the
+        device as ground truth)."""
+        c = self._centroids_np
+        d2 = (np.sum(sk ** 2, -1)[:, None] - 2.0 * sk @ c.T
+              + np.sum(c ** 2, -1)[None, :])
+        c_loc = self.cfg.n_partitions // self.cfg.n_shards
+        block = np.arange(self.cfg.n_partitions)[None, :] // c_loc
+        d2 = np.where(block == owners[:, None], d2, np.inf)
+        return np.argmin(d2, axis=-1)
+
+    def _query_step(self, padded: int, k: int):
+        key = (padded, k)
+        if key not in self._query_steps:
+            self._query_steps[key] = jax.jit(make_query_step(
+                self.mesh, self._cell(query_batch=padded, top_k=k)))
+        return self._query_steps[key]
+
+    # ------------------------------------------------------------- training
+
+    def build(self, ids: np.ndarray, emb: SparseBatch) -> None:
+        """(Re)train partitions + codebooks on the corpus, reset the slabs,
+        then load every point through the mutation path (paper §4.3)."""
+        cfg = self.cfg
+        ids = np.asarray(ids)
+        n = len(ids)
+        sk = np.asarray(self._sketch(emb))
+        centroids = part_mod.kmeans(jnp.asarray(sk), cfg.n_partitions,
+                                    cfg.kmeans_iters, cfg.eta, cfg.seed)
+        self._centroids_np = np.asarray(centroids)
+        # residuals w.r.t. the *routed* assignment (owner-local nearest
+        # partition) — the geometry the codes will actually live in
+        parts = self._route_partitions(sk, self._owners(ids)) if n else \
+            np.zeros((0,), np.int64)
+        residuals = jnp.asarray(sk - self._centroids_np[parts]) if n else \
+            jnp.zeros((1, cfg.d_proj), jnp.float32)
+        books = pq.train_codebooks(residuals, cfg.pq_m, cfg.pq_centers,
+                                   cfg.pq_iters, cfg.eta, cfg.seed)
+        # size the ring buffers to the bootstrap corpus with 8x headroom
+        slab = 64
+        while slab * cfg.n_partitions < 8 * max(n, 1):
+            slab *= 2
+        self.slab = max(cfg.slab, slab)
+        self._alloc(centroids, books)
+        self.trained = True
+        self.upsert(ids, emb)
+
+    def _alloc(self, centroids, books) -> None:
+        cfg = self.cfg
+        c, s = cfg.n_partitions, self.slab
+        cell = self._cell()
+        specs = index_specs(cell, self.mesh)
+        init = {
+            "centroids": jnp.asarray(centroids, jnp.float32),
+            "books": jnp.asarray(books, jnp.float32),
+            "members_idx": jnp.full((c, s, self.k_dims), PAD_INDEX,
+                                    jnp.uint32),
+            "members_val": jnp.zeros((c, s, self.k_dims), jnp.float32),
+            "codes": jnp.zeros((c, s, cfg.pq_m), jnp.uint8),
+            "valid": jnp.zeros((c, s), bool),
+            "counts": jnp.zeros((c,), jnp.int32),
+        }
+        with mesh_context(self.mesh):
+            self.state = {k: jax.device_put(
+                v, NamedSharding(self.mesh, specs[k]))
+                for k, v in init.items()}
+        self.row_of = {}
+        self.id_of_row = np.full((c * s,), -1, np.int64)
+        self._query_steps = {}
+        self._mutate = jax.jit(make_mutate_step(self.mesh, cell))
+        self._tombstone = jax.jit(make_delete_step(self.mesh, cell))
+
+    # ------------------------------------------------------------ mutations
+
+    def upsert(self, ids: np.ndarray, emb: SparseBatch) -> None:
+        assert self.trained, "build() the index before mutating it"
+        cfg = self.cfg
+        ids = np.asarray(ids, np.int64)
+        if ids.size == 0:
+            return
+        assert int(ids.max()) < _PAD_ID and int(ids.min()) >= 0, \
+            "point ids must fit uint32 (hash routing)"
+        # within-batch dedup: last write wins (matches ScannIndex semantics)
+        last = {int(pid): i for i, pid in enumerate(ids.tolist())}
+        if len(last) < len(ids):
+            keep = np.asarray(sorted(last.values()), np.int64)
+            ids, emb = ids[keep], emb[keep]
+        self.delete([pid for pid in ids.tolist() if pid in self.row_of])
+
+        sk = np.asarray(self._sketch(emb))
+        parts = self._route_partitions(sk, self._owners(ids))
+        codes = np.asarray(pq.encode(
+            jnp.asarray(sk - self._centroids_np[parts]),
+            self.state["books"]))
+
+        bm = cfg.mutate_batch
+        for lo in range(0, len(ids), bm):
+            sel = slice(lo, min(lo + bm, len(ids)))
+            n_c = sel.stop - sel.start
+            pad = bm - n_c
+            ids_u = np.full((bm,), _PAD_ID, np.uint32)
+            ids_u[:n_c] = ids[sel].astype(np.uint32)
+            b_idx = np.full((bm, self.k_dims), PAD_INDEX, np.uint32)
+            b_idx[:n_c] = np.asarray(emb.indices[sel])
+            b_val = np.zeros((bm, self.k_dims), np.float32)
+            b_val[:n_c] = np.asarray(emb.values[sel])
+            b_sk = np.zeros((bm, cfg.d_proj), np.float32)
+            b_sk[:n_c] = sk[sel]
+            b_codes = np.zeros((bm, cfg.pq_m), np.uint8)
+            b_codes[:n_c] = codes[sel]
+            with mesh_context(self.mesh):
+                self.state, (r_part, r_pos) = self._mutate(
+                    jnp.asarray(ids_u), jnp.asarray(b_idx),
+                    jnp.asarray(b_val), jnp.asarray(b_sk),
+                    jnp.asarray(b_codes), self.state)
+            r_part = np.asarray(r_part)[:n_c]
+            r_pos = np.asarray(r_pos)[:n_c]
+            rows = r_part * self.slab + r_pos
+            for pid, row in zip(ids[sel].tolist(), rows.tolist()):
+                old = int(self.id_of_row[row])
+                if old >= 0 and self.row_of.get(old) == row:
+                    self.row_of.pop(old)      # ring buffer overwrote it
+                self.id_of_row[row] = pid
+                self.row_of[pid] = row
+
+    def delete(self, ids) -> int:
+        assert self.trained, "build() the index before mutating it"
+        rows = []
+        for pid in list(ids):
+            row = self.row_of.pop(int(pid), None)
+            if row is not None:
+                rows.append(row)
+                self.id_of_row[row] = -1
+        if not rows:
+            return 0
+        bm = self.cfg.mutate_batch
+        for lo in range(0, len(rows), bm):
+            chunk = rows[lo:lo + bm]
+            parts = np.full((bm,), -1, np.int32)
+            poss = np.zeros((bm,), np.int32)
+            parts[:len(chunk)] = np.asarray(chunk, np.int64) // self.slab
+            poss[:len(chunk)] = np.asarray(chunk, np.int64) % self.slab
+            with mesh_context(self.mesh):
+                self.state = self._tombstone(
+                    jnp.asarray(parts), jnp.asarray(poss), self.state)
+        return len(rows)
+
+    # ------------------------------------------------------------- queries
+
+    def search(self, emb: SparseBatch, k: int):
+        """Top-k (ids [B,k], dists [B,k]); padding id=-1, dist=+inf."""
+        assert self.trained, "build() the index before searching it"
+        cfg = self.cfg
+        b = emb.batch
+        cell = self._cell()
+        r = min(cell.reorder or 2 * k, cell.nprobe_local * self.slab)
+        k_eff = min(k, r)
+        out_ids = np.full((b, k), -1, np.int64)
+        out_d = np.full((b, k), np.inf, np.float32)
+        sk = np.asarray(self._sketch(emb))
+        step_b = pow2_pad(b, cfg.query_batch)
+        for lo in range(0, b, step_b):
+            sel = slice(lo, min(lo + step_b, b))
+            n_c = sel.stop - sel.start
+            padded = pow2_pad(n_c)
+            q_idx = np.full((padded, self.k_dims), PAD_INDEX, np.uint32)
+            q_idx[:n_c] = np.asarray(emb.indices[sel])
+            q_val = np.zeros((padded, self.k_dims), np.float32)
+            q_val[:n_c] = np.asarray(emb.values[sel])
+            q_sk = np.zeros((padded, cfg.d_proj), np.float32)
+            q_sk[:n_c] = sk[sel]
+            step = self._query_step(padded, k_eff)
+            with mesh_context(self.mesh):
+                rows, dists = step(jnp.asarray(q_idx), jnp.asarray(q_val),
+                                   jnp.asarray(q_sk), self.state)
+            rows = np.asarray(rows)[:n_c]
+            dists = np.asarray(dists)[:n_c]
+            hit = np.isfinite(dists)
+            ids_c = np.where(hit, self.id_of_row[np.where(hit, rows, 0)], -1)
+            out_ids[sel, :k_eff] = ids_c
+            out_d[sel, :k_eff] = np.where(hit, dists, np.inf)
+        return out_ids, out_d
+

@@ -1,13 +1,21 @@
 """Dynamic GUS — the system of paper §3: Embedding Generator + ScaNN +
 Similarity Scorer behind two RPC surfaces (mutations, neighborhoods).
 
-``DynamicGUS`` is the single-replica engine: it owns the embedding
-generator (with its hot-reloadable IDF/filter tables), an ANN backend
-(exact ``BruteIndex`` or quantized ``ScannIndex``), a feature store (the
-scorer needs candidate features, paper §3.3.3 step "requests the closest
-points ... and their features"), and the scorer parameters. The
-multi-shard / multi-pod version wraps this engine via ``serve.engine`` and
-``ann.sharded``.
+``DynamicGUS`` is the serving engine: it owns the embedding generator
+(with its hot-reloadable IDF/filter tables), an ANN backend, a feature
+store (the scorer needs candidate features, paper §3.3.3 step "requests
+the closest points ... and their features"), and the scorer parameters.
+The backend is selected by ``GusConfig.backend``:
+
+  "brute"   — exact ``BruteIndex`` (oracle / small corpora);
+  "scann"   — quantized single-replica ``ScannIndex``;
+  "sharded" — ``ShardedGusIndex``, the shard_map scatter/merge programs of
+              ``ann.sharded`` on a multi-device mesh (the paper's index
+              tower sharded across chips).
+
+Every backend speaks the same ``build / upsert / delete / search``
+protocol, so the RPC surfaces below are backend-agnostic; ``serve.engine``
+adds batching, hedging against replicas, and fault recovery on top.
 
 Latency accounting mirrors the paper's Fig. 9/10: per-RPC wall-clock
 timers for mutation and neighborhood paths.
@@ -21,6 +29,7 @@ import numpy as np
 
 from repro.ann.brute import BruteIndex
 from repro.ann.scann import ScannConfig, ScannIndex
+from repro.ann.sharded_index import ShardedConfig, ShardedGusIndex
 from repro.core import idf as idf_mod
 from repro.core.buckets import BucketConfig
 from repro.core.embedding import EmbeddingGenerator
@@ -35,8 +44,20 @@ class GusConfig:
     scann_nn: int = 10          # ScaNN-NN: neighbors retrieved from the index
     idf_size: int = 0           # IDF-S   : IDF table size (0 = unit weights)
     filter_percent: float = 0.0  # Filter-P: % of most popular buckets dropped
-    backend: str = "scann"      # "scann" | "brute"
+    backend: str = "scann"      # "scann" | "brute" | "sharded"
     scann: ScannConfig = ScannConfig()
+    sharded: ShardedConfig = ShardedConfig()
+
+
+def make_index(k_dims: int, cfg: GusConfig):
+    """ANN backend factory — every backend speaks build/upsert/delete/search."""
+    if cfg.backend == "brute":
+        return BruteIndex(k_dims)
+    if cfg.backend == "sharded":
+        return ShardedGusIndex(k_dims, cfg.sharded)
+    if cfg.backend == "scann":
+        return ScannIndex(k_dims, cfg.scann)
+    raise ValueError(f"unknown GUS backend {cfg.backend!r}")
 
 
 class FeatureStore:
@@ -81,11 +102,7 @@ class DynamicGUS:
         self.embedder = EmbeddingGenerator.create(spec, bucket_cfg)
         self.scorer_params = scorer_params
         self.store = FeatureStore(spec)
-        k_dims = self.embedder.k_max
-        if cfg.backend == "brute":
-            self.index = BruteIndex(k_dims)
-        else:
-            self.index = ScannIndex(k_dims, cfg.scann)
+        self.index = make_index(self.embedder.k_max, cfg)
         self.mutation_timer = Timer("mutation")
         self.query_timer = Timer("neighbors")
 
@@ -103,10 +120,7 @@ class DynamicGUS:
             filter_table=idf_mod.build_filter_table(
                 bucket_ids, valid, self.cfg.filter_percent))
         emb = self.embedder(features)
-        if isinstance(self.index, ScannIndex):
-            self.index.build(ids, emb)
-        else:
-            self.index.upsert(ids, emb)
+        self.index.build(ids, emb)
         self.store.put(ids, features)
 
     def periodic_reload(self) -> None:
@@ -123,10 +137,9 @@ class DynamicGUS:
                                         self.cfg.idf_size),
             filter_table=idf_mod.build_filter_table(
                 bucket_ids, valid, self.cfg.filter_percent))
-        if isinstance(self.index, ScannIndex):
-            emb = self.embedder(feats)
-            self.index.slot_of.clear()
-            self.index.build(ids, emb)
+        # the reloaded tables change the embeddings, so every backend
+        # retrains/reloads from the live corpus
+        self.index.build(ids, self.embedder(feats))
 
     # ------------------------------------------------------ mutation RPCs
 

@@ -17,7 +17,8 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 from repro.configs.base import SHAPES, applicable          # noqa: E402
 from repro.configs.registry import ARCHS, get_config        # noqa: E402
 from repro.launch import sharding as shp                    # noqa: E402
-from repro.launch.mesh import make_production_mesh          # noqa: E402
+from repro.launch.mesh import (make_gus_mesh,               # noqa: E402
+                               make_production_mesh, mesh_context)
 from repro.models.model import (build_model, cache_specs,   # noqa: E402
                                 input_specs, params_specs)
 from repro.serve.serve_step import make_decode_step, make_prefill_step  # noqa: E402
@@ -123,6 +124,8 @@ def build_cell(cfg, shape, mesh):
 def analyze(compiled) -> dict:
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):      # older jax: one dict per program
+        ca = ca[0] if ca else {}
     coll = collective_stats(compiled.as_text())
     return {
         "memory": {
@@ -169,7 +172,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         sp_axis="model", model_axis_size=16)
     n_dev = int(np.prod(list(mesh.devices.shape)))
     rec["devices"] = n_dev
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         if not probes_only:
             t0 = time.time()
             lowered = build_cell(cfg, shape, mesh)()
@@ -180,8 +183,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             rec["main"] = analyze(compiled)
             if verbose:
                 print(compiled.memory_analysis())
-                print({k: v for k, v in
-                       (compiled.cost_analysis() or {}).items()
+                ca = compiled.cost_analysis() or {}
+                if isinstance(ca, (list, tuple)):
+                    ca = ca[0] if ca else {}
+                print({k: v for k, v in ca.items()
                        if k in ("flops", "bytes accessed")})
 
         if probes or probes_only:
@@ -227,28 +232,49 @@ def extrapolate(cfg, probes: dict, lo: int, hi: int, group: int) -> dict:
 
 
 def run_gus_cell(multi_pod: bool, out_dir: str = "results/dryrun",
-                 mutate: bool = False, merge: str = "flat",
+                 op: str = "query", merge: str = "flat",
                  n_partitions: int = 4096, slab: int = 8192,
-                 tag: str = "") -> dict:
-    """The paper-technique cells: sharded GUS query / mutate steps."""
-    from repro.ann.sharded import (GusCellConfig, index_shapes, index_specs,
-                                   make_mutate_step, make_query_step,
-                                   mutate_shapes, query_shapes)
+                 tag: str = "", shards: int = 0) -> dict:
+    """The paper-technique cells: sharded GUS query / mutate / delete steps.
+
+    ``shards > 0`` lowers the same programs for a small 1-D CPU mesh (the
+    mesh ``ShardedGusIndex`` serves on) instead of the production pod mesh
+    — the dry-run proof that one program covers both deployments.
+    """
+    from repro.ann.sharded import (GusCellConfig, delete_shapes, index_shapes,
+                                   make_delete_step, make_mutate_step,
+                                   make_query_step, mutate_shapes,
+                                   query_shapes)
     cell = GusCellConfig(merge=merge, n_partitions=n_partitions, slab=slab)
-    mesh_name = "2x16x16" if multi_pod else "16x16"
-    kind = "gus_mutate" if mutate else "gus_query"
+    if shards:
+        mesh = make_gus_mesh(shards)
+        mesh_name = f"cpu{shards}"
+        # shrink the cell so [C/shards, ...] blocks stay CPU-sized, and
+        # round the partition count up to a multiple of the mesh size
+        # (the sharded specs can't split a non-divisible partition axis)
+        c = min(n_partitions, shards * 16)
+        c = (c + shards - 1) // shards * shards
+        cell = dataclasses.replace(
+            cell, n_partitions=c,
+            slab=min(slab, 1024), query_batch=64, mutate_batch=256)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+    kind = f"gus_{op}"
     if merge != "flat":
         kind = f"{kind}_{merge}"
     if tag:
         kind = f"{kind}_{tag}"
     rec = {"arch": "dynamic-gus", "shape": cell.name, "mesh": mesh_name,
            "kind": kind}
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         state_sds = index_shapes(cell)
-        if mutate:
+        if op == "mutate":
             step = make_mutate_step(mesh, cell)
             args = mutate_shapes(cell) + (state_sds,)
+        elif op == "delete":
+            step = make_delete_step(mesh, cell)
+            args = delete_shapes(cell) + (state_sds,)
         else:
             step = make_query_step(mesh, cell)
             args = query_shapes(cell) + (state_sds,)
@@ -285,10 +311,14 @@ def main():
     ap.add_argument("--gus", action="store_true",
                     help="run the sharded-GUS paper cells")
     ap.add_argument("--gus-mutate", action="store_true")
+    ap.add_argument("--gus-delete", action="store_true")
     ap.add_argument("--gus-merge", default="flat", choices=("flat", "hier"))
     ap.add_argument("--gus-partitions", type=int, default=4096)
     ap.add_argument("--gus-slab", type=int, default=8192)
     ap.add_argument("--gus-tag", default="")
+    ap.add_argument("--gus-shards", type=int, default=0,
+                    help="lower the GUS cells for an N-device 1-D CPU mesh "
+                         "instead of the pod mesh")
     ap.add_argument("--no-probes", action="store_true")
     ap.add_argument("--probes-only", action="store_true",
                     help="add probe corrections to existing records")
@@ -296,12 +326,15 @@ def main():
     args = ap.parse_args()
 
     meshes = [False, True] if args.both_meshes else [args.multipod]
-    if args.gus or args.gus_mutate:
+    if args.gus or args.gus_mutate or args.gus_delete:
+        op = ("mutate" if args.gus_mutate
+              else "delete" if args.gus_delete else "query")
         for mp in meshes:
-            run_gus_cell(mp, args.out, mutate=args.gus_mutate,
+            run_gus_cell(mp, args.out, op=op,
                          merge=args.gus_merge,
                          n_partitions=args.gus_partitions,
-                         slab=args.gus_slab, tag=args.gus_tag)
+                         slab=args.gus_slab, tag=args.gus_tag,
+                         shards=args.gus_shards)
         return
     archs = list(ARCHS) if args.arch in (None, "all") else [args.arch]
     shapes = list(SHAPES) if args.shape is None else [args.shape]

@@ -8,24 +8,68 @@ Axis semantics:
   pod   — outermost, maps to DCN (inter-pod) links; batch/index sharding
   data  — intra-pod DP/FSDP axis (and index-shard axis for GUS)
   model — TP/EP axis
+
+The helpers below also paper over the jax mesh-API drift: newer jax wants
+``axis_types=(AxisType.Auto, ...)`` and activates a mesh via
+``jax.set_mesh``; older releases (like the 0.4.x pinned here) predate both.
+``make_*_mesh`` and ``mesh_context`` give every caller one spelling that
+works on either, so the same GUS programs lower for the pod cells and run
+unmodified on a 2-4 device CPU mesh.
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
+
+
+def _make_mesh(shape, axes, devices=None):
+    """jax.make_mesh across API generations (axis_types when supported)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, axes, devices=devices,
+                                 axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def mesh_context(mesh):
+    """Activate ``mesh`` for the enclosed computation.
+
+    ``jax.set_mesh(mesh)`` on new jax; on old releases explicit-mesh
+    shard_map needs no ambient mesh, so this is a no-op context.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return contextlib.nullcontext(mesh)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for CPU tests (requires >= prod(shape) host devices)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
+
+
+def make_gus_mesh(n_shards: int):
+    """1-D index-shard mesh over the first ``n_shards`` local devices — the
+    CPU counterpart of the production GUS cells (ShardedGusIndex serves on
+    it; the dry-run lowers the same programs for the pod meshes)."""
+    have = len(jax.devices())
+    if n_shards > have:
+        raise ValueError(
+            f"make_gus_mesh({n_shards}): only {have} device(s) visible; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n_shards} before jax initializes")
+    return _make_mesh((n_shards,), ("data",),
+                      devices=jax.devices()[:n_shards])
 
 
 def dp_axes(mesh) -> tuple:

@@ -14,6 +14,7 @@ import jax
 import numpy as np
 
 from repro.ann.scann import ScannConfig
+from repro.ann.sharded_index import ShardedConfig
 from repro.core import BucketConfig, DynamicGUS, GusConfig
 from repro.core.scorer import train_scorer
 from repro.data.stream import MutationStream, StreamConfig
@@ -24,8 +25,28 @@ from repro.serve.engine import EngineConfig, GusEngine
 DATASETS = {"arxiv": OGB_ARXIV_LIKE, "products": OGB_PRODUCTS_LIKE}
 
 
+def gus_config(n_points: int, *, scann_nn=10, idf_size=0, filter_percent=0.0,
+               backend="scann", shards=1) -> GusConfig:
+    """Serving config sized to the corpus, for any backend."""
+    n_parts = max(16, n_points // 256)
+    return GusConfig(
+        scann_nn=scann_nn, idf_size=idf_size, filter_percent=filter_percent,
+        backend=backend,
+        scann=ScannConfig(d_proj=64, n_partitions=n_parts,
+                          nprobe=8, reorder=max(128, scann_nn * 4)),
+        sharded=ShardedConfig(
+            n_shards=shards,
+            n_partitions=max(16, (n_parts + shards - 1) // shards * shards),
+            nprobe_local=0, reorder=max(128, scann_nn * 4),
+            kmeans_iters=8, pq_iters=4))
+
+
 def build_engine(dataset: str, n_points: int, *, scann_nn=10, idf_size=0,
-                 filter_percent=0.0, backend="scann", seed=0):
+                 filter_percent=0.0, backend="scann", shards=1,
+                 replicas=0, seed=0,
+                 engine_cfg: EngineConfig = EngineConfig()):
+    """Bootstrap a full serving engine; ``replicas`` extra DynamicGUS
+    instances (same corpus) back the straggler-hedging path."""
     data_cfg = dataclasses.replace(DATASETS[dataset], n_points=n_points)
     ids, feats, cluster = make_dataset(data_cfg)
     pf, lbl = labeled_pairs(feats, cluster, min(4 * n_points, 20000),
@@ -34,16 +55,20 @@ def build_engine(dataset: str, n_points: int, *, scann_nn=10, idf_size=0,
                              pf, lbl, steps=300)
     bcfg = BucketConfig(dense_tables=8, dense_bits=10, set_tables=6,
                         scalar_widths=(2.0,))
-    gus = DynamicGUS(data_cfg.spec, bcfg, scorer, GusConfig(
-        scann_nn=scann_nn, idf_size=idf_size, filter_percent=filter_percent,
-        backend=backend,
-        scann=ScannConfig(d_proj=64, n_partitions=max(16, n_points // 256),
-                          nprobe=8, reorder=max(128, scann_nn * 4))))
+    cfg = gus_config(n_points, scann_nn=scann_nn, idf_size=idf_size,
+                     filter_percent=filter_percent, backend=backend,
+                     shards=shards)
     stream = MutationStream(data_cfg, StreamConfig(seed=seed),
                             bootstrap_fraction=0.6)
     boot_ids, boot_feats = stream.bootstrap()
+    gus = DynamicGUS(data_cfg.spec, bcfg, scorer, cfg)
     gus.bootstrap(boot_ids, boot_feats)
-    return GusEngine(gus), stream, cluster
+    replica_fleet = []
+    for _ in range(replicas):
+        rep = DynamicGUS(data_cfg.spec, bcfg, scorer, cfg)
+        rep.bootstrap(boot_ids, boot_feats)
+        replica_fleet.append(rep)
+    return GusEngine(gus, engine_cfg, replica_fleet), stream, cluster
 
 
 def main():
@@ -55,13 +80,24 @@ def main():
     ap.add_argument("--scann-nn", type=int, default=10)
     ap.add_argument("--idf-size", type=int, default=0)
     ap.add_argument("--filter-percent", type=float, default=0.0)
-    ap.add_argument("--backend", choices=("scann", "brute"), default="scann")
+    ap.add_argument("--backend", choices=("scann", "brute", "sharded"),
+                    default="scann")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="index shards for --backend sharded (needs "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count"
+                         "=N set before launch)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="replica fleet size backing straggler hedging")
     args = ap.parse_args()
 
+    if args.shards > len(jax.devices()):
+        raise SystemExit(
+            f"--shards {args.shards} needs {args.shards} devices; run with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={args.shards}")
     engine, stream, cluster = build_engine(
         args.dataset, args.points, scann_nn=args.scann_nn,
         idf_size=args.idf_size, filter_percent=args.filter_percent,
-        backend=args.backend)
+        backend=args.backend, shards=args.shards, replicas=args.replicas)
     print(f"[serve] bootstrapped {len(engine.gus.index)} points")
 
     for i, batch in zip(range(args.mutations), stream):

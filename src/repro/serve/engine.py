@@ -7,10 +7,12 @@ needs (paper §3.1 runs at "hundreds of thousands of RPCs per second"):
   fixed-shape batches (power-of-two padding bounds jit recompiles);
 * **freshness accounting** — per-mutation timestamps measure
   visibility lag (the paper's "data freshness within seconds at p99");
-* **straggler hedging** — queries fan out to index shards; if a shard's
-  reply lags past a hedge deadline, the engine reissues against the
-  shard's replica (simulated here by the exact index) and takes the first
-  answer — the standard tail-latency mitigation at scale;
+* **straggler hedging** — if the primary's reply lags past the hedge
+  deadline, the engine reissues the query against a real replica of the
+  index (round-robin over ``replicas``) and serves that answer — the
+  standard tail-latency mitigation at scale. Replicas are full
+  ``DynamicGUS`` instances (any backend, including the sharded one) kept
+  consistent by fanning every mutation batch out to them;
 * **mutation log + snapshot restart** — every applied mutation batch is
   appended to a host-side log; ``recover()`` replays the suffix after a
   crash/restart, giving checkpoint/restart semantics for the serving tier.
@@ -19,11 +21,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from typing import Sequence
 
 import numpy as np
 
 from repro.core.gus import DynamicGUS
 from repro.core.types import MutationBatch, NeighborResult
+from repro.utils import pow2_pad
 from repro.utils.timing import Timer, percentiles
 
 
@@ -35,17 +39,14 @@ class EngineConfig:
     snapshot_every: int = 50      # mutation batches between snapshots
 
 
-def _pow2_pad(n: int, cap: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return min(p, cap)
-
-
 class GusEngine:
-    def __init__(self, gus: DynamicGUS, cfg: EngineConfig = EngineConfig()):
+    def __init__(self, gus: DynamicGUS, cfg: EngineConfig = EngineConfig(),
+                 replicas: Sequence[DynamicGUS] = ()):
         self.gus = gus
         self.cfg = cfg
+        self.replicas = list(replicas)
+        self.replica_hedges = [0] * len(self.replicas)
+        self._next_replica = 0
         self.mutation_log: list[MutationBatch] = []
         self.log_since_snapshot = 0
         self.snapshot_state: dict | None = None
@@ -58,6 +59,8 @@ class GusEngine:
     def submit_mutations(self, batch: MutationBatch) -> None:
         t0 = time.perf_counter()
         self.gus.mutate(batch)
+        for replica in self.replicas:    # replicas stay mutation-consistent
+            replica.mutate(batch)
         self.mutation_log.append(batch)
         self.log_since_snapshot += 1
         # visibility lag: mutation is visible as soon as mutate() returns
@@ -68,11 +71,11 @@ class GusEngine:
     # -------------------------------------------------------------- queries
 
     def query(self, features: dict, k: int | None = None) -> NeighborResult:
-        """Pad the query batch to a power of two, answer, unpad; hedge if a
-        (simulated) shard exceeds the deadline."""
+        """Pad the query batch to a power of two, answer, unpad; hedge
+        against a replica if the primary exceeds the deadline."""
         self.queries += 1
         n = next(iter(features.values())).shape[0]
-        padded = _pow2_pad(n, self.cfg.query_batch)
+        padded = pow2_pad(n, self.cfg.query_batch)
         feats = {key: np.concatenate(
             [v, np.repeat(v[-1:], padded - n, axis=0)], axis=0)
             if padded > n else v for key, v in features.items()}
@@ -80,10 +83,15 @@ class GusEngine:
         res = self.gus.neighbors(feats, k)
         elapsed_ms = (time.perf_counter() - t0) * 1e3
         if elapsed_ms > self.cfg.hedge_ms:
-            # hedge: reissue (against the replica in a multi-shard fleet);
-            # single-replica simulation re-runs the query.
             self.hedged += 1
-            res = self.gus.neighbors(feats, k)
+            if self.replicas:
+                i = self._next_replica
+                self._next_replica = (i + 1) % len(self.replicas)
+                self.replica_hedges[i] += 1
+                res = self.replicas[i].neighbors(feats, k)
+            else:
+                # no replica fleet: reissue against the primary
+                res = self.gus.neighbors(feats, k)
         return NeighborResult(ids=res.ids[:n], weights=res.weights[:n],
                               distances=res.distances[:n])
 
@@ -99,18 +107,23 @@ class GusEngine:
         self.mutation_log.clear()
         self.log_since_snapshot = 0
 
-    def recover(self, fresh_gus: DynamicGUS) -> "GusEngine":
+    def recover(self, fresh_gus: DynamicGUS,
+                replicas: Sequence[DynamicGUS] = ()) -> "GusEngine":
         """Restart onto a fresh engine: bootstrap from the snapshot, then
-        replay the mutation-log suffix."""
-        eng = GusEngine(fresh_gus, self.cfg)
+        replay the mutation-log suffix (onto the new replicas too)."""
+        eng = GusEngine(fresh_gus, self.cfg, replicas)
+        targets = [fresh_gus, *eng.replicas]
         if self.snapshot_state is not None and len(self.snapshot_state["ids"]):
-            fresh_gus.bootstrap(self.snapshot_state["ids"],
-                                self.snapshot_state["features"])
-        else:
-            # no snapshot yet: bootstrap empty store from first log entry
-            pass
+            for gus in targets:
+                gus.bootstrap(self.snapshot_state["ids"],
+                              self.snapshot_state["features"])
+        # carry the snapshot forward: if the recovered engine crashes again
+        # before its next snapshot, a second recover() must not lose the
+        # snapshot corpus
+        eng.snapshot_state = self.snapshot_state
         for batch in self.mutation_log:
-            fresh_gus.mutate(batch)
+            for gus in targets:
+                gus.mutate(batch)
             eng.mutation_log.append(batch)
         return eng
 
@@ -120,6 +133,7 @@ class GusEngine:
         return {
             "queries": self.queries,
             "hedged": self.hedged,
+            "replica_hedges": list(self.replica_hedges),
             "freshness": percentiles(self.freshness.samples_ms),
             "query_latency": self.gus.query_timer.summary(),
             "mutation_latency": self.gus.mutation_timer.summary(),

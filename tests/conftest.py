@@ -1,6 +1,29 @@
 import os
+import random
 import sys
 
 # tests must see the default single CPU device (the 512-device override is
-# the dry-run's business only — see src/repro/launch/dryrun.py)
+# the dry-run's business only — see src/repro/launch/dryrun.py); multi-device
+# tests run in subprocesses that set XLA_FLAGS themselves.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# the tests dir itself, for shared helpers (_hypo_compat)
+sys.path.insert(0, os.path.dirname(__file__))
+
+import numpy as np   # noqa: E402
+import pytest        # noqa: E402
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running tests (subprocess meshes, large corpora); "
+        "deselect with -m 'not slow' for the quick CI lane")
+
+
+@pytest.fixture(autouse=True)
+def _deterministic_seeds():
+    """Pin the global RNGs per test so runs are reproducible regardless of
+    execution order (explicit default_rng(seed) uses are unaffected)."""
+    random.seed(0)
+    np.random.seed(0)
+    yield

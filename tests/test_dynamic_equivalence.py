@@ -5,17 +5,31 @@ bootstrap-everything vs incremental inserts vs insert+delete+reinsert must
 yield identical exact-rescored distances (the brute backend is exactly
 order-free; the quantized backend is order-free given the same trained
 partitions/codebooks, which `build` fixes from the bootstrap corpus).
+
+The same bar applies across *backends*: with exhaustive probing, the
+sharded shard_map backend must return the brute oracle's top-k (after
+exact rescore) on 1-, 2- and 4-device meshes — id sets may differ only by
+ties at the k-th boundary distance (unit bucket weights make exact dots
+integer-valued, so boundary ties are common).
 """
 import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
 
 import numpy as np
 import pytest
 
 from repro.ann.brute import BruteIndex
 from repro.ann.scann import ScannConfig, ScannIndex
+from repro.ann.sharded_index import ShardedConfig, ShardedGusIndex
 from repro.core import BucketConfig
 from repro.core.embedding import EmbeddingGenerator
 from repro.data.synthetic import OGB_ARXIV_LIKE, make_dataset
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 @pytest.fixture(scope="module")
@@ -79,3 +93,186 @@ def test_scann_offline_vs_dynamic(corpus):
     # at ties; require equality of the distance multisets per query
     np.testing.assert_allclose(np.sort(d_off, -1), np.sort(d_dyn, -1),
                                atol=1e-5)
+
+
+# ----------------------------------------------- ScannIndex lifecycle
+
+
+def test_scann_delete_reinsert_reuses_slots(corpus):
+    """upsert -> delete -> reinsert must recycle both the global slot and
+    the per-partition slab positions (no storage leak), and restore
+    identical search results."""
+    ids, emb, gen = corpus
+    cfg = ScannConfig(d_proj=64, n_partitions=16, nprobe=16, reorder=256)
+    idx = ScannIndex(gen.k_max, cfg)
+    idx.build(ids, emb)
+    cap_before = idx.capacity
+    slab_before = idx.slab
+    free_before = len(idx.free_slots)
+    recs = {int(p): idx.slot_of[int(p)] for p in ids[:100].tolist()}
+    _, d_before = idx.search(emb[:16], 6)
+
+    idx.delete(ids[:100])
+    assert len(idx.free_slots) == free_before + 100
+    idx.upsert(ids[:100], emb[:100])
+    # LIFO free lists: the same physical storage is reused, nothing grew
+    assert len(idx.free_slots) == free_before
+    assert idx.capacity == cap_before and idx.slab == slab_before
+    assert {idx.slot_of[p][0] for p in recs} == {r[0] for r in recs.values()}
+    _, d_after = idx.search(emb[:16], 6)
+    np.testing.assert_allclose(np.sort(d_before, -1), np.sort(d_after, -1),
+                               atol=1e-5)
+
+
+def test_scann_rebuild_preserves_search_results(corpus):
+    """rebuild() retrains partitions/codebooks from the live points; with
+    exhaustive probing the exact-rescored top-k must be unchanged."""
+    ids, emb, gen = corpus
+    cfg = ScannConfig(d_proj=64, n_partitions=16, nprobe=16, reorder=512)
+    idx = ScannIndex(gen.k_max, cfg)
+    idx.build(ids, emb)
+    idx.delete(ids[:50])                     # rebuild must drop tombstones
+    _, d_before = idx.search(emb[:16], 6)
+    n_live = len(idx)
+    idx.rebuild()
+    assert len(idx) == n_live
+    assert all(ids[i] not in idx.slot_of for i in range(50))
+    _, d_after = idx.search(emb[:16], 6)
+    np.testing.assert_allclose(np.sort(d_before, -1), np.sort(d_after, -1),
+                               atol=1e-5)
+
+
+def test_scann_soar_copy_consistency(corpus):
+    """Every point carries a primary and a SOAR secondary copy in distinct
+    partitions, both registered in the slabs; disabling SOAR drops to one
+    copy."""
+    ids, emb, gen = corpus
+    cfg = ScannConfig(d_proj=64, n_partitions=16, nprobe=16, reorder=256)
+    idx = ScannIndex(gen.k_max, cfg)
+    idx.build(ids, emb)
+    members = np.asarray(idx.members)
+    valid = np.asarray(idx.valid_list)
+    for pid in ids[:200].tolist():
+        rec = idx.slot_of[pid]
+        slot, copies = rec[0], rec[1:]
+        assert len(copies) == 2
+        assert copies[0][0] != copies[1][0]          # distinct partitions
+        for p, pos in copies:
+            assert members[p, pos] == slot
+            assert valid[p, pos]
+    # slab occupancy equals exactly two copies per live point
+    assert int(valid.sum()) == 2 * len(idx)
+
+    no_soar = ScannIndex(gen.k_max,
+                         dataclasses.replace(cfg, soar_lambda=-1.0))
+    no_soar.build(ids, emb)
+    assert all(len(no_soar.slot_of[p][1:]) == 1
+               for p in ids[:50].tolist())
+    assert int(np.asarray(no_soar.valid_list).sum()) == len(no_soar)
+
+
+# ------------------------------------- sharded backend vs the brute oracle
+
+
+def _tie_tolerant_topk_check(b_ids, b_d, s_ids, s_d, atol=1e-4):
+    """Same distance multisets, and identical id sets strictly inside the
+    k-th boundary distance (any correct top-k is free to pick different
+    members of the boundary tie group). Returns #rows violating that."""
+    bad = 0
+    np.testing.assert_allclose(np.sort(b_d, -1), np.sort(s_d, -1), atol=atol)
+    for r in range(b_ids.shape[0]):
+        finite = b_d[r][np.isfinite(b_d[r])]
+        kth = finite.max() if finite.size else np.inf
+        strict_b = set(b_ids[r][(b_d[r] < kth - atol)
+                                & (b_ids[r] >= 0)].tolist())
+        strict_s = set(s_ids[r][(s_d[r] < kth - atol)
+                                & (s_ids[r] >= 0)].tolist())
+        if strict_b != strict_s:
+            bad += 1
+    return bad
+
+
+def test_sharded_single_device_matches_brute(corpus):
+    """1-shard ShardedGusIndex (the shard_map programs on the default
+    single-device mesh) against the brute oracle, through insert, delete
+    and reinsert."""
+    ids, emb, gen = corpus
+    brute = BruteIndex(gen.k_max)
+    brute.upsert(ids, emb)
+    idx = ShardedGusIndex(gen.k_max, ShardedConfig(
+        n_shards=1, d_proj=32, n_partitions=8, nprobe_local=0,
+        reorder=8192, pq_m=4, kmeans_iters=4, pq_iters=2))
+    idx.build(ids, emb)
+    assert len(idx) == len(brute)
+
+    b_ids, b_d = brute.search(emb[:24], 6)
+    s_ids, s_d = idx.search(emb[:24], 6)
+    assert _tie_tolerant_topk_check(b_ids, b_d, s_ids, s_d) == 0
+
+    for index in (brute, idx):
+        index.delete(ids[100:200])
+        index.upsert(ids[100:150], emb[100:150])
+    b_ids, b_d = brute.search(emb[:24], 6)
+    s_ids, s_d = idx.search(emb[:24], 6)
+    assert _tie_tolerant_topk_check(b_ids, b_d, s_ids, s_d) == 0
+    assert len(idx) == len(brute)
+
+
+@pytest.mark.slow
+def test_sharded_multi_device_matches_brute():
+    """Acceptance bar: on 2- and 4-device CPU meshes the sharded backend
+    returns the brute oracle's top-k (after exact rescore) on the same
+    corpus recipe as this module, including after mutation churn."""
+    code = textwrap.dedent("""
+        import dataclasses, json
+        import numpy as np
+        from repro.ann.brute import BruteIndex
+        from repro.ann.sharded_index import ShardedConfig, ShardedGusIndex
+        from repro.core import BucketConfig
+        from repro.core.embedding import EmbeddingGenerator
+        from repro.data.synthetic import OGB_ARXIV_LIKE, make_dataset
+
+        data = dataclasses.replace(OGB_ARXIV_LIKE, n_points=900,
+                                   n_clusters=12)
+        ids, feats, _ = make_dataset(data)
+        gen = EmbeddingGenerator.create(
+            data.spec, BucketConfig(dense_tables=8, dense_bits=10,
+                                    scalar_widths=(2.0,)))
+        emb = gen(feats)
+        brute = BruteIndex(gen.k_max)
+        brute.upsert(ids, emb)
+        b_ids, b_d = brute.search(emb[:24], 6)
+        out = {}
+        for shards in (2, 4):
+            idx = ShardedGusIndex(gen.k_max, ShardedConfig(
+                n_shards=shards, d_proj=32, n_partitions=8, nprobe_local=0,
+                reorder=8192, pq_m=4, kmeans_iters=4, pq_iters=2))
+            idx.build(ids, emb)
+            s_ids, s_d = idx.search(emb[:24], 6)
+            close = bool(np.allclose(np.sort(b_d, -1), np.sort(s_d, -1),
+                                     atol=1e-4))
+            idx.delete(ids[100:300])
+            idx.upsert(ids[100:200], emb[100:200])
+            b2 = BruteIndex(gen.k_max)
+            b2.upsert(ids, emb)
+            b2.delete(ids[100:300])
+            b2.upsert(ids[100:200], emb[100:200])
+            _, b2_d = b2.search(emb[:24], 6)
+            _, s2_d = idx.search(emb[:24], 6)
+            churn = bool(np.allclose(np.sort(b2_d, -1), np.sort(s2_d, -1),
+                                     atol=1e-4))
+            out[str(shards)] = {"close": close, "churn": churn,
+                                "n": len(idx)}
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    for shards in ("2", "4"):
+        assert res[shards]["close"], f"{shards}-shard top-k != brute"
+        assert res[shards]["churn"], f"{shards}-shard post-churn != brute"
+        assert res[shards]["n"] == 900 - 100

@@ -1,10 +1,11 @@
 """Embedding Generator properties: determinism, IDF weighting, Filter-P
-semantics, canonical sparse form. Hypothesis pins the invariants."""
+semantics, canonical sparse form. Hypothesis pins the invariants (seeded
+random draws via _hypo_compat when hypothesis isn't installed)."""
 import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypo_compat import given, settings, st
 
 from repro.core import BucketConfig
 from repro.core.embedding import EmbeddingGenerator

@@ -1,6 +1,6 @@
 """Graph assembly + metrics + Grale helpers."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypo_compat import given, settings, st
 
 from repro.core.graph import (GraphAccumulator, edge_sets_equal,
                               edge_weight_percentiles, frac_above)

@@ -1,0 +1,233 @@
+"""Serving-engine contract: mutation-log replay, freshness accounting,
+straggler hedging against real replicas — plus edge cases of the
+neighborhood RPC helpers (``_drop_self`` / ``neighbors_of_ids``)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.ann.sharded_index import ShardedConfig
+from repro.core import (BucketConfig, DynamicGUS, GusConfig, MutationBatch,
+                        MUTATION_DELETE, MUTATION_INSERT)
+from repro.core.gus import _drop_self
+from repro.core.scorer import train_scorer
+from repro.data.stream import MutationStream, StreamConfig
+from repro.data.synthetic import OGB_ARXIV_LIKE, labeled_pairs, make_dataset
+from repro.serve.engine import EngineConfig, GusEngine
+
+DATA = dataclasses.replace(OGB_ARXIV_LIKE, n_points=400, n_clusters=8)
+BUCKETS = BucketConfig(dense_tables=8, dense_bits=10, scalar_widths=(2.0,))
+
+
+@pytest.fixture(scope="module")
+def world():
+    ids, feats, cluster = make_dataset(DATA)
+    pf, lbl = labeled_pairs(feats, cluster, 1000, DATA.spec, seed=1)
+    scorer, _ = train_scorer(jax.random.PRNGKey(0), DATA.spec, pf, lbl,
+                             steps=60)
+    return ids, feats, cluster, scorer
+
+
+def _gus(scorer, **kw):
+    defaults = dict(scann_nn=10, backend="brute")
+    defaults.update(kw)
+    return DynamicGUS(DATA.spec, BUCKETS, scorer, GusConfig(**defaults))
+
+
+def _boot(gus, ids, feats, n=200):
+    gus.bootstrap(ids[:n], {k: v[:n] for k, v in feats.items()})
+
+
+# ------------------------------------------------------ mutation-log replay
+
+def test_recover_replays_log_without_snapshot(world):
+    ids, feats, cluster, scorer = world
+    gus = _gus(scorer)
+    _boot(gus, ids, feats)
+    engine = GusEngine(gus, EngineConfig(snapshot_every=1000))  # never snaps
+    stream = MutationStream(DATA, StreamConfig(batch_size=16, seed=2),
+                            bootstrap_fraction=0.5)
+    for _, mb in zip(range(5), stream):
+        engine.submit_mutations(mb)
+    assert len(engine.mutation_log) == 5
+    # recovery target starts from the same bootstrap corpus, then replays
+    fresh = _gus(scorer)
+    _boot(fresh, ids, feats)
+    engine2 = engine.recover(fresh)
+    assert len(engine2.mutation_log) == 5
+    qids = np.asarray(sorted(gus.store._rows))[:8]
+    r1 = gus.neighbors_of_ids(qids, k=4)
+    r2 = fresh.neighbors_of_ids(qids, k=4)
+    np.testing.assert_allclose(np.sort(r1.distances, -1),
+                               np.sort(r2.distances, -1), atol=1e-5)
+
+
+def test_recover_bootstraps_replicas_from_snapshot(world):
+    ids, feats, cluster, scorer = world
+    gus = _gus(scorer)
+    _boot(gus, ids, feats)
+    engine = GusEngine(gus, EngineConfig(snapshot_every=2))
+    stream = MutationStream(DATA, StreamConfig(batch_size=16, seed=3),
+                            bootstrap_fraction=0.5)
+    for _, mb in zip(range(3), stream):
+        engine.submit_mutations(mb)
+    assert engine.snapshot_state is not None
+    fresh, replica = _gus(scorer), _gus(scorer)
+    engine2 = engine.recover(fresh, replicas=[replica])
+    assert set(replica.store._rows) == set(fresh.store._rows)
+    assert len(engine2.replicas) == 1
+
+
+def test_double_crash_keeps_snapshot_corpus(world):
+    """A second crash before the recovered engine's next snapshot must not
+    lose the snapshot corpus: recover() carries snapshot_state forward."""
+    ids, feats, cluster, scorer = world
+    gus = _gus(scorer)
+    _boot(gus, ids, feats)
+    engine = GusEngine(gus, EngineConfig(snapshot_every=2))
+    stream = MutationStream(DATA, StreamConfig(batch_size=16, seed=7),
+                            bootstrap_fraction=0.5)
+    for _, mb in zip(range(3), stream):      # snapshot after 2, 1 in log
+        engine.submit_mutations(mb)
+    live = set(gus.store._rows)
+    engine2 = engine.recover(_gus(scorer))   # crash #1
+    assert engine2.snapshot_state is not None
+    engine3 = engine2.recover(_gus(scorer))  # crash #2, no new snapshot
+    assert set(engine3.gus.store._rows) == live
+
+
+# ------------------------------------------------------ freshness accounting
+
+def test_freshness_counts_every_mutation_batch(world):
+    ids, feats, cluster, scorer = world
+    gus = _gus(scorer)
+    _boot(gus, ids, feats)
+    engine = GusEngine(gus)
+    for lo in (200, 216, 232):
+        mb = MutationBatch(
+            kinds=np.full(16, MUTATION_INSERT, np.int32),
+            ids=ids[lo:lo + 16],
+            features={k: v[lo:lo + 16] for k, v in feats.items()})
+        engine.submit_mutations(mb)
+    stats = engine.stats()
+    assert stats["freshness"]["n"] == 3
+    assert stats["freshness"]["p99_ms"] >= stats["freshness"]["p50_ms"]
+    assert len(gus.index) == 200 + 48
+
+
+# -------------------------------------------------------------- hedging
+
+def test_hedge_uses_replicas_round_robin(world):
+    ids, feats, cluster, scorer = world
+    primary, rep_a, rep_b = (_gus(scorer) for _ in range(3))
+    for g in (primary, rep_a, rep_b):
+        _boot(g, ids, feats)
+    # hedge_ms < 0: every query blows the deadline -> always hedge
+    engine = GusEngine(primary, EngineConfig(hedge_ms=-1.0),
+                       replicas=[rep_a, rep_b])
+    q = {k: v[:1] for k, v in feats.items()}
+    r1 = engine.query(q, k=5)
+    r2 = engine.query(q, k=5)
+    assert engine.hedged == 2
+    assert engine.replica_hedges == [1, 1]          # round robin
+    # replicas saw the same corpus -> identical exact answers
+    np.testing.assert_array_equal(r1.ids, r2.ids)
+    stats = engine.stats()
+    assert stats["replica_hedges"] == [1, 1]
+
+
+def test_hedge_replicas_stay_mutation_consistent(world):
+    ids, feats, cluster, scorer = world
+    primary, replica = _gus(scorer), _gus(scorer)
+    for g in (primary, replica):
+        _boot(g, ids, feats)
+    engine = GusEngine(primary, EngineConfig(hedge_ms=-1.0),
+                       replicas=[replica])
+    dels = ids[:30]
+    engine.submit_mutations(MutationBatch(
+        kinds=np.full(30, MUTATION_DELETE, np.int32), ids=dels,
+        features=None))
+    assert len(replica.index) == len(primary.index) == 200 - 30
+    res = engine.query({k: v[40:41] for k, v in feats.items()}, k=8)
+    assert engine.replica_hedges == [1]             # answer came from replica
+    assert not set(res.ids[res.ids >= 0].tolist()) & set(dels.tolist())
+
+
+def test_hedge_without_replicas_reissues_primary(world):
+    ids, feats, cluster, scorer = world
+    gus = _gus(scorer)
+    _boot(gus, ids, feats)
+    engine = GusEngine(gus, EngineConfig(hedge_ms=-1.0))
+    res = engine.query({k: v[:1] for k, v in feats.items()}, k=5)
+    assert engine.hedged == 1 and engine.replica_hedges == []
+    assert res.ids.shape == (1, 5)
+
+
+# ------------------------------------------- sharded backend through engine
+
+def test_engine_on_sharded_backend(world):
+    """The engine protocol is backend-agnostic: a 1-shard ShardedGusIndex
+    (the shard_map programs on a single-device mesh) serves mutations and
+    queries end-to-end."""
+    ids, feats, cluster, scorer = world
+    gus = _gus(scorer, backend="sharded",
+               sharded=ShardedConfig(n_shards=1, d_proj=32, n_partitions=8,
+                                     nprobe_local=0, reorder=1024, pq_m=4,
+                                     kmeans_iters=4, pq_iters=2))
+    _boot(gus, ids, feats)
+    engine = GusEngine(gus)
+    mb = MutationBatch(kinds=np.full(16, MUTATION_INSERT, np.int32),
+                       ids=ids[200:216],
+                       features={k: v[200:216] for k, v in feats.items()})
+    engine.submit_mutations(mb)
+    assert len(gus.index) == 216
+    res = engine.query({k: v[200:201] for k, v in feats.items()}, k=3)
+    assert res.ids[0, 0] == ids[200]                # finds itself
+    assert engine.stats()["freshness"]["n"] == 1
+
+
+# ---------------------------------------- _drop_self / neighbors_of_ids
+
+def test_drop_self_with_duplicate_candidate_ids():
+    ids = np.asarray([[5, 5, 3, 7]])
+    dists = np.asarray([[0.1, 0.2, 0.3, 0.4]], np.float32)
+    out_ids, out_d = _drop_self(ids, dists, np.asarray([5]), k=3)
+    # every copy of the self id is dropped, order preserved, padded to k
+    assert out_ids.tolist() == [[3, 7, -1]]
+    assert out_d[0, 2] == np.inf
+
+
+def test_drop_self_trims_to_k():
+    ids = np.asarray([[1, 2, 3, 4]])
+    dists = np.asarray([[0.1, 0.2, 0.3, 0.4]], np.float32)
+    out_ids, _ = _drop_self(ids, dists, np.asarray([9]), k=2)
+    assert out_ids.tolist() == [[1, 2]]
+
+
+def test_neighbors_k_larger_than_corpus(world):
+    ids, feats, cluster, scorer = world
+    gus = _gus(scorer)
+    _boot(gus, ids, feats, n=4)
+    res = gus.neighbors({k: v[:2] for k, v in feats.items()}, k=10)
+    assert res.ids.shape == (2, 10)
+    pad = res.ids < 0
+    assert pad.any()                                 # corpus < k -> padding
+    assert (res.weights[pad] == -np.inf).all()
+    assert (res.distances[pad] == np.inf).all()
+    # the live points themselves are all present
+    assert set(res.ids[0][res.ids[0] >= 0].tolist()) == set(
+        ids[:4].tolist())
+
+
+def test_neighbors_of_ids_after_deleting_everything(world):
+    ids, feats, cluster, scorer = world
+    gus = _gus(scorer)
+    _boot(gus, ids, feats, n=8)
+    gus.mutate(MutationBatch(kinds=np.full(8, MUTATION_DELETE, np.int32),
+                             ids=ids[:8], features=None))
+    assert len(gus.index) == 0
+    res = gus.neighbors({k: v[:3] for k, v in feats.items()}, k=5)
+    assert (res.ids == -1).all()
+    assert (res.weights == -np.inf).all()
+    assert (res.distances == np.inf).all()

@@ -10,7 +10,7 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo_compat import given, settings, st
 
 from repro.ann.brute import BruteIndex
 from repro.core import BucketConfig

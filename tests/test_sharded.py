@@ -35,9 +35,9 @@ def test_sharded_query_matches_local_oracle():
         from repro.ann.sharded import (GusCellConfig, index_shapes,
                                        make_query_step)
         from repro.core.types import PAD_INDEX
+        from repro.launch.mesh import make_test_mesh, mesh_context
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_test_mesh((2, 4), ("data", "model"))
         cell = GusCellConfig(n_rows=8*64, k_dims=4, d_proj=16, pq_m=4,
                              n_partitions=16, slab=32, nprobe_local=2,
                              query_batch=8, top_k=5)
@@ -56,7 +56,7 @@ def test_sharded_query_matches_local_oracle():
         q_val = jnp.asarray(rng.random((8, cell.k_dims)), jnp.float32)
         q_sk = jnp.asarray(rng.normal(size=(8, cell.d_proj)), jnp.float32)
         import dataclasses as dc
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             step = make_query_step(mesh, cell)
             rows, dists = jax.jit(step)(q_idx, q_val, q_sk, state)
             hier = make_query_step(mesh, dc.replace(cell, merge="hier"))
@@ -85,6 +85,84 @@ def test_sharded_query_matches_local_oracle():
 
 
 @pytest.mark.slow
+def test_sharded_mutate_routes_and_tombstones():
+    """The mutate step's returned landing sites must be the device truth:
+    every (part, pos) it reports holds exactly the row that was appended,
+    padding rows land nowhere, and the delete step clears exactly the
+    reported sites — on a multi-axis (2x4) mesh."""
+    res = _run(textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.ann.sharded import (GusCellConfig, make_delete_step,
+                                       make_mutate_step, PAD_ID)
+        from repro.core.types import PAD_INDEX
+        from repro.launch.mesh import make_test_mesh, mesh_context
+
+        mesh = make_test_mesh((2, 4), ("data", "model"))
+        cell = GusCellConfig(k_dims=4, d_proj=16, pq_m=4, n_partitions=16,
+                             slab=32, mutate_batch=64)
+        rng = np.random.default_rng(1)
+        c, s = cell.n_partitions, cell.slab
+        state = {
+          "centroids": jnp.asarray(rng.normal(size=(c, cell.d_proj)),
+                                   jnp.float32),
+          "books": jnp.asarray(
+              rng.normal(size=(cell.pq_m, 256, cell.d_proj//cell.pq_m)),
+              jnp.float32),
+          "members_idx": jnp.full((c, s, cell.k_dims), PAD_INDEX,
+                                  jnp.uint32),
+          "members_val": jnp.zeros((c, s, cell.k_dims), jnp.float32),
+          "codes": jnp.zeros((c, s, cell.pq_m), jnp.uint8),
+          "valid": jnp.zeros((c, s), bool),
+          "counts": jnp.zeros((c,), jnp.int32),
+        }
+        n_real = 48
+        ids = np.full((cell.mutate_batch,), int(PAD_ID), np.uint32)
+        ids[:n_real] = np.arange(100, 100 + n_real, dtype=np.uint32)
+        new_idx = jnp.asarray(
+            rng.integers(0, 30, (cell.mutate_batch, cell.k_dims)),
+            jnp.uint32)
+        new_val = jnp.asarray(rng.random((cell.mutate_batch, cell.k_dims)),
+                              jnp.float32)
+        new_sk = jnp.asarray(
+            rng.normal(size=(cell.mutate_batch, cell.d_proj)), jnp.float32)
+        new_codes = jnp.asarray(
+            rng.integers(0, 256, (cell.mutate_batch, cell.pq_m)), jnp.uint8)
+        with mesh_context(mesh):
+            mutate = jax.jit(make_mutate_step(mesh, cell))
+            state, (r_part, r_pos) = mutate(
+                jnp.asarray(ids), new_idx, new_val, new_sk, new_codes, state)
+            r_part, r_pos = np.asarray(r_part), np.asarray(r_pos)
+            m_idx = np.asarray(state["members_idx"])
+            valid = np.asarray(state["valid"])
+            ok_rows = bool((r_part[:n_real] >= 0).all())
+            ok_pad = bool((r_part[n_real:] == -1).all())
+            placed = all(
+                (m_idx[r_part[i], r_pos[i]] == np.asarray(new_idx[i])).all()
+                and valid[r_part[i], r_pos[i]]
+                for i in range(n_real))
+            ok_count = int(valid.sum()) == n_real
+            # tombstone half of the batch
+            dels = cell.mutate_batch
+            parts = np.full((dels,), -1, np.int32)
+            poss = np.zeros((dels,), np.int32)
+            parts[:n_real//2] = r_part[:n_real//2]
+            poss[:n_real//2] = r_pos[:n_real//2]
+            delete = jax.jit(make_delete_step(mesh, cell))
+            state = delete(jnp.asarray(parts), jnp.asarray(poss), state)
+            valid2 = np.asarray(state["valid"])
+            cleared = all(not valid2[r_part[i], r_pos[i]]
+                          for i in range(n_real//2))
+            kept = all(valid2[r_part[i], r_pos[i]]
+                       for i in range(n_real//2, n_real))
+        print(json.dumps({"ok_rows": ok_rows, "ok_pad": ok_pad,
+                          "placed": placed, "ok_count": ok_count,
+                          "cleared": cleared, "kept": kept}))
+    """))
+    assert all(res.values()), res
+
+
+@pytest.mark.slow
 def test_compressed_dp_step_trains():
     res = _run(textwrap.dedent("""
         import json, dataclasses
@@ -96,6 +174,7 @@ def test_compressed_dp_step_trains():
                                             make_compressed_dp_train_step,
                                             init_ef_state, make_train_step)
         cfg = reduced_config("qwen3-8b")
+        from repro.launch.mesh import mesh_context
         mesh = make_test_mesh((8,), ("data",))
         opt = AdamWConfig(lr=1e-3)
         params, opt_state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
@@ -103,7 +182,7 @@ def test_compressed_dp_step_trains():
         step = make_compressed_dp_train_step(cfg, opt, mesh)
         rng = np.random.default_rng(0)
         losses = []
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             jit_step = jax.jit(step)
             for i in range(8):
                 batch = {"tokens": jnp.asarray(rng.integers(0, 64, (16, 16))),

@@ -120,8 +120,8 @@ def test_async_checkpointer(tmp_path):
 def test_elastic_restore_with_sharding(tmp_path):
     """Elastic resume: restore places leaves with the target sharding of
     the *current* (here trivial 1-device) mesh."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_test_mesh
+    mesh = make_test_mesh((1,), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P
     tree = {"w": jnp.arange(8, dtype=jnp.float32)}
     ckpt.save(str(tmp_path), 1, tree)

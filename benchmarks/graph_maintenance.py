@@ -1,0 +1,120 @@
+"""Maintained-graph benchmark: the paper's actual deliverable is a graph
+kept correct under mutations ("tens of milliseconds of latency" per
+update), consumed by clustering (Android Security, §1/§5). Reports
+
+* **edges/sec** sustained through the two-sided update path and the
+  per-mutation graph-update latency (p50/p95);
+* **staleness vs. an offline rebuild**: after stream prefixes, recall of
+  the maintained edge set against ``GraphAccumulator`` over fresh
+  ``neighbors_of_ids`` calls at matched k (union-of-top-k, the §5 graph);
+* **CC convergence**: hash-to-min rounds over the dirty frontier and
+  exactness vs. the offline union-find oracle;
+* the ``neighbors_of_ids`` **fast path** speedup (graph rows vs. the
+  embed->search->score pipeline).
+
+    PYTHONPATH=src python -m benchmarks.graph_maintenance [--smoke]
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import BUCKET_CFG, DATASETS, corpus, emit
+from repro.ann.scann import ScannConfig
+from repro.core import DynamicGUS, GusConfig
+from repro.core.grale import top_k_per_point
+from repro.core.graph import GraphAccumulator
+from repro.data.stream import MutationStream, StreamConfig
+from repro.graph.cc import offline_components
+from repro.graph.store import GraphConfig
+
+
+def offline_rebuild(gus: DynamicGUS, k: int) -> set:
+    """The offline comparison graph: fresh neighborhoods of every live
+    point, symmetrized and trimmed to each point's top-k (matched-k)."""
+    live = gus.store.ids()
+    acc = GraphAccumulator()
+    for lo in range(0, live.size, 256):
+        chunk = live[lo:lo + 256]
+        acc.add_result(chunk, gus._index_neighbors_of_ids(chunk, k))
+    pairs, weights = acc.edges()
+    if not pairs.size:
+        return set()
+    keep = top_k_per_point(pairs, weights, int(pairs.max()) + 1, k)
+    return {tuple(p) for p in pairs[keep].tolist()}
+
+
+def run(dataset: str = "arxiv", n: int = 1500, batches: int = 12,
+        k: int = 8, check_every: int = 4, backend: str = "scann") -> dict:
+    ids, feats, cluster, spec, scorer, _ = corpus(dataset)
+    data_cfg = dataclasses.replace(DATASETS[dataset], n_points=n)
+    gus = DynamicGUS(spec, BUCKET_CFG, scorer, GusConfig(
+        scann_nn=k, backend=backend,
+        scann=ScannConfig(d_proj=64, n_partitions=32, nprobe=8,
+                          reorder=max(128, 8 * k)),
+        graph=GraphConfig(k=k, capacity=2 * n)))
+    stream = MutationStream(data_cfg, StreamConfig(batch_size=64, seed=7),
+                            bootstrap_fraction=0.5)
+    bids, bfeats = stream.bootstrap()
+    t0 = time.perf_counter()
+    gus.bootstrap(bids, bfeats)
+    boot_s = time.perf_counter() - t0
+    emit(f"graph_bootstrap_{dataset}_n{len(bids)}", boot_s * 1e6,
+         f"edges={gus.graph.stats()['edges']}")
+
+    recalls, cc_exact, cc_iters = [], [], []
+    for i, batch in zip(range(batches), stream):
+        gus.mutate(batch)
+        inc = gus.graph.components()
+        cc_iters.append(gus.graph.cc_iters)
+        if (i + 1) % check_every == 0 or i == batches - 1:
+            offline = offline_rebuild(gus, k)
+            mine = {tuple(p) for p in gus.graph.edges()[0].tolist()}
+            recall = len(offline & mine) / max(len(offline), 1)
+            recalls.append(recall)
+            off_cc = offline_components(
+                gus.graph.edges()[0], np.asarray(sorted(gus.graph.slot_of)))
+            cc_exact.append(inc == off_cc)
+            emit(f"graph_staleness_{dataset}_b{i + 1}", recall * 1e6,
+                 f"recall={recall:.4f};offline_edges={len(offline)};"
+                 f"maintained_edges={len(mine)}")
+
+    maint = gus.graph_timer.summary()
+    graph_s = sum(gus.graph_timer.samples_ms) / 1e3
+    edges_per_s = gus.graph.edges_added / max(graph_s, 1e-9)
+    emit(f"graph_maintenance_{dataset}", maint["p50_ms"] * 1e3,
+         f"p95_ms={maint['p95_ms']:.1f};edges_per_s={edges_per_s:.0f}")
+    emit(f"graph_cc_{dataset}", float(np.mean(cc_iters)),
+         f"exact={all(cc_exact)};max_iters={max(cc_iters)}")
+
+    # fast path: serve neighborhoods from the maintained rows
+    sample = gus.store.ids()[:64]
+    for path, fn in (("fast", gus.neighbors_of_ids),
+                     ("index", gus._index_neighbors_of_ids)):
+        fn(sample[:1], k)                                # warm jit caches
+        t0 = time.perf_counter()
+        for lo in range(0, sample.size, 8):
+            fn(sample[lo:lo + 8], k)
+        emit(f"graph_query_{path}_{dataset}",
+             (time.perf_counter() - t0) / (sample.size // 8) * 1e6)
+
+    return {"dataset": dataset, "recalls": recalls, "cc_exact": all(cc_exact),
+            "cc_iters_mean": float(np.mean(cc_iters)),
+            "edges_per_s": edges_per_s, "maintenance": maint}
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus / few batches (the CI lane)")
+    args = ap.parse_args()
+    if args.smoke:
+        out = run("arxiv", n=600, batches=4, k=5, check_every=2)
+        assert out["cc_exact"], "incremental CC diverged from offline"
+    else:
+        for ds in ("arxiv", "products"):
+            print(run(ds))

@@ -54,10 +54,13 @@ def run(dataset: str = "arxiv", n: int = 4000, queries: int = 200) -> list:
 
 
 def run_sharded(dataset: str = "arxiv", n: int = 2000, queries: int = 100,
-                shards=SHARD_SWEEP, scann_nn: int = 10) -> list:
+                shards=SHARD_SWEEP, scann_nn: int = 10,
+                merge: str = "flat") -> list:
     """Scale-out trajectory: the same workload against the sharded backend
-    at 1/2/4 index shards. Shard counts beyond the visible device count are
-    reported as skipped (run this module standalone to force 4 devices)."""
+    at 1/2/4 index shards, under either cross-shard candidate-merge
+    schedule ("flat" all_gather or the two-stage "hier"). Shard counts
+    beyond the visible device count are reported as skipped (run this
+    module standalone to force 4 devices)."""
     import jax
 
     from repro.ann.sharded_index import ShardedConfig
@@ -67,9 +70,10 @@ def run_sharded(dataset: str = "arxiv", n: int = 2000, queries: int = 100,
     rows = []
     rng = np.random.default_rng(0)
     sample = rng.choice(n, queries, replace=False)
+    tag = "" if merge == "flat" else f"_{merge}"
     for n_shards in shards:
         if n_shards > len(jax.devices()):
-            emit(f"latency_sharded_{dataset}_s{n_shards}", 0.0,
+            emit(f"latency_sharded_{dataset}_s{n_shards}{tag}", 0.0,
                  f"SKIP:need_{n_shards}_devices")
             continue
         gus = DynamicGUS(spec, BUCKET_CFG, scorer, GusConfig(
@@ -78,15 +82,17 @@ def run_sharded(dataset: str = "arxiv", n: int = 2000, queries: int = 100,
                 n_shards=n_shards, d_proj=64,
                 n_partitions=max(16, n_shards * 8), nprobe_local=0,
                 reorder=max(128, scann_nn * 4), pq_m=8,
-                kmeans_iters=8, pq_iters=4)))
+                kmeans_iters=8, pq_iters=4, merge=merge)))
         gus.bootstrap(ids[:n], sub)
         gus.neighbors_of_ids(ids[:1], k=scann_nn)      # warm jit caches
         gus.query_timer.samples_ms.clear()
         for q in sample:
             gus.neighbors_of_ids(ids[q:q + 1], k=scann_nn)
         s = gus.query_timer.summary()
-        rows.append({"dataset": dataset, "shards": n_shards, **s})
-        emit(f"latency_sharded_{dataset}_s{n_shards}", s["p50_ms"] * 1e3,
+        rows.append({"dataset": dataset, "shards": n_shards, "merge": merge,
+                     **s})
+        emit(f"latency_sharded_{dataset}_s{n_shards}{tag}",
+             s["p50_ms"] * 1e3,
              f"p95_ms={s['p95_ms']:.1f};p99_ms={s['p99_ms']:.1f}")
     return rows
 
@@ -97,13 +103,17 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small corpus / few queries (the CI lane)")
+    ap.add_argument("--merge", default="flat", choices=("flat", "hier"),
+                    help="cross-shard candidate-merge schedule for the "
+                         "sharded sweep (ROADMAP: hier on the CPU mesh)")
     args = ap.parse_args()
     if args.smoke:
         run("arxiv", n=800, queries=30)
-        run_sharded("arxiv", n=800, queries=20, shards=(1, 2))
+        run_sharded("arxiv", n=800, queries=20, shards=(1, 2),
+                    merge=args.merge)
     else:
         for ds in ("arxiv", "products"):
             for r in run(ds):
                 print(r)
-            for r in run_sharded(ds):
+            for r in run_sharded(ds, merge=args.merge):
                 print(r)

@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   latency_sharded — scale-out: sharded backend over shards in {1,2,4}
   resources    — Fig. 10 (CPU time / max memory)
   mutations    — §5.2 insert/update/delete latencies
+  graph        — maintained-graph workload: edges/sec, staleness vs.
+                 offline rebuild, incremental-CC convergence
   kernels      — kernel microbenchmarks
   roofline     — §Roofline terms from dry-run records (if present)
 
@@ -28,9 +30,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (edge_quality, grale_buckets, kernels_micro,
-                            latency, lemma41, mutations, resources, roofline,
-                            topk_compare)
+    from benchmarks import (edge_quality, grale_buckets, graph_maintenance,
+                            kernels_micro, latency, lemma41, mutations,
+                            resources, roofline, topk_compare)
 
     n_small = 800 if args.fast else 1200
     n_mid = 1000 if args.fast else 3000
@@ -60,6 +62,10 @@ def main() -> None:
         ("mutations", lambda: [mutations.run(ds, n=n_mid,
                                              ops=50 if args.fast else 150)
                                for ds in ("arxiv", "products")]),
+        ("graph", lambda: [graph_maintenance.run(
+            ds, n=n_small, batches=6 if args.fast else 12,
+            check_every=3 if args.fast else 4)
+            for ds in ("arxiv", "products")]),
         ("kernels", kernels_micro.run),
         ("roofline", roofline.run),
     ]

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Minimal CI: quick tier-1 lane (no subprocess-mesh tests) + a CPU latency
-# smoke that exercises the single- and multi-shard serving paths.
+# smoke that exercises the single- and multi-shard serving paths + a
+# maintained-graph smoke (edges/sec, staleness, incremental-CC exactness).
 #
 #   ./ci.sh          # quick lane
 #   ./ci.sh --full   # the whole tier-1 suite, slow tests included
@@ -11,7 +12,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${1:-}" == "--full" ]]; then
     python -m pytest -x -q
 else
+    # quick lane (includes the graph-store/CC suites of tests/test_graph*.py)
     python -m pytest -x -q -m "not slow"
 fi
 
 python -m benchmarks.latency --smoke
+python -m benchmarks.graph_maintenance --smoke

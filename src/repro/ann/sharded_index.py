@@ -66,6 +66,7 @@ class ShardedConfig:
     pq_iters: int = 6
     eta: float = 1.0            # anisotropic weight for codebook training
     seed: int = 13
+    merge: str = "flat"         # cross-shard candidate merge: "flat" | "hier"
 
 
 class ShardedGusIndex:
@@ -82,7 +83,8 @@ class ShardedGusIndex:
                 "subspaces")
         self.k_dims = k_dims
         self.cfg = cfg
-        self.mesh = make_gus_mesh(cfg.n_shards)
+        self.mesh = make_gus_mesh(cfg.n_shards,
+                                  two_level=cfg.merge == "hier")
         self.trained = False
         self.slab = cfg.slab
         self.state: dict | None = None
@@ -109,7 +111,7 @@ class ShardedGusIndex:
             slab=self.slab, nprobe_local=npl,
             query_batch=query_batch or cfg.query_batch,
             mutate_batch=cfg.mutate_batch, top_k=top_k or 10,
-            reorder=cfg.reorder, merge="flat")
+            reorder=cfg.reorder, merge=cfg.merge)
 
     def _sketch(self, emb: SparseBatch) -> jax.Array:
         return count_sketch(emb, self.cfg.d_proj, self.cfg.seed)

@@ -12,6 +12,8 @@ from repro.core.embedding import EmbeddingGenerator
 _LAZY = {
     "DynamicGUS": ("repro.core.gus", "DynamicGUS"),
     "GusConfig": ("repro.core.gus", "GusConfig"),
+    "GraphConfig": ("repro.graph.store", "GraphConfig"),
+    "DynamicGraphStore": ("repro.graph.store", "DynamicGraphStore"),
     "GraleConfig": ("repro.core.grale", "GraleConfig"),
     "grale_graph": ("repro.core.grale", "grale_graph"),
 }

@@ -36,6 +36,7 @@ from repro.core.embedding import EmbeddingGenerator
 from repro.core.scorer import pair_features, scorer_apply
 from repro.core.types import (FeatureSpec, MutationBatch, NeighborResult,
                               MUTATION_DELETE)
+from repro.graph.store import DynamicGraphStore, GraphConfig
 from repro.utils.timing import Timer
 
 
@@ -47,6 +48,8 @@ class GusConfig:
     backend: str = "scann"      # "scann" | "brute" | "sharded"
     scann: ScannConfig = ScannConfig()
     sharded: ShardedConfig = ShardedConfig()
+    # maintained-graph layer (repro.graph): None disables maintenance
+    graph: GraphConfig | None = None
 
 
 def make_index(k_dims: int, cfg: GusConfig):
@@ -74,6 +77,10 @@ class FeatureStore:
     def drop(self, ids) -> None:
         for pid in np.asarray(ids).tolist():
             self._rows.pop(pid, None)
+
+    def ids(self) -> np.ndarray:
+        """Live point ids, ascending (the public view of the corpus)."""
+        return np.asarray(sorted(self._rows), np.int64)
 
     def gather(self, ids: np.ndarray) -> dict:
         """Batch features for ids (missing ids get zeros)."""
@@ -103,15 +110,19 @@ class DynamicGUS:
         self.scorer_params = scorer_params
         self.store = FeatureStore(spec)
         self.index = make_index(self.embedder.k_max, cfg)
+        self.graph = DynamicGraphStore(cfg.graph) if cfg.graph else None
         self.mutation_timer = Timer("mutation")
         self.query_timer = Timer("neighbors")
+        self.graph_timer = Timer("graph")
 
     # ----------------------------------------------------- offline (§4.3)
 
     def bootstrap(self, ids: np.ndarray, features: Mapping[str, np.ndarray],
-                  ) -> None:
+                  build_graph: bool = True) -> None:
         """Offline preprocessing: compute IDF/filter tables from the initial
-        corpus, (re)build the index, and load all points."""
+        corpus, (re)build the index, and load all points. The maintained
+        graph (if configured) is seeded from full-corpus neighborhoods;
+        pass ``build_graph=False`` when restoring it from a snapshot."""
         bucket_ids, valid = self.embedder.buckets(features)
         bucket_ids, valid = np.asarray(bucket_ids), np.asarray(valid)
         n = len(ids)
@@ -122,11 +133,25 @@ class DynamicGUS:
         emb = self.embedder(features)
         self.index.build(ids, emb)
         self.store.put(ids, features)
+        if self.graph is not None:
+            self.graph = DynamicGraphStore(self.cfg.graph)   # fresh corpus
+            if build_graph:
+                with self.graph_timer:
+                    self.graph.ensure_ids(np.asarray(ids))
+                    for lo in range(0, len(ids), 256):
+                        chunk = np.asarray(ids[lo:lo + 256])
+                        self.graph.upsert(chunk, self._index_neighbors_of_ids(
+                            chunk, self.graph.cfg.probe_k(), timed=False))
+                    rep = self.graph.take_repair_ids(limit=len(ids))
+                    if rep.size:
+                        self.graph.upsert(rep, self._index_neighbors_of_ids(
+                            rep, self.graph.cfg.probe_k(), timed=False),
+                            purge=False)
 
     def periodic_reload(self) -> None:
         """Recompute IDF/filter from the live corpus and retrain the index
         (the paper's periodic consistency refresh)."""
-        ids = np.asarray(sorted(self.store._rows), np.int64)
+        ids = self.store.ids()
         if ids.size == 0:
             return
         feats = self.store.gather(ids)
@@ -145,16 +170,20 @@ class DynamicGUS:
 
     def mutate(self, batch: MutationBatch) -> int:
         """Insert / update / delete a batch of points (paper §3.3.1-.2).
-        Returns the number of points acknowledged."""
+        Returns the number of points acknowledged. When a maintained graph
+        is configured, every mutation also updates it: deletes tombstone
+        the row and purge back-edges; upserts re-query the point's scored
+        neighborhood and apply two-sided edge updates."""
         with self.mutation_timer:
             kinds = np.asarray(batch.kinds)
             ids = np.asarray(batch.ids)
             del_mask = kinds == MUTATION_DELETE
-            if del_mask.any():
-                dels = ids[del_mask]
+            dels = ids[del_mask] if del_mask.any() else None
+            if dels is not None:
                 self.index.delete(dels)
                 self.store.drop(dels)
             up_mask = ~del_mask
+            up_ids = None
             if up_mask.any():
                 up_ids = ids[up_mask]
                 feats = {k: np.asarray(v)[up_mask]
@@ -162,6 +191,22 @@ class DynamicGUS:
                 emb = self.embedder(feats)
                 self.index.upsert(up_ids, emb)
                 self.store.put(up_ids, feats)
+        if self.graph is not None:
+            with self.graph_timer:
+                if dels is not None:
+                    self.graph.delete(dels)
+                if up_ids is not None:
+                    self.graph.upsert(up_ids, self._index_neighbors_of_ids(
+                        up_ids, self.graph.cfg.probe_k(), timed=False))
+                # repair: rows left under-full by deletes/evictions get a
+                # fresh neighborhood merged in (no purge — embeddings of
+                # the repaired points did not change)
+                rep = self.graph.take_repair_ids()
+                if rep.size:
+                    self.graph.upsert(
+                        rep, self._index_neighbors_of_ids(
+                            rep, self.graph.cfg.probe_k(), timed=False),
+                        purge=False)
         return int(ids.size)
 
     # --------------------------------------------------- neighborhood RPC
@@ -171,29 +216,54 @@ class DynamicGUS:
                   exclude_ids: np.ndarray | None = None) -> NeighborResult:
         """Neighborhood of (possibly new) points given their features
         (paper §3.3.3): embed -> ANN search -> score -> respond."""
-        k = k or self.cfg.scann_nn
         with self.query_timer:
-            emb = self.embedder(features)
-            ids, dists = self.index.search(emb, k + (exclude_ids is not None))
-            if exclude_ids is not None:
-                ids, dists = _drop_self(ids, dists, np.asarray(exclude_ids), k)
-            cand_feats = self.store.gather(ids)
-            flat_q = {kk: np.repeat(np.asarray(v), ids.shape[1], axis=0)
-                      for kk, v in features.items()}
-            flat_c = {kk: v.reshape((-1,) + v.shape[2:])
-                      for kk, v in cand_feats.items()}
-            weights = np.asarray(scorer_apply(
-                self.scorer_params, pair_features(flat_q, flat_c, self.spec)))
-            weights = weights.reshape(ids.shape)
-            weights = np.where(ids >= 0, weights, -np.inf)
+            return self._neighbors_impl(features, k, exclude_ids)
+
+    def _neighbors_impl(self, features, k, exclude_ids) -> NeighborResult:
+        k = k or self.cfg.scann_nn
+        emb = self.embedder(features)
+        ids, dists = self.index.search(emb, k + (exclude_ids is not None))
+        if exclude_ids is not None:
+            ids, dists = _drop_self(ids, dists, np.asarray(exclude_ids), k)
+        cand_feats = self.store.gather(ids)
+        flat_q = {kk: np.repeat(np.asarray(v), ids.shape[1], axis=0)
+                  for kk, v in features.items()}
+        flat_c = {kk: v.reshape((-1,) + v.shape[2:])
+                  for kk, v in cand_feats.items()}
+        weights = np.asarray(scorer_apply(
+            self.scorer_params, pair_features(flat_q, flat_c, self.spec)))
+        weights = weights.reshape(ids.shape)
+        weights = np.where(ids >= 0, weights, -np.inf)
         return NeighborResult(ids=ids, weights=weights.astype(np.float32),
                               distances=dists)
 
     def neighbors_of_ids(self, ids: np.ndarray, k: int | None = None
                          ) -> NeighborResult:
-        """Neighborhood of existing points (self-match excluded)."""
+        """Neighborhood of existing points (self-match excluded).
+
+        With a maintained graph, requests at k <= the maintenance k are
+        served straight from the graph rows — no re-embedding, no ANN
+        search (the paper's "graph building" product surface)."""
+        ids = np.asarray(ids)
+        k = k or self.cfg.scann_nn
+        if (self.graph is not None and k <= self.graph.cfg.k
+                and self.graph.has_ids(ids)):
+            with self.query_timer:
+                return self.graph.neighbors_of_ids(ids, k)
+        return self._index_neighbors_of_ids(ids, k)
+
+    def _index_neighbors_of_ids(self, ids: np.ndarray, k: int | None = None,
+                                timed: bool = True) -> NeighborResult:
+        """The embed -> search -> score path, bypassing the graph (used by
+        graph maintenance itself and as the fast path's fallback). Graph
+        maintenance passes ``timed=False`` so its internal re-queries don't
+        pollute the serving query-latency accounting (they are billed to
+        ``graph_timer`` instead)."""
         feats = self.store.gather(np.asarray(ids))
-        return self.neighbors(feats, k, exclude_ids=np.asarray(ids))
+        ids = np.asarray(ids)
+        if timed:
+            return self.neighbors(feats, k, exclude_ids=ids)
+        return self._neighbors_impl(feats, k, exclude_ids=ids)
 
 
 def _drop_self(ids, dists, self_ids, k):

@@ -1,0 +1,36 @@
+"""Maintained dynamic graph — the paper's actual deliverable.
+
+Dynamic GUS does not exist to answer one-off ANN queries: its product is a
+*graph* that stays correct while the corpus mutates ("maintains a graph
+construction in a dynamic setting with tens of milliseconds of latency"),
+and its flagship consumer (Android Security, paper §1/§5) clusters that
+graph to catch harmful apps. This package is the maintained-state layer on
+top of the GUS mutation path:
+
+  store.py — ``DynamicGraphStore``: device-resident, symmetrized top-k
+             adjacency in fixed-width ``(capacity, width)`` neighbor-slot +
+             weight arrays. Upserts apply two-sided edge updates (forward
+             edges from the point's scored neighborhood, back-edges pushed
+             into each neighbor's row by a jitted merge-and-retop-k built
+             on ``kernels/topk_select``); deletes tombstone the row and
+             purge every back-reference. Evictions at full rows are
+             mirrored so the edge set stays exactly symmetric. Also the
+             ``neighbors_of_ids`` fast path (serve straight from the
+             maintained rows, no re-embed / re-search) and
+             snapshot/restore of the whole graph state.
+
+  cc.py    — online connected components: hash-to-min label propagation in
+             jax that converges only over the dirty frontier (slots whose
+             incident edges changed since the last pass); components that
+             lost an edge are reset and relabelled exactly. Plus the
+             offline union-find oracle the tests/benchmarks compare
+             against.
+
+``core.gus.DynamicGUS`` drives maintenance from its mutation RPCs when
+``GusConfig.graph`` is set; ``serve.engine.GusEngine`` snapshots/recovers
+the graph with the rest of the serving state; ``benchmarks/
+graph_maintenance.py`` measures edges/sec, staleness vs. an offline
+rebuild, and CC convergence.
+"""
+from repro.graph.store import DynamicGraphStore, GraphConfig
+from repro.graph.cc import offline_components, propagate_labels

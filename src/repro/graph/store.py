@@ -1,0 +1,559 @@
+"""Device-resident, incrementally maintained top-k adjacency.
+
+``DynamicGraphStore`` is the fixed-shape TPU-style layout of an online
+k-NN graph (Debatty et al.'s two-sided update discipline on top of the GUS
+mutation path): every live point owns a *slot*; slot ``s``'s row holds up
+to ``width`` (neighbor-slot, weight) entries sorted by weight descending
+in ``nbr_slots``/``nbr_w`` — two device arrays of shape ``(capacity,
+width)``. The graph is kept *exactly symmetric*: an edge (a, b, w) is
+present in a's row iff it is present in b's row with the same weight.
+
+Mutation-path operations (all fixed-shape, pow2-padded, jitted):
+
+  upsert  — the engine hands us each upserted point's scored neighborhood
+            (a ``NeighborResult``); we purge the point's old edges (its
+            embedding changed), then apply **two-sided edge updates**: the
+            forward edges and the mirrored back-edges are pushed into both
+            endpoint rows by ``_merge_rows``, a merge-and-retop-k that
+            reuses ``kernels/topk_select`` (concat row + candidates,
+            dedup ids at max weight, retop-k to ``width``). When a full
+            row evicts its weakest edge, the eviction is mirrored into the
+            other endpoint so symmetry survives overflow.
+  delete  — tombstone the row and purge every back-reference with one
+            masked sweep over the adjacency (no stale slot can survive, so
+            slots recycle safely).
+
+Connected components ride on top (see ``cc.py``): the store tracks the
+dirty frontier (slots whose edges changed) and the labels of components
+that *lost* an edge (which must be reset before relabelling), so
+``components()`` does work proportional to the churn, not the corpus.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import canonical_max_edges
+from repro.core.types import NeighborResult
+from repro.graph.cc import DEAD_LABEL, propagate_labels
+from repro.kernels import ops
+from repro.utils import pow2_pad
+
+# Bounds on the jitted merge shapes: rows per call and candidates per row
+# (bigger groups run in multiple rounds — recompiles stay bounded).
+_MAX_ROWS = 1024
+_MAX_CANDS = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphConfig:
+    k: int = 10          # forward edges inserted per upsert (maintenance k)
+    # row width (0 -> 8k). Headroom matters: the union-of-top-k graph gives
+    # hub points in-degree well past k, and a saturated row evicts edges
+    # the union semantics wants to keep (recall vs. memory trade-off).
+    width: int = 0
+    capacity: int = 1024  # initial slot count; the store doubles on demand
+    # maintenance queries retrieve this many candidates (0 -> 2k): pushing
+    # back-edges past k lets an insert reach points whose own top-k it
+    # entered (the reverse-kNN updates of online graph building)
+    probe: int = 0
+    # deletes/evictions leave rows under-full; the engine re-queries up to
+    # this many of them per mutation batch (Debatty-style online repair)
+    repair_per_batch: int = 256
+
+    def row_width(self) -> int:
+        return self.width or 8 * self.k
+
+    def probe_k(self) -> int:
+        return self.probe or 2 * self.k
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def _merge_rows(nbr_slots, nbr_w, rows, cand_slots, cand_w, *, width: int):
+    """Merge-and-retop-k: push candidate edges into their target rows.
+
+    rows i32 [R] (capacity = padding, dropped by the OOB scatter);
+    cand_* [R, C], slot -1 / weight -inf padding. Returns the updated
+    arrays plus each target's (old row, new row) for host-side eviction
+    mirroring. Duplicate ids inside a row keep their max weight (the
+    GraphAccumulator semantics); selection reuses the topk_select kernel.
+    """
+    cap = nbr_slots.shape[0]
+    safe = jnp.clip(rows, 0, cap - 1)
+    old_s, old_w = nbr_slots[safe], nbr_w[safe]
+    ids = jnp.concatenate([old_s, cand_slots], axis=1)       # [R, M]
+    w = jnp.concatenate([old_w, cand_w], axis=1)
+    m = ids.shape[1]
+    valid = ids >= 0
+    dup = (ids[:, :, None] == ids[:, None, :]) \
+        & valid[:, :, None] & valid[:, None, :]              # [R, M, M]
+    w_best = jnp.max(jnp.where(dup, w[:, None, :], -jnp.inf), axis=-1)
+    first = jnp.argmax(dup, axis=-1) == jnp.arange(m)[None, :]
+    w_final = jnp.where(first & valid, w_best, -jnp.inf)
+    vals, idx = ops.topk_select(w_final, width)
+    keep = jnp.isfinite(vals)
+    new_s = jnp.where(keep, jnp.take_along_axis(ids, idx, axis=1), -1)
+    new_w = jnp.where(keep, vals, -jnp.inf)
+    return (nbr_slots.at[rows].set(new_s), nbr_w.at[rows].set(new_w),
+            old_s, new_s)
+
+
+@jax.jit
+def _purge_refs(nbr_slots, nbr_w, victims):
+    """Tombstone sweep: clear the victims' rows and mask every entry of the
+    adjacency that references a victim slot. victims i32 [D], -1 padding.
+    Returns (slots, weights, per-row hit mask, directed edges removed)."""
+    cap = nbr_slots.shape[0]
+    vic_ok = victims >= 0
+    hit = jnp.any((nbr_slots[:, :, None] == victims[None, None, :])
+                  & vic_ok[None, None, :], axis=-1)
+    out_s = jnp.where(hit, -1, nbr_slots)
+    out_w = jnp.where(hit, -jnp.inf, nbr_w)
+    row_hit = jnp.any(hit, axis=-1)
+    # victims' own rows clear too; entries already masked above (edges
+    # between co-deleted victims) must not be counted twice
+    safe = jnp.clip(victims, 0, cap - 1)
+    own_extra = jnp.where(vic_ok[:, None],
+                          (nbr_slots[safe] >= 0) & ~hit[safe], False)
+    removed = jnp.sum(hit) + jnp.sum(own_extra)
+    own = jnp.where(vic_ok, victims, cap)                  # OOB pad: dropped
+    out_s = out_s.at[own].set(-1)
+    out_w = out_w.at[own].set(-jnp.inf)
+    return out_s, out_w, row_hit, removed
+
+
+@jax.jit
+def _remove_in_rows(nbr_slots, nbr_w, rows, targets):
+    """Directed removal: in each rows[i], drop entries equal to any
+    targets[i, :] (mirrors evictions). rows i32 [R] (-1 pad, unique);
+    targets i32 [R, T] (-1 pad)."""
+    cap = nbr_slots.shape[0]
+    safe = jnp.clip(rows, 0, cap - 1)
+    sub_s, sub_w = nbr_slots[safe], nbr_w[safe]
+    tgt = jnp.where(targets >= 0, targets, -2)    # never matches -1 empties
+    hit = jnp.any(sub_s[:, :, None] == tgt[:, None, :], axis=-1)
+    own = jnp.where(rows >= 0, rows, cap)
+    return (nbr_slots.at[own].set(jnp.where(hit, -1, sub_s)),
+            nbr_w.at[own].set(jnp.where(hit, -jnp.inf, sub_w)),
+            jnp.sum(hit))
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _gather_topk(nbr_slots, nbr_w, slots, *, k: int):
+    """Fast-path read: each requested slot's k best edges (already just a
+    retop-k over its row — rows may hold purge holes)."""
+    cap = nbr_slots.shape[0]
+    safe = jnp.clip(slots, 0, cap - 1)
+    vals, idx = ops.topk_select(nbr_w[safe], k)
+    keep = jnp.isfinite(vals)
+    return (jnp.where(keep, jnp.take_along_axis(nbr_slots[safe], idx, 1), -1),
+            jnp.where(keep, vals, -jnp.inf))
+
+
+@jax.jit
+def _reset_components(labels, ids_dev, alive, reset_labels):
+    """Slots whose label belongs to a component that lost an edge restart
+    from their own id; they form the reset part of the dirty frontier."""
+    mask = jnp.any(labels[:, None] == reset_labels[None, :], axis=-1) & alive
+    return jnp.where(mask, ids_dev, labels), mask
+
+
+class DynamicGraphStore:
+    """Incrementally maintained symmetric top-k graph (see module doc)."""
+
+    def __init__(self, cfg: GraphConfig = GraphConfig()):
+        self.cfg = cfg
+        self.width = cfg.row_width()
+        if not 0 < self.cfg.k <= self.width:
+            raise ValueError(f"need 0 < k <= width, got k={cfg.k} "
+                             f"width={self.width}")
+        self._init_arrays(max(64, pow2_pad(cfg.capacity)))
+        # churn counters for the maintenance benchmark (directed entries)
+        self.edges_added = 0
+        self.edges_removed = 0
+
+    def _init_arrays(self, cap: int) -> None:
+        self.capacity = cap
+        self.nbr_slots = jnp.full((cap, self.width), -1, jnp.int32)
+        self.nbr_w = jnp.full((cap, self.width), -jnp.inf, jnp.float32)
+        self.ids_dev = jnp.full((cap,), -1, jnp.int32)
+        self.alive = jnp.zeros((cap,), bool)
+        self.labels = jnp.full((cap,), DEAD_LABEL, jnp.int32)
+        self.slot_of: dict[int, int] = {}
+        self.id_of_slot = np.full((cap,), -1, np.int64)
+        self._free = list(range(cap - 1, -1, -1))
+        self._dirty: set[int] = set()          # slots with changed edges
+        self._reset_labels: set[int] = set()   # components that lost edges
+        self._repair: set[int] = set()         # under-full rows to re-query
+        self._cc_cache: dict | None = None
+        self.cc_iters = 0                      # last propagation's rounds
+
+    def __len__(self) -> int:
+        return len(self.slot_of)
+
+    def has_ids(self, ids) -> bool:
+        return all(int(p) in self.slot_of
+                   for p in np.asarray(ids).reshape(-1).tolist())
+
+    # ------------------------------------------------------------- plumbing
+
+    def _grow(self) -> None:
+        cap, new = self.capacity, self.capacity * 2
+        self.nbr_slots = jnp.pad(self.nbr_slots, ((0, cap), (0, 0)),
+                                 constant_values=-1)
+        self.nbr_w = jnp.pad(self.nbr_w, ((0, cap), (0, 0)),
+                             constant_values=-jnp.inf)
+        self.ids_dev = jnp.pad(self.ids_dev, (0, cap), constant_values=-1)
+        self.alive = jnp.pad(self.alive, (0, cap))
+        self.labels = jnp.pad(self.labels, (0, cap),
+                              constant_values=DEAD_LABEL)
+        self.id_of_slot = np.concatenate(
+            [self.id_of_slot, np.full((cap,), -1, np.int64)])
+        self._free.extend(range(new - 1, cap - 1, -1))
+        self.capacity = new
+
+    def _note_removed(self, slots) -> None:
+        """Record that `slots` lost an incident edge: their components must
+        be reset before the next CC pass. Labels are frozen between
+        ``components()`` calls, so gathering them now is exact."""
+        slots = [s for s in slots if s >= 0]
+        if not slots:
+            return
+        labels = np.asarray(self.labels)
+        for s in slots:
+            lab = int(labels[s])
+            if lab != int(DEAD_LABEL):
+                self._reset_labels.add(lab)
+        self._dirty.update(slots)
+        self._cc_cache = None
+
+    def _apply_purge(self, victim_slots: list) -> None:
+        """Clear victims' rows and every reference to them."""
+        if not victim_slots:
+            return
+        d = pow2_pad(len(victim_slots), None)
+        vic = np.full((d,), -1, np.int32)
+        vic[:len(victim_slots)] = victim_slots
+        self.nbr_slots, self.nbr_w, row_hit, removed = _purge_refs(
+            self.nbr_slots, self.nbr_w, jnp.asarray(vic))
+        touched = np.flatnonzero(np.asarray(row_hit)).tolist()
+        self._note_removed(list(victim_slots) + touched)
+        # every row that lost an edge gets re-queried: its fresh top-k may
+        # have shifted, not just shrunk (victims handle themselves — they
+        # are re-upserted or deleted by the caller)
+        self._repair.update(set(touched) - set(victim_slots))
+        self.edges_removed += int(removed)
+
+    def _note_underfull(self, slots: list) -> None:
+        """Rows that dropped below k live edges become repair candidates
+        (the engine re-queries and merges their fresh neighborhoods)."""
+        if not slots:
+            return
+        arr = np.asarray(slots, np.int64)
+        deg = np.asarray(jnp.sum(
+            self.nbr_slots[jnp.asarray(arr, jnp.int32)] >= 0, axis=-1))
+        self._repair.update(arr[deg < self.cfg.k].tolist())
+
+    # ------------------------------------------------------------ mutations
+
+    def ensure_ids(self, ids: np.ndarray) -> None:
+        """Allocate slots for ids without touching edges — bootstrap
+        pre-registration so chunked seeding can link across chunks."""
+        pids = [int(p) for p in np.asarray(ids).reshape(-1).tolist()
+                if int(p) not in self.slot_of]
+        if not pids:
+            return
+        while len(self.slot_of) + len(pids) > self.capacity:
+            self._grow()
+        slots = []
+        for pid in pids:
+            slot = self._free.pop()
+            self.slot_of[pid] = slot
+            self.id_of_slot[slot] = pid
+            slots.append(slot)
+        sl = jnp.asarray(slots, jnp.int32)
+        pv = jnp.asarray(pids, jnp.int32)
+        self.ids_dev = self.ids_dev.at[sl].set(pv)
+        self.alive = self.alive.at[sl].set(True)
+        self.labels = self.labels.at[sl].set(pv)
+        self._dirty.update(slots)
+        self._cc_cache = None
+
+    def upsert(self, ids: np.ndarray, result: NeighborResult,
+               purge: bool = True) -> None:
+        """Two-sided edge update from each upserted point's scored
+        neighborhood (row i of ``result`` belongs to ``ids[i]``).
+
+        ``purge=True`` (inserts/updates) drops the point's old edges first
+        — its embedding changed, they are stale. ``purge=False`` merges the
+        fresh neighborhood into whatever the row holds (the repair path:
+        the embedding is unchanged, existing edges are still valid)."""
+        ids = np.asarray(ids).reshape(-1)
+        res_ids = np.asarray(result.ids)
+        res_w = np.asarray(result.weights, np.float32)
+        assert res_ids.shape[0] == ids.size, "result rows must align to ids"
+        if ids.size == 0:
+            return
+        assert int(ids.max()) < np.iinfo(np.int32).max and int(ids.min()) >= 0
+        last = {int(p): i for i, p in enumerate(ids.tolist())}
+        rows_sel = sorted(last.values())
+        if purge:
+            # embedding changed: the point's old edges are stale, both sides
+            self._apply_purge([self.slot_of[int(ids[i])] for i in rows_sel
+                               if int(ids[i]) in self.slot_of])
+        self._repair.difference_update(
+            self.slot_of[int(ids[i])] for i in rows_sel
+            if int(ids[i]) in self.slot_of)
+        self.ensure_ids(np.asarray([int(ids[i]) for i in rows_sel]))
+        # directed pushes: forward (src -> nbr) and mirrored (nbr -> src)
+        push_rows, push_nbrs, push_w = [], [], []
+        for i in rows_sel:
+            pid = int(ids[i])
+            src = self.slot_of[pid]
+            for nid, w in zip(res_ids[i].tolist(), res_w[i].tolist()):
+                if nid < 0 or nid == pid or not np.isfinite(w):
+                    continue
+                dst = self.slot_of.get(int(nid))
+                if dst is None or dst == src:
+                    continue
+                push_rows += [src, dst]
+                push_nbrs += [dst, src]
+                push_w += [w, w]
+        self._push_edges(np.asarray(push_rows, np.int32),
+                         np.asarray(push_nbrs, np.int32),
+                         np.asarray(push_w, np.float32))
+
+    def delete(self, ids) -> int:
+        """Tombstone rows and purge back-edges; slots recycle."""
+        slots = []
+        for pid in np.asarray(ids).reshape(-1).tolist():
+            slot = self.slot_of.pop(int(pid), None)
+            if slot is not None:
+                slots.append(slot)
+        if not slots:
+            return 0
+        self._apply_purge(slots)            # gathers labels before clearing
+        sl = jnp.asarray(slots, jnp.int32)
+        self.ids_dev = self.ids_dev.at[sl].set(-1)
+        self.alive = self.alive.at[sl].set(False)
+        self.labels = self.labels.at[sl].set(DEAD_LABEL)
+        self.id_of_slot[np.asarray(slots)] = -1
+        self._free.extend(slots)
+        self._dirty.difference_update(slots)
+        self._repair.difference_update(slots)
+        return len(slots)
+
+    def take_repair_ids(self, limit: int | None = None) -> np.ndarray:
+        """Pop up to ``limit`` under-full points for re-querying."""
+        limit = limit if limit is not None else self.cfg.repair_per_batch
+        out = []
+        while self._repair and len(out) < limit:
+            slot = self._repair.pop()
+            pid = int(self.id_of_slot[slot])
+            if pid >= 0:                       # slot may have been recycled
+                out.append(pid)
+        return np.asarray(out, np.int64)
+
+    def _push_edges(self, rows: np.ndarray, nbrs: np.ndarray,
+                    ws: np.ndarray) -> None:
+        """Group directed pushes by target row, merge-and-retop-k, then
+        mirror any evictions so symmetry survives full rows."""
+        mirror: dict[int, set] = {}
+        while rows.size:
+            order = np.argsort(rows, kind="stable")
+            rows_s, nbrs_s, ws_s = rows[order], nbrs[order], ws[order]
+            first = np.searchsorted(rows_s, rows_s, side="left")
+            pos = np.arange(rows_s.size) - first
+            this = pos < _MAX_CANDS                # overflow -> next round
+            rows, nbrs, ws = rows_s[~this], nbrs_s[~this], ws_s[~this]
+            rows_s, nbrs_s, ws_s, pos = (rows_s[this], nbrs_s[this],
+                                         ws_s[this], pos[this])
+            uniq = np.unique(rows_s)
+            grp = np.searchsorted(uniq, rows_s)
+            c = pow2_pad(int(pos.max()) + 1, None)
+            for lo in range(0, uniq.size, _MAX_ROWS):
+                sel_rows = uniq[lo:lo + _MAX_ROWS]
+                in_chunk = (grp >= lo) & (grp < lo + _MAX_ROWS)
+                r = pow2_pad(sel_rows.size, _MAX_ROWS)
+                cand_s = np.full((r, c), -1, np.int32)
+                cand_w = np.full((r, c), -np.inf, np.float32)
+                cand_s[grp[in_chunk] - lo, pos[in_chunk]] = nbrs_s[in_chunk]
+                cand_w[grp[in_chunk] - lo, pos[in_chunk]] = ws_s[in_chunk]
+                row_arr = np.full((r,), self.capacity, np.int32)
+                row_arr[:sel_rows.size] = sel_rows
+                self.nbr_slots, self.nbr_w, old_s, new_s = _merge_rows(
+                    self.nbr_slots, self.nbr_w, jnp.asarray(row_arr),
+                    jnp.asarray(cand_s), jnp.asarray(cand_w),
+                    width=self.width)
+                old_s = np.asarray(old_s)[:sel_rows.size]
+                new_s = np.asarray(new_s)[:sel_rows.size]
+                for i, row in enumerate(sel_rows.tolist()):
+                    before = set(old_s[i][old_s[i] >= 0].tolist())
+                    cands = set(cand_s[i][cand_s[i] >= 0].tolist())
+                    after = set(new_s[i][new_s[i] >= 0].tolist())
+                    self.edges_added += len(after - before)
+                    for evicted in (before | cands) - after:
+                        mirror.setdefault(evicted, set()).add(row)
+                self._dirty.update(sel_rows.tolist())
+                self._cc_cache = None
+        if mirror:
+            # an eviction recorded in an early merge round can be undone by
+            # a later round re-pushing the same edge; only mirror removals
+            # whose forward side is really absent from the final adjacency
+            snap = np.asarray(self.nbr_slots)
+            stands: dict[int, set] = {}
+            for evicted, from_rows in mirror.items():
+                for row in from_rows:
+                    if not np.any(snap[row] == evicted):
+                        stands.setdefault(evicted, set()).add(row)
+            if stands:
+                self._remove_mirrors(stands)
+
+    def _remove_mirrors(self, mirror: dict) -> None:
+        """Evicted edge (row, e): remove the surviving (e, row) entry."""
+        all_rows = sorted(mirror)
+        t = pow2_pad(max(len(v) for v in mirror.values()), None)
+        for lo in range(0, len(all_rows), _MAX_ROWS):
+            chunk = all_rows[lo:lo + _MAX_ROWS]
+            r = pow2_pad(len(chunk), _MAX_ROWS)
+            rows = np.full((r,), -1, np.int32)
+            rows[:len(chunk)] = chunk
+            targets = np.full((r, t), -1, np.int32)
+            touched = set()
+            for i, e in enumerate(chunk):
+                tgt = sorted(mirror[e])
+                targets[i, :len(tgt)] = tgt
+                touched.add(e)
+                touched.update(tgt)
+            self._note_removed(sorted(touched))
+            self.nbr_slots, self.nbr_w, removed = _remove_in_rows(
+                self.nbr_slots, self.nbr_w, jnp.asarray(rows),
+                jnp.asarray(targets))
+            self.edges_removed += int(removed)
+            self._note_underfull(chunk)
+
+    # -------------------------------------------------------------- queries
+
+    def neighbors_of_ids(self, ids: np.ndarray, k: int | None = None
+                         ) -> NeighborResult:
+        """Serve neighborhoods straight from the maintained rows — no
+        re-embedding, no ANN search. The graph keeps no ANN distances, so
+        ``distances`` is 0 at hits / +inf at padding."""
+        k = k or self.cfg.k
+        if k > self.width:
+            raise ValueError(f"k={k} exceeds row width {self.width}")
+        ids = np.asarray(ids).reshape(-1)
+        slots = np.asarray([self.slot_of[int(p)] for p in ids.tolist()],
+                           np.int32)
+        b = pow2_pad(ids.size, None)
+        padded = np.full((b,), self.capacity, np.int32)
+        padded[:ids.size] = slots
+        sl, w = _gather_topk(self.nbr_slots, self.nbr_w, jnp.asarray(padded),
+                             k=k)
+        sl = np.asarray(sl)[:ids.size]
+        w = np.asarray(w)[:ids.size]
+        hit = sl >= 0
+        out_ids = np.where(hit, self.id_of_slot[np.where(hit, sl, 0)], -1)
+        return NeighborResult(
+            ids=out_ids.astype(np.int64),
+            weights=np.where(hit, w, -np.inf).astype(np.float32),
+            distances=np.where(hit, 0.0, np.inf).astype(np.float32))
+
+    def edges(self) -> tuple:
+        """Canonical undirected edge list (pairs int64 [E, 2] with
+        id_a < id_b, weights f32 [E]), deduped at max weight."""
+        s = np.asarray(self.nbr_slots)
+        w = np.asarray(self.nbr_w)
+        rows = np.broadcast_to(np.arange(self.capacity)[:, None], s.shape)
+        valid = (s >= 0) & np.isfinite(w)
+        pairs, best = canonical_max_edges(
+            self.id_of_slot[rows[valid]], self.id_of_slot[s[valid]],
+            w[valid])
+        return pairs, best.astype(np.float32)
+
+    # ------------------------------------------------- connected components
+
+    def components(self) -> dict:
+        """{point id -> component label (min id in component)}. Converges
+        only over the dirty frontier; exact after arbitrary interleavings
+        (components that lost an edge are reset, then relabelled)."""
+        if self._cc_cache is not None:
+            return self._cc_cache
+        labels = self.labels
+        active = np.zeros((self.capacity,), bool)
+        if self._reset_labels:
+            d = pow2_pad(len(self._reset_labels), None)
+            rl = np.full((d,), -1, np.int32)
+            rl[:len(self._reset_labels)] = sorted(self._reset_labels)
+            labels, mask = _reset_components(labels, self.ids_dev,
+                                             self.alive, jnp.asarray(rl))
+            active |= np.asarray(mask)
+        if self._dirty:
+            active[sorted(self._dirty)] = True
+        labels, iters = propagate_labels(labels, self.nbr_slots, self.alive,
+                                         jnp.asarray(active))
+        self.labels = labels
+        self.cc_iters = int(iters)
+        self._dirty.clear()
+        self._reset_labels.clear()
+        labels_np = np.asarray(labels)
+        self._cc_cache = {pid: int(labels_np[slot])
+                          for pid, slot in self.slot_of.items()}
+        return self._cc_cache
+
+    # --------------------------------------------------------- persistence
+
+    def snapshot_state(self) -> dict:
+        """Full graph state as host arrays (CC state rides along so a
+        recovered engine resumes with converged labels)."""
+        self.components()                       # fold pending churn in
+        return {
+            "cfg": self.cfg,
+            "nbr_slots": np.asarray(self.nbr_slots),
+            "nbr_w": np.asarray(self.nbr_w),
+            "ids_dev": np.asarray(self.ids_dev),
+            "alive": np.asarray(self.alive),
+            "labels": np.asarray(self.labels),
+            "id_of_slot": self.id_of_slot.copy(),
+            "slot_of": dict(self.slot_of),
+            "free": list(self._free),
+            # under-full rows still awaiting re-query must survive recovery
+            "repair": sorted(self._repair),
+        }
+
+    def restore(self, state: dict) -> None:
+        self.cfg = state["cfg"]
+        self.width = self.cfg.row_width()
+        self.capacity = state["nbr_slots"].shape[0]
+        self.nbr_slots = jnp.asarray(state["nbr_slots"])
+        self.nbr_w = jnp.asarray(state["nbr_w"])
+        self.ids_dev = jnp.asarray(state["ids_dev"])
+        self.alive = jnp.asarray(state["alive"])
+        self.labels = jnp.asarray(state["labels"])
+        self.id_of_slot = state["id_of_slot"].copy()
+        self.slot_of = dict(state["slot_of"])
+        self._free = list(state["free"])
+        self._dirty = set()
+        self._reset_labels = set()
+        self._repair = set(state.get("repair", ()))
+        self._cc_cache = None
+
+    # --------------------------------------------------------------- stats
+
+    def stats(self) -> dict:
+        n_entries = int(np.sum(np.asarray(self.nbr_slots) >= 0))
+        return {
+            "nodes": len(self.slot_of),
+            "edges": n_entries // 2,
+            "capacity": self.capacity,
+            "width": self.width,
+            "edges_added": self.edges_added,
+            "edges_removed": self.edges_removed,
+            "cc_iters": self.cc_iters,
+            "cc_components": (len(set(self._cc_cache.values()))
+                              if self._cc_cache is not None else None),
+        }

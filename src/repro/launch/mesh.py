@@ -58,18 +58,30 @@ def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     return _make_mesh(shape, axes)
 
 
-def make_gus_mesh(n_shards: int):
-    """1-D index-shard mesh over the first ``n_shards`` local devices — the
+def make_gus_mesh(n_shards: int, *, two_level: bool = False):
+    """Index-shard mesh over the first ``n_shards`` local devices — the
     CPU counterpart of the production GUS cells (ShardedGusIndex serves on
-    it; the dry-run lowers the same programs for the pod meshes)."""
+    it; the dry-run lowers the same programs for the pod meshes).
+
+    ``two_level=True`` factors the shards into a ("data", "model") grid so
+    the hierarchical candidate-merge schedule (intra-"model" gather+top-k,
+    then cross-"data") actually has a second stage to run — the 1-D mesh
+    would silently degrade "hier" to the flat all_gather."""
     have = len(jax.devices())
     if n_shards > have:
         raise ValueError(
             f"make_gus_mesh({n_shards}): only {have} device(s) visible; "
             "set XLA_FLAGS=--xla_force_host_platform_device_count="
             f"{n_shards} before jax initializes")
-    return _make_mesh((n_shards,), ("data",),
-                      devices=jax.devices()[:n_shards])
+    devices = jax.devices()[:n_shards]
+    if two_level:
+        # largest divisor <= sqrt becomes the outer "data" dim, so "model"
+        # (the stage-1 gather) gets the bigger factor, as in production
+        data = max(d for d in range(1, int(n_shards ** 0.5) + 1)
+                   if n_shards % d == 0)
+        return _make_mesh((data, n_shards // data), ("data", "model"),
+                          devices=devices)
+    return _make_mesh((n_shards,), ("data",), devices=devices)
 
 
 def dp_axes(mesh) -> tuple:

@@ -98,25 +98,35 @@ class GusEngine:
     # ------------------------------------------------------ fault tolerance
 
     def snapshot(self) -> None:
-        """Snapshot = live ids + features (the index is rebuildable state)."""
-        ids = np.asarray(sorted(self.gus.store._rows), np.int64)
+        """Snapshot = live ids + features (the index is rebuildable state)
+        + the maintained graph arrays (rebuildable too, but restoring them
+        skips the full-corpus re-query on recovery)."""
+        ids = self.gus.store.ids()
         self.snapshot_state = {
             "ids": ids,
             "features": self.gus.store.gather(ids),
+            "graph": (self.gus.graph.snapshot_state()
+                      if self.gus.graph is not None else None),
         }
         self.mutation_log.clear()
         self.log_since_snapshot = 0
 
     def recover(self, fresh_gus: DynamicGUS,
                 replicas: Sequence[DynamicGUS] = ()) -> "GusEngine":
-        """Restart onto a fresh engine: bootstrap from the snapshot, then
-        replay the mutation-log suffix (onto the new replicas too)."""
+        """Restart onto a fresh engine: bootstrap from the snapshot (graph
+        state restored rather than recomputed where both sides have one),
+        then replay the mutation-log suffix (onto the new replicas too)."""
         eng = GusEngine(fresh_gus, self.cfg, replicas)
         targets = [fresh_gus, *eng.replicas]
         if self.snapshot_state is not None and len(self.snapshot_state["ids"]):
+            graph_state = self.snapshot_state.get("graph")
             for gus in targets:
+                restorable = graph_state is not None and gus.graph is not None
                 gus.bootstrap(self.snapshot_state["ids"],
-                              self.snapshot_state["features"])
+                              self.snapshot_state["features"],
+                              build_graph=not restorable)
+                if restorable:
+                    gus.graph.restore(graph_state)
         # carry the snapshot forward: if the recovered engine crashes again
         # before its next snapshot, a second recover() must not lose the
         # snapshot corpus
@@ -130,7 +140,7 @@ class GusEngine:
     # --------------------------------------------------------------- stats
 
     def stats(self) -> dict:
-        return {
+        out = {
             "queries": self.queries,
             "hedged": self.hedged,
             "replica_hedges": list(self.replica_hedges),
@@ -138,3 +148,9 @@ class GusEngine:
             "query_latency": self.gus.query_timer.summary(),
             "mutation_latency": self.gus.mutation_timer.summary(),
         }
+        if self.gus.graph is not None:
+            out["graph"] = {
+                **self.gus.graph.stats(),
+                "maintenance_latency": self.gus.graph_timer.summary(),
+            }
+        return out

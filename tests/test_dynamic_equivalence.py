@@ -218,6 +218,86 @@ def test_sharded_single_device_matches_brute(corpus):
     assert len(idx) == len(brute)
 
 
+def test_hier_merge_runs_two_level_mesh(corpus):
+    """merge="hier" must build a ("data", "model") mesh — on the 1-D shard
+    mesh the hier branch silently degrades to the flat all_gather — and
+    still return the brute oracle's exact-rescored top-k."""
+    ids, emb, gen = corpus
+    idx = ShardedGusIndex(gen.k_max, ShardedConfig(
+        n_shards=1, d_proj=32, n_partitions=8, nprobe_local=0,
+        reorder=8192, pq_m=4, kmeans_iters=4, pq_iters=2, merge="hier"))
+    assert idx.mesh.axis_names == ("data", "model")
+    idx.build(ids, emb)
+    brute = BruteIndex(gen.k_max)
+    brute.upsert(ids, emb)
+    _, b_d = brute.search(emb[:24], 6)
+    _, s_d = idx.search(emb[:24], 6)
+    np.testing.assert_allclose(np.sort(b_d, -1), np.sort(s_d, -1), atol=1e-4)
+
+
+@pytest.mark.slow
+def test_hier_merge_multi_device_matches_brute():
+    """2- and 4-shard hier merge (1x2 / 2x2 meshes) against the brute
+    oracle, including after mutation churn."""
+    code = textwrap.dedent("""
+        import dataclasses, json
+        import numpy as np
+        from repro.ann.brute import BruteIndex
+        from repro.ann.sharded_index import ShardedConfig, ShardedGusIndex
+        from repro.core import BucketConfig
+        from repro.core.embedding import EmbeddingGenerator
+        from repro.data.synthetic import OGB_ARXIV_LIKE, make_dataset
+
+        data = dataclasses.replace(OGB_ARXIV_LIKE, n_points=900,
+                                   n_clusters=12)
+        ids, feats, _ = make_dataset(data)
+        gen = EmbeddingGenerator.create(
+            data.spec, BucketConfig(dense_tables=8, dense_bits=10,
+                                    scalar_widths=(2.0,)))
+        emb = gen(feats)
+        brute = BruteIndex(gen.k_max)
+        brute.upsert(ids, emb)
+        _, b_d = brute.search(emb[:24], 6)
+        out = {}
+        for shards in (2, 4):
+            idx = ShardedGusIndex(gen.k_max, ShardedConfig(
+                n_shards=shards, d_proj=32, n_partitions=8, nprobe_local=0,
+                reorder=8192, pq_m=4, kmeans_iters=4, pq_iters=2,
+                merge="hier"))
+            idx.build(ids, emb)
+            _, s_d = idx.search(emb[:24], 6)
+            close = bool(np.allclose(np.sort(b_d, -1), np.sort(s_d, -1),
+                                     atol=1e-4))
+            idx.delete(ids[100:300])
+            idx.upsert(ids[100:200], emb[100:200])
+            b2 = BruteIndex(gen.k_max)
+            b2.upsert(ids, emb)
+            b2.delete(ids[100:300])
+            b2.upsert(ids[100:200], emb[100:200])
+            _, b2_d = b2.search(emb[:24], 6)
+            _, s2_d = idx.search(emb[:24], 6)
+            churn = bool(np.allclose(np.sort(b2_d, -1), np.sort(s2_d, -1),
+                                     atol=1e-4))
+            out[str(shards)] = {
+                "close": close, "churn": churn,
+                "axes": list(idx.mesh.axis_names),
+                "shape": list(idx.mesh.devices.shape)}
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["4"]["shape"] == [2, 2]          # a real two-stage merge
+    for shards in ("2", "4"):
+        assert res[shards]["axes"] == ["data", "model"]
+        assert res[shards]["close"], f"{shards}-shard hier top-k != brute"
+        assert res[shards]["churn"], f"{shards}-shard hier post-churn"
+
+
 @pytest.mark.slow
 def test_sharded_multi_device_matches_brute():
     """Acceptance bar: on 2- and 4-device CPU meshes the sharded backend

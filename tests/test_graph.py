@@ -23,6 +23,42 @@ def test_accumulator_dedups_and_canonicalizes():
     assert weights[0] == np.float32(0.9)   # max weight kept
 
 
+def test_accumulator_vectorized_matches_reference():
+    """The numpy canonicalize + np.maximum.at path must agree with the
+    per-edge reference semantics (dedup undirected at max weight)."""
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, 30, size=(12,))
+    ids = rng.integers(-1, 30, size=(12, 6))
+    weights = rng.random((12, 6)).astype(np.float32)
+    weights[rng.random((12, 6)) < 0.1] = -np.inf
+    acc = GraphAccumulator()
+    acc.add_result(src, NeighborResult(
+        ids=ids, weights=weights, distances=np.zeros_like(weights)))
+    pairs = rng.integers(0, 30, size=(40, 2))
+    pw = rng.random(40).astype(np.float32)
+    acc.add_pairs(pairs, pw)
+
+    ref: dict = {}
+    for r, s in enumerate(src.tolist()):
+        for d, w in zip(ids[r].tolist(), weights[r].tolist()):
+            if d < 0 or d == s or not np.isfinite(w):
+                continue
+            key = (s, d) if s < d else (d, s)
+            if ref.get(key) is None or w > ref[key]:
+                ref[key] = w
+    for (a, b), w in zip(pairs.tolist(), pw.tolist()):
+        if a == b:
+            continue
+        key = (a, b) if a < b else (b, a)
+        if ref.get(key) is None or w > ref[key]:
+            ref[key] = w
+    got_pairs, got_w = acc.edges()
+    ref_pairs = np.asarray(sorted(ref), np.int64)
+    ref_w = np.asarray([ref[tuple(p)] for p in ref_pairs], np.float32)
+    np.testing.assert_array_equal(got_pairs, ref_pairs)
+    np.testing.assert_allclose(got_w, ref_w, rtol=1e-6)
+
+
 def test_edge_sets_equal():
     assert edge_sets_equal([[1, 2], [3, 4]], [[4, 3], [2, 1]])
     assert not edge_sets_equal([[1, 2]], [[1, 3]])

@@ -1,0 +1,307 @@
+"""Maintained-graph invariants + incremental-CC exactness + GUS wiring.
+
+The store's contract: a symmetrized top-k adjacency in fixed-width rows
+that stays *exactly symmetric* through arbitrary upsert/delete
+interleavings (evictions at full rows are mirrored), never references a
+tombstoned slot, keeps the top-width edges by weight under overflow, and
+whose incremental connected components equal an offline union-find at
+every step. On top: the DynamicGUS integration — after any prefix of a
+seeded mutation stream the maintained edges track an offline rebuild, and
+the engine snapshot/recover round-trips the graph state.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.types import NeighborResult
+from repro.graph import DynamicGraphStore, GraphConfig, offline_components
+
+
+def mk_result(ids_rows, w_rows) -> NeighborResult:
+    ids = np.asarray(ids_rows, np.int64)
+    w = np.asarray(w_rows, np.float32)
+    return NeighborResult(ids=ids, weights=w,
+                          distances=np.zeros_like(w, np.float32))
+
+
+def assert_symmetric(store: DynamicGraphStore) -> None:
+    """Every directed entry has an equal-weight mirror, and no entry
+    references a dead slot."""
+    s = np.asarray(store.nbr_slots)
+    w = np.asarray(store.nbr_w)
+    for r in range(s.shape[0]):
+        for j in range(s.shape[1]):
+            t = s[r, j]
+            if t < 0:
+                continue
+            assert store.id_of_slot[t] >= 0, f"stale slot ref {r}->{t}"
+            pos = np.where(s[t] == r)[0]
+            assert pos.size == 1, f"edge ({r},{t}) not mirrored"
+            assert w[t, pos[0]] == w[r, j], f"asymmetric weight ({r},{t})"
+
+
+def test_two_sided_insert_and_weight_dedup():
+    st = DynamicGraphStore(GraphConfig(k=2, width=4, capacity=64))
+    st.upsert(np.asarray([0, 1]),
+              mk_result([[1, -1], [0, -1]], [[0.9, -np.inf], [0.4, -np.inf]]))
+    pairs, w = st.edges()
+    assert pairs.tolist() == [[0, 1]]
+    assert w[0] == np.float32(0.9)     # max over the two directed scores
+    assert_symmetric(st)
+
+
+def test_tombstone_purge_removes_all_references():
+    st = DynamicGraphStore(GraphConfig(k=2, width=4, capacity=64))
+    st.upsert(np.asarray([0, 1, 2]),
+              mk_result([[1, 2], [0, 2], [0, 1]],
+                        [[0.9, 0.5], [0.9, 0.7], [0.5, 0.7]]))
+    victim_slot = st.slot_of[1]
+    assert st.delete([1]) == 1
+    assert not np.any(np.asarray(st.nbr_slots) == victim_slot)
+    assert 1 not in st.slot_of
+    pairs, _ = st.edges()
+    assert pairs.tolist() == [[0, 2]]
+    assert_symmetric(st)
+    # the freed slot recycles safely for a fresh point
+    st.upsert(np.asarray([7]), mk_result([[0]], [[0.3]]))
+    assert st.slot_of[7] == victim_slot
+    assert_symmetric(st)
+
+
+def test_overflow_keeps_topk_by_weight_and_mirrors_evictions():
+    st = DynamicGraphStore(GraphConfig(k=4, width=4, capacity=32))
+    st.ensure_ids(np.asarray([0]))
+    for i in range(1, 9):      # 8 suitors for a width-4 row, rising weight
+        st.upsert(np.asarray([i]),
+                  mk_result([[0, -1, -1, -1]],
+                            [[i / 10.0, -np.inf, -np.inf, -np.inf]]))
+        assert_symmetric(st)
+    res = st.neighbors_of_ids([0], k=4)
+    assert res.ids[0].tolist() == [8, 7, 6, 5]          # top-4 by weight
+    for evicted in (1, 2, 3, 4):                        # mirrored out
+        assert 0 not in st.neighbors_of_ids([evicted], k=4).ids[0].tolist()
+    # single-batch overflow: more candidates than the row width
+    st2 = DynamicGraphStore(GraphConfig(k=4, width=4, capacity=32))
+    st2.ensure_ids(np.arange(8))
+    st2.upsert(np.asarray([9]),
+               mk_result([[0, 1, 2, 3, 4, 5, 6, 7]],
+                         [[.1, .8, .2, .7, .3, .6, .4, .5]]))
+    assert st2.neighbors_of_ids([9], k=4).ids[0].tolist() == [1, 3, 5, 7]
+    assert_symmetric(st2)
+
+
+def test_upsert_purges_stale_edges_before_relinking():
+    st = DynamicGraphStore(GraphConfig(k=2, width=4, capacity=64))
+    st.upsert(np.asarray([0, 1, 2]),
+              mk_result([[1, -1], [0, -1], [0, -1]],
+                        [[0.9, -np.inf], [0.9, -np.inf], [0.2, -np.inf]]))
+    # update point 0: new neighborhood drops 1 and 2 entirely
+    st.upsert(np.asarray([0]), mk_result([[-1, -1]], [[-np.inf, -np.inf]]))
+    pairs, _ = st.edges()
+    assert pairs.size == 0
+    assert_symmetric(st)
+
+
+def test_capacity_growth_preserves_graph():
+    st = DynamicGraphStore(GraphConfig(k=2, width=4, capacity=4))
+    cap0 = st.capacity
+    ids = np.arange(3 * cap0)
+    st.ensure_ids(ids)
+    st.upsert(np.asarray([ids[-1]]),
+              mk_result([[0, 1]], [[0.5, 0.4]]))
+    assert st.capacity >= 3 * cap0 > cap0
+    assert len(st) == ids.size
+    assert_symmetric(st)
+    assert st.components()[int(ids[-1])] == 0
+
+
+def test_random_interleavings_keep_invariants_and_exact_cc():
+    rng = np.random.default_rng(3)
+    st = DynamicGraphStore(GraphConfig(k=3, width=6, capacity=64))
+    live: list = []
+    for step in range(60):
+        if rng.random() < 0.65 or len(live) < 6:
+            batch = [int(p) for p in rng.integers(0, 150, rng.integers(1, 4))]
+            batch = list(dict.fromkeys(batch))
+            pool = list(dict.fromkeys(live + batch))
+            rows_i, rows_w = [], []
+            for pid in batch:
+                nbrs = [p for p in pool if p != pid]
+                rng.shuffle(nbrs)
+                nbrs = nbrs[:3]
+                rows_i.append(nbrs + [-1] * (3 - len(nbrs)))
+                rows_w.append([float(rng.random()) for _ in nbrs]
+                              + [-np.inf] * (3 - len(nbrs)))
+            st.upsert(np.asarray(batch), mk_result(rows_i, rows_w))
+            live = pool
+        else:
+            sel = list({live[int(rng.integers(len(live)))]
+                        for _ in range(int(rng.integers(1, 3)))})
+            st.delete(np.asarray(sel))
+            live = [p for p in live if p not in sel]
+        assert_symmetric(st)
+        incremental = st.components()
+        pairs, _ = st.edges()
+        offline = offline_components(pairs, np.asarray(sorted(st.slot_of)))
+        assert incremental == offline, f"CC diverged at step {step}"
+
+
+def test_snapshot_restore_roundtrip():
+    st = DynamicGraphStore(GraphConfig(k=2, width=4, capacity=64))
+    st.upsert(np.asarray([0, 1, 2, 3]),
+              mk_result([[1, 2], [0, 3], [0, -1], [1, -1]],
+                        [[0.9, 0.5], [0.9, 0.7], [0.5, -np.inf],
+                         [0.7, -np.inf]]))
+    st.delete([2])
+    state = st.snapshot_state()
+    st2 = DynamicGraphStore(GraphConfig(k=2, width=4, capacity=64))
+    st2.restore(state)
+    p1, w1 = st.edges()
+    p2, w2 = st2.edges()
+    np.testing.assert_array_equal(p1, p2)
+    np.testing.assert_array_equal(w1, w2)
+    assert st.components() == st2.components()
+    # the pending repair backlog survives the round-trip
+    assert st2._repair == st._repair
+    # the restored store keeps mutating correctly
+    st2.upsert(np.asarray([9]), mk_result([[0]], [[0.4]]))
+    assert_symmetric(st2)
+
+
+def test_neighbors_of_ids_pads_to_k():
+    st = DynamicGraphStore(GraphConfig(k=3, width=6, capacity=64))
+    st.upsert(np.asarray([0, 1]),
+              mk_result([[1, -1, -1], [0, -1, -1]],
+                        [[0.9, -np.inf, -np.inf], [0.9, -np.inf, -np.inf]]))
+    res = st.neighbors_of_ids([0, 1], k=3)
+    assert res.ids.shape == (2, 3)
+    assert res.ids[0].tolist() == [1, -1, -1]
+    assert res.weights[0, 0] == np.float32(0.9)
+    assert np.isneginf(res.weights[0, 1:]).all()
+    assert np.isinf(res.distances[0, 1:]).all()
+
+
+# ------------------------------------------------ DynamicGUS integration
+
+
+@pytest.fixture(scope="module")
+def gus_setup():
+    import jax
+
+    from repro.core.scorer import train_scorer
+    from repro.data.synthetic import (OGB_ARXIV_LIKE, labeled_pairs,
+                                      make_dataset)
+
+    data = dataclasses.replace(OGB_ARXIV_LIKE, n_points=320, n_clusters=8)
+    ids, feats, cluster = make_dataset(data)
+    pf, lbl = labeled_pairs(feats, cluster, 1200, data.spec, seed=0)
+    scorer, _ = train_scorer(jax.random.PRNGKey(0), data.spec, pf, lbl,
+                             steps=60)
+    return data, scorer
+
+
+def _offline_edge_set(gus, k):
+    from repro.core.grale import top_k_per_point
+    from repro.core.graph import GraphAccumulator
+
+    live = gus.store.ids()
+    acc = GraphAccumulator()
+    for lo in range(0, live.size, 128):
+        chunk = live[lo:lo + 128]
+        acc.add_result(chunk, gus._index_neighbors_of_ids(chunk, k))
+    pairs, weights = acc.edges()
+    keep = top_k_per_point(pairs, weights, int(pairs.max()) + 1, k)
+    return {tuple(p) for p in pairs[keep].tolist()}
+
+
+def test_maintained_graph_tracks_offline_rebuild(gus_setup):
+    """Acceptance bar: after any prefix of a seeded mutation stream the
+    maintained adjacency matches an offline rebuild on >= 95% of edges at
+    matched k, and incremental CC labels exactly match an offline
+    recompute."""
+    from repro.core import BucketConfig, DynamicGUS, GusConfig
+    from repro.data.stream import MutationStream, StreamConfig
+
+    data, scorer = gus_setup
+    k = 5
+    gus = DynamicGUS(
+        data.spec, BucketConfig(dense_tables=8, dense_bits=10), scorer,
+        GusConfig(scann_nn=k, backend="brute",
+                  graph=GraphConfig(k=k, capacity=512)))
+    stream = MutationStream(data, StreamConfig(batch_size=32, seed=1),
+                            bootstrap_fraction=0.5)
+    bids, bfeats = stream.bootstrap()
+    gus.bootstrap(bids, bfeats)
+    for prefix, batch in zip(range(5), stream):
+        gus.mutate(batch)
+        offline = _offline_edge_set(gus, k)
+        mine = {tuple(p) for p in gus.graph.edges()[0].tolist()}
+        recall = len(offline & mine) / max(len(offline), 1)
+        assert recall >= 0.95, f"prefix {prefix}: recall {recall:.3f}"
+        incremental = gus.graph.components()
+        exact = offline_components(gus.graph.edges()[0],
+                                   np.asarray(sorted(gus.graph.slot_of)))
+        assert incremental == exact, f"prefix {prefix}: CC diverged"
+
+
+def test_fast_path_serves_from_graph(gus_setup):
+    from repro.core import BucketConfig, DynamicGUS, GusConfig
+
+    data, scorer = gus_setup
+    from repro.data.synthetic import make_dataset
+    ids, feats, _ = make_dataset(data)
+    k = 5
+    gus = DynamicGUS(
+        data.spec, BucketConfig(dense_tables=8, dense_bits=10), scorer,
+        GusConfig(scann_nn=k, backend="brute",
+                  graph=GraphConfig(k=k, capacity=512)))
+    gus.bootstrap(ids, feats)
+    direct = gus.graph.neighbors_of_ids(ids[:8], k)
+    routed = gus.neighbors_of_ids(ids[:8], k)      # graph fast path
+    np.testing.assert_array_equal(direct.ids, routed.ids)
+    # unknown id or k beyond the maintenance k falls back to the index
+    fallback = gus.neighbors_of_ids(ids[:2], k + 3)
+    assert fallback.ids.shape == (2, k + 3)
+    # without a graph the call is the plain index path
+    plain = DynamicGUS(
+        data.spec, BucketConfig(dense_tables=8, dense_bits=10), scorer,
+        GusConfig(scann_nn=k, backend="brute"))
+    plain.bootstrap(ids, feats)
+    assert plain.graph is None
+    assert plain.neighbors_of_ids(ids[:2], k).ids.shape == (2, k)
+
+
+def test_engine_snapshot_recovers_graph(gus_setup):
+    from repro.core import BucketConfig, DynamicGUS, GusConfig
+    from repro.data.stream import MutationStream, StreamConfig
+    from repro.serve.engine import EngineConfig, GusEngine
+
+    data, scorer = gus_setup
+    k = 5
+    cfg = GusConfig(scann_nn=k, backend="brute",
+                    graph=GraphConfig(k=k, capacity=512))
+    bucket_cfg = BucketConfig(dense_tables=8, dense_bits=10)
+    gus = DynamicGUS(data.spec, bucket_cfg, scorer, cfg)
+    stream = MutationStream(data, StreamConfig(batch_size=32, seed=2),
+                            bootstrap_fraction=0.5)
+    bids, bfeats = stream.bootstrap()
+    gus.bootstrap(bids, bfeats)
+    engine = GusEngine(gus, EngineConfig(snapshot_every=2))
+    for _, batch in zip(range(4), stream):
+        engine.submit_mutations(batch)
+    stats = engine.stats()
+    assert stats["graph"]["nodes"] == len(gus.graph)
+    assert stats["graph"]["edges"] > 0
+
+    fresh = DynamicGUS(data.spec, bucket_cfg, scorer, cfg)
+    engine2 = engine.recover(fresh)
+    p_old, w_old = gus.graph.edges()
+    p_new, w_new = fresh.graph.edges()
+    np.testing.assert_array_equal(p_old, p_new)
+    np.testing.assert_array_equal(w_old, w_new)
+    assert gus.graph.components() == fresh.graph.components()
+    # the recovered engine keeps maintaining the restored graph
+    batch = next(stream)
+    engine2.submit_mutations(batch)
+    assert_symmetric(fresh.graph)

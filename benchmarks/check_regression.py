@@ -1,0 +1,109 @@
+"""Bench-regression gate: compare a PR's smoke metrics against the
+committed baseline and fail CI on >20% regression.
+
+The smokes (benchmarks.latency / graph_maintenance / mutations, run with
+$BENCH_JSON set) write ``{name: {"value", "better", "portable"}}`` rows.
+A metric regresses when it moves past the tolerance in its bad direction;
+improvements never fail. Metrics present in the baseline but missing from
+the PR file fail too — losing coverage is a regression.
+
+Rows marked ``"portable": false`` are machine-dependent absolutes (ops/s,
+wall-clock ms): by default they are *reported* but not *gated*, so a
+baseline recorded on one box never fails CI on different hardware — the
+gated contract rides on the machine-normalized metrics (throughput ratio,
+query interference, edge recall). Pass ``--strict-machine`` to gate the
+absolutes too (sensible when PR and baseline ran on the same machine).
+
+    python -m benchmarks.check_regression BENCH_pr.json BENCH_baseline.json
+    python -m benchmarks.check_regression --tolerance 0.3 pr.json base.json
+
+Refreshing the baseline after an intentional perf change (ci.sh writes
+the smokes' rows to a temp file and only moves it over $BENCH_JSON when
+every smoke succeeded, so an aborted run cannot truncate the baseline)::
+
+    BENCH_JSON=BENCH_baseline.json ./ci.sh      # rewrites the smokes' rows
+    git add BENCH_baseline.json                 # commit with the PR
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(pr: dict, baseline: dict, tolerance: float,
+          strict_machine: bool = False) -> tuple[list[str], list[str]]:
+    """Returns (failures, notes). Failures fail the gate; notes are
+    machine-scoped regressions reported but not gated (see module doc)."""
+    failures: list[str] = []
+    notes: list[str] = []
+    for name, base_row in sorted(baseline.items()):
+        gated = strict_machine or base_row.get("portable", True)
+        sink = failures if gated else notes
+        base = float(base_row["value"])
+        better = base_row.get("better", "higher")
+        row = pr.get(name)
+        if row is None:
+            sink.append(f"{name}: missing from PR metrics "
+                        f"(baseline {base:.4g})")
+            continue
+        val = float(row["value"])
+        if better == "higher":
+            floor = base * (1.0 - tolerance)
+            if val < floor:
+                sink.append(
+                    f"{name}: {val:.4g} < {floor:.4g} "
+                    f"(baseline {base:.4g}, -{tolerance:.0%} floor)")
+        else:
+            ceil = base * (1.0 + tolerance)
+            if val > ceil:
+                sink.append(
+                    f"{name}: {val:.4g} > {ceil:.4g} "
+                    f"(baseline {base:.4g}, +{tolerance:.0%} ceiling)")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("pr", help="PR metrics json (written by the smokes)")
+    ap.add_argument("baseline", help="committed baseline json")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed relative regression (default 0.2 = 20%%)")
+    ap.add_argument("--strict-machine", action="store_true",
+                    help="gate machine-dependent absolute metrics too "
+                         "(PR and baseline measured on the same machine)")
+    args = ap.parse_args(argv)
+    with open(args.pr) as f:
+        pr = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures, notes = check(pr, baseline, args.tolerance,
+                            args.strict_machine)
+    for name in sorted(pr):
+        if any(f.startswith(name + ":") for f in failures):
+            mark = "REGRESSED"
+        elif any(n.startswith(name + ":") for n in notes):
+            mark = "machine?"
+        elif name not in baseline:
+            mark = "new"       # not yet gated: absent from the baseline
+        else:
+            mark = "ok"
+        base = baseline.get(name, {}).get("value")
+        base_s = f"{base:.4g}" if base is not None else "—"
+        print(f"{mark:9s} {name}: {pr[name]['value']:.4g} "
+              f"(baseline {base_s})")
+    for n in notes:
+        print(f"note (machine-scoped, not gated): {n}")
+    if failures:
+        print(f"\nFAIL: {len(failures)} metric(s) regressed "
+              f"past {args.tolerance:.0%}:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+    print(f"\nOK: gated metric(s) within {args.tolerance:.0%} of baseline "
+          f"({len(notes)} machine-scoped note(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,7 +11,6 @@ import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from repro.core import BucketConfig
 from repro.core.embedding import EmbeddingGenerator
@@ -47,6 +46,31 @@ def corpus(name: str):
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def record_metric(name: str, value: float, better: str = "higher",
+                  portable: bool = True) -> None:
+    """Append a headline metric to the JSON file named by $BENCH_JSON
+    (no-op when unset). ``better`` is "higher" or "lower" — the direction
+    benchmarks/check_regression.py uses to gate CI. ``portable=False``
+    marks machine-dependent absolutes (ops/s, wall-clock ms): the gate
+    only reports them unless run with --strict-machine, so a baseline
+    recorded on one box doesn't fail CI on different hardware."""
+    import json
+    import os
+
+    path = os.environ.get("BENCH_JSON")
+    if not path:
+        return
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data[name] = {"value": float(value), "better": better,
+                  "portable": portable}
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 def timed(fn, *args, repeat: int = 3, **kw):

@@ -2,8 +2,6 @@
 ScaNN-NN x Filter-P x IDF-S, on both dataset families."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import BUCKET_CFG, corpus, emit
 from repro.ann.scann import ScannConfig
 from repro.core import DynamicGUS, GusConfig

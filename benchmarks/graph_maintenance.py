@@ -21,7 +21,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import BUCKET_CFG, DATASETS, corpus, emit
+from benchmarks.common import (BUCKET_CFG, DATASETS, corpus, emit,
+                               record_metric)
 from repro.ann.scann import ScannConfig
 from repro.core import DynamicGUS, GusConfig
 from repro.core.grale import top_k_per_point
@@ -88,6 +89,8 @@ def run(dataset: str = "arxiv", n: int = 1500, batches: int = 12,
          f"p95_ms={maint['p95_ms']:.1f};edges_per_s={edges_per_s:.0f}")
     emit(f"graph_cc_{dataset}", float(np.mean(cc_iters)),
          f"exact={all(cc_exact)};max_iters={max(cc_iters)}")
+    record_metric(f"graph_edge_recall_{dataset}", recalls[-1],
+                  better="higher")
 
     # fast path: serve neighborhoods from the maintained rows
     sample = gus.store.ids()[:64]

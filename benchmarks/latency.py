@@ -18,7 +18,7 @@ if __name__ == "__main__":
 
 import numpy as np
 
-from benchmarks.common import BUCKET_CFG, corpus, emit
+from benchmarks.common import BUCKET_CFG, corpus, emit, record_metric
 from repro.ann.scann import ScannConfig
 from repro.core import DynamicGUS, GusConfig
 
@@ -50,6 +50,9 @@ def run(dataset: str = "arxiv", n: int = 4000, queries: int = 200) -> list:
         emit(f"latency_{dataset}_nn{scann_nn}_idf{idf_s}_f{filter_p}",
              s["p50_ms"] * 1e3,
              f"p95_ms={s['p95_ms']:.1f};p99_ms={s['p99_ms']:.1f}")
+        if (scann_nn, idf_s, filter_p) == SWEEP[0]:
+            record_metric(f"query_p50_{dataset}_ms", s["p50_ms"],
+                          better="lower", portable=False)
     return rows
 
 

@@ -7,7 +7,7 @@ import numpy as np
 
 from benchmarks.common import corpus, emit, timed
 from repro.ann.brute import BruteIndex
-from repro.core.graph import edge_sets_equal, edge_weight_percentiles
+from repro.core.graph import edge_weight_percentiles
 from repro.core.grale import GraleConfig, score_edges, scoring_pairs
 
 

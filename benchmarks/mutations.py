@@ -1,11 +1,20 @@
 """Paper §5.2 tail: median / p95 wall-clock time for point insertions (and
-deletes/updates) into the dynamic index."""
+deletes/updates) into the dynamic index — plus the async write path:
+``--pipeline`` runs the same mutation stream synchronously and through
+``serve.pipeline.MutationPipeline`` (equal submitted batch size) and
+reports the throughput ratio and the query-latency interference.
+
+    PYTHONPATH=src python -m benchmarks.mutations [--pipeline] [--smoke]
+"""
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
-from benchmarks.common import BUCKET_CFG, corpus, emit
+from benchmarks.common import BUCKET_CFG, DATASETS, corpus, emit, record_metric
 from repro.ann.scann import ScannConfig
+from repro.ann.sharded_index import ShardedConfig
 from repro.core import (DynamicGUS, GusConfig, MutationBatch,
                         MUTATION_DELETE, MUTATION_INSERT, MUTATION_UPDATE)
 from repro.utils.timing import percentiles
@@ -37,6 +46,148 @@ def run(dataset: str = "arxiv", n: int = 3000, ops: int = 200) -> dict:
     return out
 
 
+# ------------------------------------------------- async pipeline (PR 3)
+
+def _make_gus(backend: str) -> GusConfig:
+    kw = {}
+    if backend == "scann":
+        kw["scann"] = ScannConfig(d_proj=64, n_partitions=32, nprobe=8)
+    if backend == "sharded":
+        kw["sharded"] = ShardedConfig(
+            n_shards=1, d_proj=64, n_partitions=16, nprobe_local=0,
+            reorder=128, pq_m=8, kmeans_iters=6, pq_iters=3)
+    return GusConfig(scann_nn=6, backend=backend, **kw)
+
+
+def run_pipeline(dataset: str = "arxiv", n: int = 2400, batches: int = 24,
+                 batch_size: int = 64, backend: str = "scann",
+                 queries_every: int = 4, trials: int = 2) -> dict:
+    """Pipelined vs. synchronous write path at equal submitted batch size.
+
+    The stream is the paper's growth workload (inserts of fresh points);
+    every ``queries_every`` batches a neighborhood query is timed on the
+    same engine to measure the interference of the in-flight write path.
+    Both paths see a full warm-up pass first so jit compilation of the
+    ragged batch shapes is off the clock for both."""
+    import dataclasses as _dc
+
+    from repro.data.stream import MutationStream, StreamConfig
+    from repro.serve.pipeline import MutationPipeline
+
+    ids, feats, cluster, spec, scorer, _ = corpus(dataset)
+    data_cfg = _dc.replace(DATASETS[dataset], n_points=n)
+    n_boot = n // 2
+    scfg = StreamConfig(batch_size=batch_size, seed=5,
+                        insert_frac=1.0, update_frac=0.0)
+
+    def make():
+        gus = DynamicGUS(spec, BUCKET_CFG, scorer, _make_gus(backend))
+        gus.bootstrap(ids[:n_boot], {k: v[:n_boot] for k, v in feats.items()})
+        return gus
+
+    stream_batches = [b for _, b in zip(
+        range(batches), MutationStream(data_cfg, scfg,
+                                       bootstrap_fraction=0.5))]
+    qids = ids[:8]
+
+    def sync_pass(gus, q_every):
+        """q_every=0 → pure mutation stream (the throughput measurement);
+        q_every>0 → interleave timed queries (the interference
+        measurement — query time must stay out of the throughput clock,
+        pipelined queries legitimately contend with in-flight windows)."""
+        q_ms = []
+        t0 = time.perf_counter()
+        for i, b in enumerate(stream_batches):
+            gus.mutate(b)
+            if q_every and (i + 1) % q_every == 0:
+                tq = time.perf_counter()
+                gus.neighbors_of_ids(qids, k=6)
+                q_ms.append((time.perf_counter() - tq) * 1e3)
+        return time.perf_counter() - t0, q_ms
+
+    def pipe_pass(gus, q_every):
+        pipe = MutationPipeline(gus)
+        q_ms = []
+        t0 = time.perf_counter()
+        for i, b in enumerate(stream_batches):
+            pipe.submit(b)
+            if q_every and (i + 1) % q_every == 0:
+                tq = time.perf_counter()
+                gus.neighbors_of_ids(qids, k=6)
+                q_ms.append((time.perf_counter() - tq) * 1e3)
+        pipe.flush()
+        return time.perf_counter() - t0, q_ms, pipe
+
+    # warm-up: compile every ragged batch shape for both paths
+    sync_pass(make(), 0)
+    pipe_pass(make(), 0)
+
+    n_ops = sum(b.ids.size for b in stream_batches)
+    best = {"sync": float("inf"), "pipe": float("inf")}
+    q_sync, q_pipe = [], []
+    pipe = None
+    for _ in range(trials):
+        t, _ = sync_pass(make(), 0)
+        best["sync"] = min(best["sync"], t)
+        t, _, pipe = pipe_pass(make(), 0)
+        best["pipe"] = min(best["pipe"], t)
+        _, q = sync_pass(make(), queries_every)
+        q_sync += q
+        _, q, _ = pipe_pass(make(), queries_every)
+        q_pipe += q
+
+    ratio = best["sync"] / best["pipe"]
+    p50_sync = float(np.percentile(q_sync, 50))
+    p50_pipe = float(np.percentile(q_pipe, 50))
+    interference = p50_pipe / p50_sync
+    out = {
+        "dataset": dataset, "backend": backend, "batch_size": batch_size,
+        "sync_ops_s": n_ops / best["sync"],
+        "pipe_ops_s": n_ops / best["pipe"],
+        "throughput_ratio": ratio,
+        "query_p50_sync_ms": p50_sync,
+        "query_p50_pipe_ms": p50_pipe,
+        "query_interference": interference,
+        "windows": pipe.windows, "ticks": pipe.ticks,
+    }
+    emit(f"mutations_pipeline_{dataset}_{backend}_bs{batch_size}",
+         best["pipe"] / len(stream_batches) * 1e6,
+         f"ratio={ratio:.2f};sync_ops_s={out['sync_ops_s']:.0f};"
+         f"pipe_ops_s={out['pipe_ops_s']:.0f};"
+         f"q_interference={interference:.2f}")
+    record_metric(f"mutation_throughput_pipeline_{backend}_ops_s",
+                  out["pipe_ops_s"], better="higher", portable=False)
+    record_metric(f"mutation_pipeline_ratio_{backend}", ratio,
+                  better="higher")
+    record_metric(f"mutation_query_interference_{backend}", interference,
+                  better="lower")
+    return out
+
+
 if __name__ == "__main__":
-    for ds in ("arxiv", "products"):
-        print(run(ds))
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pipeline", action="store_true",
+                    help="pipelined vs. synchronous write-path comparison")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus / few batches (the CI lane)")
+    ap.add_argument("--backend", default="scann",
+                    choices=("brute", "scann", "sharded"))
+    args = ap.parse_args()
+    if args.pipeline:
+        if args.smoke:
+            # queries_every=1: the interference p50 feeds the CI gate, so
+            # it needs every sample it can get (queries cost ~3ms each)
+            print(run_pipeline("arxiv", n=1600, batches=12,
+                               backend=args.backend, queries_every=1,
+                               trials=2))
+        else:
+            for backend in ("brute", "scann", "sharded"):
+                print(run_pipeline("arxiv", queries_every=2,
+                                   backend=backend))
+    elif args.smoke:
+        print(run("arxiv", n=1000, ops=60))
+    else:
+        for ds in ("arxiv", "products"):
+            print(run(ds))

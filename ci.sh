@@ -1,13 +1,38 @@
 #!/usr/bin/env bash
-# Minimal CI: quick tier-1 lane (no subprocess-mesh tests) + a CPU latency
-# smoke that exercises the single- and multi-shard serving paths + a
-# maintained-graph smoke (edges/sec, staleness, incremental-CC exactness).
+# CI lanes (also run by .github/workflows/ci.yml):
 #
-#   ./ci.sh          # quick lane
-#   ./ci.sh --full   # the whole tier-1 suite, slow tests included
+#   ./ci.sh          # quick lane: lint + tier-1 (no subprocess-mesh tests)
+#                    #   + CPU smokes + bench-regression gate
+#   ./ci.sh --full   # the whole tier-1 suite, slow tests included, then
+#                    #   the same smokes + gate (the nightly lane)
+#   ./ci.sh --lint   # lint lane only (ruff if installed, else the
+#                    #   dependency-free fallback in tools/lint.py)
+#
+# The smokes write their headline metrics (mutation throughput, query p50,
+# graph edge-recall) to $BENCH_JSON (default BENCH_pr.json); the gate fails
+# on >20% regression vs. the committed BENCH_baseline.json. To refresh the
+# baseline after an intentional perf change:
+#
+#   BENCH_JSON=BENCH_baseline.json ./ci.sh   # then commit the file
 set -euo pipefail
 cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+lint() {
+    if command -v ruff >/dev/null 2>&1; then
+        ruff check .
+    else
+        echo "ruff not installed; using the fallback linter (tools/lint.py)"
+        python tools/lint.py
+    fi
+}
+
+if [[ "${1:-}" == "--lint" ]]; then
+    lint
+    exit 0
+fi
+
+lint
 
 if [[ "${1:-}" == "--full" ]]; then
     python -m pytest -x -q
@@ -16,5 +41,17 @@ else
     python -m pytest -x -q -m "not slow"
 fi
 
+# CPU smokes: single- and multi-shard serving, maintained graph (edges/sec,
+# staleness, incremental-CC exactness), pipelined vs. synchronous write path.
+# Metrics collect in a temp file and only replace $BENCH_JSON once every
+# smoke succeeded — an aborted run can't truncate a baseline being
+# refreshed (BENCH_JSON=BENCH_baseline.json ./ci.sh).
+BENCH_TARGET="${BENCH_JSON:-BENCH_pr.json}"
+export BENCH_JSON="$BENCH_TARGET.tmp"
+rm -f "$BENCH_JSON"
 python -m benchmarks.latency --smoke
 python -m benchmarks.graph_maintenance --smoke
+python -m benchmarks.mutations --pipeline --smoke
+mv "$BENCH_JSON" "$BENCH_TARGET"
+
+python -m benchmarks.check_regression "$BENCH_TARGET" BENCH_baseline.json

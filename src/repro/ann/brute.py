@@ -75,7 +75,11 @@ class BruteIndex:
             [self.db_val, jnp.zeros((pad, self.k_dims), jnp.float32)])
         self.valid = jnp.concatenate([self.valid, jnp.zeros((pad,), bool)])
         self.ids = np.concatenate([self.ids, np.full((pad,), -1, np.int64)])
-        self.free.extend(range(new_cap - 1, self.capacity - 1, -1))
+        # prepend so grown (higher) slots are popped last: slot layout then
+        # depends only on the op sequence, not on when growth happened —
+        # what keeps fused pipeline windows bit-identical to sequential
+        # application (ScannIndex._grow_slots does the same)
+        self.free[:0] = range(new_cap - 1, self.capacity - 1, -1)
         self.capacity = new_cap
 
     # ------------------------------------------------------------ mutations
@@ -90,6 +94,20 @@ class BruteIndex:
 
     def upsert(self, ids: np.ndarray, emb: SparseBatch) -> None:
         """Insert new points / update existing ones (paper §3.3.1)."""
+        self.finish_upsert(
+            self.begin_upsert(ids, emb, self.encode_upsert(ids, emb)))
+
+    # Two-phase mutate entry points (serve.pipeline double-buffers these):
+    # encode (pure, stage A) / begin (host alloc + async device dispatch) /
+    # finish (barrier). ``upsert`` is exactly their composition, so the
+    # synchronous path and the pipelined path share one code path.
+
+    def encode_upsert(self, ids: np.ndarray, emb: SparseBatch):
+        """Stage A: nothing to route or quantize for exact search."""
+        return None
+
+    def begin_upsert(self, ids: np.ndarray, emb: SparseBatch,
+                     staged=None):
         ids = np.asarray(ids)
         need = len(self.slot_of) + len(ids)
         if need > self.capacity:
@@ -106,6 +124,11 @@ class BruteIndex:
         self.db_idx, self.db_val, self.valid = _scatter_rows(
             self.db_idx, self.db_val, self.valid,
             jnp.asarray(slots), emb.indices, emb.values, keep)
+        return None
+
+    def finish_upsert(self, pending=None) -> None:
+        """Barrier: wait for in-flight device scatters."""
+        jax.block_until_ready((self.db_idx, self.db_val, self.valid))
 
     def delete(self, ids: np.ndarray) -> int:
         """Tombstone rows (paper §3.3.2). Returns #actually deleted."""

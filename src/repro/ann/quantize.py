@@ -22,7 +22,6 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def split_subspaces(x: jax.Array, m: int) -> jax.Array:

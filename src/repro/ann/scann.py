@@ -136,6 +136,11 @@ def _query_step(q_idx, q_val, q_sketch, centroids, books,
 class ScannIndex:
     """Dynamic quantized index over sparse embeddings."""
 
+    # updates re-route free-list slots, so fusing them into a window
+    # changes slab layout (and PQ-tie ordering at the shortlist cut);
+    # serve.pipeline closes the fuse window before updates of live ids
+    FUSED_UPDATES_EXACT = False
+
     def __init__(self, k_dims: int, cfg: ScannConfig):
         self.k_dims = k_dims
         self.cfg = cfg
@@ -255,20 +260,49 @@ class ScannIndex:
     # ----------------------------------------------------------- mutations
 
     def upsert(self, ids: np.ndarray, emb: SparseBatch) -> None:
+        self.finish_upsert(
+            self.begin_upsert(ids, emb, self.encode_upsert(ids, emb)))
+
+    # Two-phase mutate entry points (serve.pipeline double-buffers these).
+    # ``encode_upsert`` only reads build-time structures (centroids, books),
+    # never the slot maps, so it can run for batch i+1 while batch i's
+    # device writes are still in flight. ``upsert`` is the composition.
+
+    def encode_upsert(self, ids: np.ndarray, emb: SparseBatch) -> dict:
+        """Stage A: sketch, partition routing, residual PQ codes (pure).
+
+        Dispatch-only: results stay as in-flight device arrays. The
+        materializing ``np.asarray`` happens in ``begin_upsert`` — for the
+        synchronous path that is immediately after, for the pipelined path
+        it lands after the previous batch's in-flight window, which is
+        exactly the device wait the double buffer hides."""
         assert self.trained, "build() the index before mutating it"
         cfg = self.cfg
-        ids = np.asarray(ids)
-        self.delete([pid for pid in ids.tolist() if pid in self.slot_of])
-        n = len(ids)
-        if len(self.slot_of) + n > self.capacity:
-            self._grow_slots(len(self.slot_of) + n)
-
         sk = count_sketch(emb, cfg.d_proj, cfg.seed)
         p1, p2 = part_mod.assign_partitions(sk, self.centroids, cfg.eta,
                                             max(cfg.soar_lambda, 0.0))
         codes1 = pq.encode(sk - self.centroids[p1], self.books)
         codes2 = pq.encode(sk - self.centroids[p2], self.books)
-        p1_np, p2_np = np.asarray(p1), np.asarray(p2)
+        return {"sk": sk, "p1": p1, "p2": p2,
+                "codes1": codes1, "codes2": codes2}
+
+    def begin_upsert(self, ids: np.ndarray, emb: SparseBatch,
+                     staged: dict | None = None):
+        """Stage B dispatch: slot allocation + async device scatters."""
+        assert self.trained, "build() the index before mutating it"
+        cfg = self.cfg
+        ids = np.asarray(ids)
+        if staged is None:
+            staged = self.encode_upsert(ids, emb)
+        self.delete([pid for pid in ids.tolist() if pid in self.slot_of])
+        n = len(ids)
+        if len(self.slot_of) + n > self.capacity:
+            self._grow_slots(len(self.slot_of) + n)
+
+        sk = staged["sk"]
+        p1_np, p2_np = np.asarray(staged["p1"]), np.asarray(staged["p2"])
+        codes1 = np.asarray(staged["codes1"])
+        codes2 = np.asarray(staged["codes2"])
 
         slots = np.empty((n,), np.int32)
         assignments = []  # (row=partition, col=pos, slot, which_codes, i)
@@ -305,6 +339,13 @@ class ScannIndex:
             self.codes_list, rows, cols, jnp.asarray(codes_all))
         self.valid_list = _write_members(
             self.valid_list, rows, cols, jnp.ones((len(assignments),), bool))
+        return None
+
+    def finish_upsert(self, pending=None) -> None:
+        """Barrier: wait for in-flight device scatters."""
+        jax.block_until_ready((self.sp_idx, self.sp_val, self.sketch,
+                               self.members, self.codes_list,
+                               self.valid_list))
 
     def delete(self, ids) -> int:
         rows, cols = [], []

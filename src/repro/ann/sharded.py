@@ -31,7 +31,6 @@ tests/test_dynamic_equivalence.py).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

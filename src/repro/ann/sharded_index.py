@@ -199,11 +199,24 @@ class ShardedGusIndex:
     # ------------------------------------------------------------ mutations
 
     def upsert(self, ids: np.ndarray, emb: SparseBatch) -> None:
+        self.finish_upsert(
+            self.begin_upsert(ids, emb, self.encode_upsert(ids, emb)))
+
+    # Two-phase mutate entry points (serve.pipeline double-buffers these).
+    # ``encode_upsert`` reads only build-time structures (centroids, books)
+    # so it can run for batch i+1 while batch i's shard_map append is in
+    # flight; ``finish_upsert`` materializes the device-reported landing
+    # sites into the host id -> row map. ``upsert`` is the composition.
+
+    def encode_upsert(self, ids: np.ndarray, emb: SparseBatch
+                      ) -> dict | None:
+        """Stage A: dedup, hash-route owners, sketch, partition routing,
+        residual PQ codes, padded mutate-batch staging (all pure)."""
         assert self.trained, "build() the index before mutating it"
         cfg = self.cfg
         ids = np.asarray(ids, np.int64)
         if ids.size == 0:
-            return
+            return None
         assert int(ids.max()) < _PAD_ID and int(ids.min()) >= 0, \
             "point ids must fit uint32 (hash routing)"
         # within-batch dedup: last write wins (matches ScannIndex semantics)
@@ -211,19 +224,19 @@ class ShardedGusIndex:
         if len(last) < len(ids):
             keep = np.asarray(sorted(last.values()), np.int64)
             ids, emb = ids[keep], emb[keep]
-        self.delete([pid for pid in ids.tolist() if pid in self.row_of])
 
-        sk = np.asarray(self._sketch(emb))
+        sk = np.asarray(self._sketch(emb))    # host routing needs the sketch
         parts = self._route_partitions(sk, self._owners(ids))
-        codes = np.asarray(pq.encode(
-            jnp.asarray(sk - self._centroids_np[parts]),
-            self.state["books"]))
+        # the PQ codes stay device-side: begin_upsert materializes them
+        # after the previous window's in-flight time has hidden the wait
+        codes = pq.encode(jnp.asarray(sk - self._centroids_np[parts]),
+                          self.state["books"])
 
         bm = cfg.mutate_batch
+        chunks = []
         for lo in range(0, len(ids), bm):
             sel = slice(lo, min(lo + bm, len(ids)))
             n_c = sel.stop - sel.start
-            pad = bm - n_c
             ids_u = np.full((bm,), _PAD_ID, np.uint32)
             ids_u[:n_c] = ids[sel].astype(np.uint32)
             b_idx = np.full((bm, self.k_dims), PAD_INDEX, np.uint32)
@@ -232,22 +245,53 @@ class ShardedGusIndex:
             b_val[:n_c] = np.asarray(emb.values[sel])
             b_sk = np.zeros((bm, cfg.d_proj), np.float32)
             b_sk[:n_c] = sk[sel]
-            b_codes = np.zeros((bm, cfg.pq_m), np.uint8)
+            chunks.append((n_c, ids[sel].tolist(),
+                           (ids_u, b_idx, b_val, b_sk, sel)))
+        return {"ids": ids, "codes": codes, "chunks": chunks}
+
+    def begin_upsert(self, ids: np.ndarray, emb: SparseBatch,
+                     staged: dict | None = None):
+        """Stage B dispatch: tombstone overwritten rows, ship the staged
+        chunks through the shard_map append (async — landing sites are
+        returned as in-flight device arrays)."""
+        assert self.trained, "build() the index before mutating it"
+        if staged is None:
+            staged = self.encode_upsert(ids, emb)
+        if staged is None:
+            return None
+        self.delete([pid for pid in staged["ids"].tolist()
+                     if pid in self.row_of])
+        cfg = self.cfg
+        codes = np.asarray(staged["codes"])
+        pending = []
+        for n_c, chunk_ids, arrays in staged["chunks"]:
+            ids_u, b_idx, b_val, b_sk, sel = arrays
+            b_codes = np.zeros((cfg.mutate_batch, cfg.pq_m), np.uint8)
             b_codes[:n_c] = codes[sel]
             with mesh_context(self.mesh):
                 self.state, (r_part, r_pos) = self._mutate(
                     jnp.asarray(ids_u), jnp.asarray(b_idx),
                     jnp.asarray(b_val), jnp.asarray(b_sk),
                     jnp.asarray(b_codes), self.state)
+            pending.append((n_c, chunk_ids, r_part, r_pos))
+        return pending
+
+    def finish_upsert(self, pending) -> None:
+        """Barrier: materialize landing sites, mirror them into the host
+        id -> row map (needed by deletes and result translation)."""
+        if not pending:
+            return
+        for n_c, chunk_ids, r_part, r_pos in pending:
             r_part = np.asarray(r_part)[:n_c]
             r_pos = np.asarray(r_pos)[:n_c]
             rows = r_part * self.slab + r_pos
-            for pid, row in zip(ids[sel].tolist(), rows.tolist()):
+            for pid, row in zip(chunk_ids, rows.tolist()):
                 old = int(self.id_of_row[row])
                 if old >= 0 and self.row_of.get(old) == row:
                     self.row_of.pop(old)      # ring buffer overwrote it
                 self.id_of_row[row] = pid
                 self.row_of[pid] = row
+        jax.block_until_ready(self.state)
 
     def delete(self, ids) -> int:
         assert self.trained, "build() the index before mutating it"

@@ -40,6 +40,21 @@ from repro.graph.store import DynamicGraphStore, GraphConfig
 from repro.utils.timing import Timer
 
 
+@dataclasses.dataclass
+class StagedMutation:
+    """A mutation batch split at the encode/apply boundary (the unit the
+    async pipeline double-buffers). ``encode_mutation`` fills everything
+    but ``pending``; ``apply_mutation`` dispatches the device writes and
+    parks their in-flight handle in ``pending`` for the barrier."""
+    n: int                                  # points acknowledged
+    dels: np.ndarray | None                 # ids to tombstone
+    up_ids: np.ndarray | None               # ids to insert/update
+    feats: dict | None                      # store-normalized features
+    emb: object | None                      # SparseBatch embeddings
+    index_staged: object | None             # backend encode artifacts
+    pending: object | None = None           # in-flight device handle
+
+
 @dataclasses.dataclass(frozen=True)
 class GusConfig:
     scann_nn: int = 10          # ScaNN-NN: neighbors retrieved from the index
@@ -98,6 +113,9 @@ class FeatureStore:
     def __len__(self):
         return len(self._rows)
 
+    def __contains__(self, pid) -> bool:
+        return int(pid) in self._rows
+
 
 class DynamicGUS:
     """The Dynamic Grale Using ScaNN engine."""
@@ -142,11 +160,7 @@ class DynamicGUS:
                         chunk = np.asarray(ids[lo:lo + 256])
                         self.graph.upsert(chunk, self._index_neighbors_of_ids(
                             chunk, self.graph.cfg.probe_k(), timed=False))
-                    rep = self.graph.take_repair_ids(limit=len(ids))
-                    if rep.size:
-                        self.graph.upsert(rep, self._index_neighbors_of_ids(
-                            rep, self.graph.cfg.probe_k(), timed=False),
-                            purge=False)
+                    self.flush_graph_repair(limit=len(ids))
 
     def periodic_reload(self) -> None:
         """Recompute IDF/filter from the live corpus and retrain the index
@@ -173,41 +187,104 @@ class DynamicGUS:
         Returns the number of points acknowledged. When a maintained graph
         is configured, every mutation also updates it: deletes tombstone
         the row and purge back-edges; upserts re-query the point's scored
-        neighborhood and apply two-sided edge updates."""
+        neighborhood and apply two-sided edge updates.
+
+        This is the synchronous path: encode, apply, and graph maintenance
+        run back-to-back. ``serve.pipeline.MutationPipeline`` drives the
+        same stages double-buffered (encode batch i+1 while batch i's
+        device append is in flight) with identical final state."""
         with self.mutation_timer:
-            kinds = np.asarray(batch.kinds)
-            ids = np.asarray(batch.ids)
-            del_mask = kinds == MUTATION_DELETE
-            dels = ids[del_mask] if del_mask.any() else None
-            if dels is not None:
-                self.index.delete(dels)
-                self.store.drop(dels)
-            up_mask = ~del_mask
-            up_ids = None
-            if up_mask.any():
-                up_ids = ids[up_mask]
-                feats = {k: np.asarray(v)[up_mask]
-                         for k, v in batch.features.items()}
-                emb = self.embedder(feats)
-                self.index.upsert(up_ids, emb)
-                self.store.put(up_ids, feats)
+            staged = self.encode_mutation(batch)
+            self.apply_mutation(staged)
+            self.finish_mutation(staged)
         if self.graph is not None:
             with self.graph_timer:
-                if dels is not None:
-                    self.graph.delete(dels)
-                if up_ids is not None:
-                    self.graph.upsert(up_ids, self._index_neighbors_of_ids(
-                        up_ids, self.graph.cfg.probe_k(), timed=False))
-                # repair: rows left under-full by deletes/evictions get a
-                # fresh neighborhood merged in (no purge — embeddings of
-                # the repaired points did not change)
-                rep = self.graph.take_repair_ids()
-                if rep.size:
-                    self.graph.upsert(
-                        rep, self._index_neighbors_of_ids(
-                            rep, self.graph.cfg.probe_k(), timed=False),
-                        purge=False)
-        return int(ids.size)
+                self.graph_apply(staged)
+                self.flush_graph_repair()
+        return staged.n
+
+    # ---------------------------------------- staged mutation (write path)
+
+    def encode_mutation(self, batch: MutationBatch) -> "StagedMutation":
+        """Stage A (host routing + feature/embedding encoding, pure): parse
+        the batch, normalize features to the store's dtypes, embed, and run
+        the backend's pure encode (sketch/routing/PQ codes). Touches no
+        engine state, so the pipeline can encode batch i+1 while batch i's
+        device append is still in flight."""
+        kinds = np.asarray(batch.kinds)
+        ids = np.asarray(batch.ids)
+        del_mask = kinds == MUTATION_DELETE
+        dels = ids[del_mask] if del_mask.any() else None
+        up_ids = feats = emb = index_staged = None
+        up_mask = ~del_mask
+        if up_mask.any():
+            up_ids = ids[up_mask]
+            proto = self.spec.feature_shapes(1)
+            feats = {k: np.asarray(v)[up_mask].astype(
+                np.dtype(proto[k].dtype.name), copy=False)
+                for k, v in batch.features.items()}
+            emb = self.embedder(feats)
+            index_staged = self.index.encode_upsert(up_ids, emb)
+        return StagedMutation(n=int(ids.size), dels=dels, up_ids=up_ids,
+                              feats=feats, emb=emb,
+                              index_staged=index_staged)
+
+    def apply_mutation(self, staged: "StagedMutation") -> None:
+        """Stage B dispatch: tombstone deletes, ship the staged upserts
+        through the backend's async append, update the feature store. Host
+        maps that need device results are finalized by
+        ``finish_mutation`` (the barrier)."""
+        if staged.dels is not None:
+            self.index.delete(staged.dels)
+            self.store.drop(staged.dels)
+        if staged.up_ids is not None:
+            staged.pending = self.index.begin_upsert(
+                staged.up_ids, staged.emb, staged.index_staged)
+            self.store.put(staged.up_ids, staged.feats)
+
+    def finish_mutation(self, staged: "StagedMutation") -> None:
+        """Barrier (hand-off): block on in-flight device appends and
+        finalize host maps. After this, the batch is query-visible."""
+        if staged.up_ids is not None:
+            self.index.finish_upsert(staged.pending)
+
+    def graph_apply(self, staged: "StagedMutation",
+                    reuse_emb: bool = False) -> None:
+        """Maintained-graph update for an applied batch. ``reuse_emb=True``
+        (the pipelined path) feeds the staged embeddings straight into the
+        probe query instead of re-gathering + re-embedding from the store —
+        bit-identical results (the store holds the same feature values),
+        one less embed per batch."""
+        if self.graph is None:
+            return
+        if staged.dels is not None:
+            self.graph.delete(staged.dels)
+        if staged.up_ids is not None:
+            probe_k = self.graph.cfg.probe_k()
+            if reuse_emb:
+                res = self._neighbors_impl(staged.feats, probe_k,
+                                           exclude_ids=staged.up_ids,
+                                           emb=staged.emb)
+            else:
+                res = self._index_neighbors_of_ids(staged.up_ids, probe_k,
+                                                   timed=False)
+            self.graph.upsert(staged.up_ids, res)
+
+    def flush_graph_repair(self, limit: int | None = None) -> int:
+        """Drain the graph's repair queue: rows left under-full by deletes
+        or evictions get a fresh neighborhood merged in (no purge — the
+        repaired points' embeddings did not change). One batched
+        ``_index_neighbors_of_ids`` call per drain, capped at ``limit``
+        (default ``GraphConfig.repair_per_batch``)."""
+        if self.graph is None:
+            return 0
+        rep = self.graph.take_repair_ids(limit)
+        if rep.size:
+            self.graph.upsert(
+                rep, self._index_neighbors_of_ids(
+                    rep, self.graph.cfg.probe_k(), timed=False),
+                purge=False)
+        return int(rep.size)
 
     # --------------------------------------------------- neighborhood RPC
 
@@ -219,9 +296,11 @@ class DynamicGUS:
         with self.query_timer:
             return self._neighbors_impl(features, k, exclude_ids)
 
-    def _neighbors_impl(self, features, k, exclude_ids) -> NeighborResult:
+    def _neighbors_impl(self, features, k, exclude_ids,
+                        emb=None) -> NeighborResult:
         k = k or self.cfg.scann_nn
-        emb = self.embedder(features)
+        if emb is None:
+            emb = self.embedder(features)
         ids, dists = self.index.search(emb, k + (exclude_ids is not None))
         if exclude_ids is not None:
             ids, dists = _drop_self(ids, dists, np.asarray(exclude_ids), k)

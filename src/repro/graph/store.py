@@ -348,15 +348,26 @@ class DynamicGraphStore:
         return len(slots)
 
     def take_repair_ids(self, limit: int | None = None) -> np.ndarray:
-        """Pop up to ``limit`` under-full points for re-querying."""
+        """Pop up to ``limit`` under-full points for re-querying.
+
+        The queue is coalesced (a row touched by many purges appears once)
+        and drained in slot order, so synchronous and pipelined drains of
+        the same backlog pop identical batches — the equivalence the async
+        pipeline's repair tick relies on."""
         limit = limit if limit is not None else self.cfg.repair_per_batch
         out = []
-        while self._repair and len(out) < limit:
-            slot = self._repair.pop()
+        for slot in sorted(self._repair):
+            if len(out) >= limit:
+                break
+            self._repair.discard(slot)
             pid = int(self.id_of_slot[slot])
             if pid >= 0:                       # slot may have been recycled
                 out.append(pid)
         return np.asarray(out, np.int64)
+
+    def repair_backlog(self) -> int:
+        """Rows awaiting a repair re-query (the pipeline's queue depth)."""
+        return len(self._repair)
 
     def _push_edges(self, rows: np.ndarray, nbrs: np.ndarray,
                     ws: np.ndarray) -> None:
@@ -553,6 +564,7 @@ class DynamicGraphStore:
             "width": self.width,
             "edges_added": self.edges_added,
             "edges_removed": self.edges_removed,
+            "repair_backlog": len(self._repair),
             "cc_iters": self.cc_iters,
             "cc_components": (len(set(self._cc_cache.values()))
                               if self._cc_cache is not None else None),

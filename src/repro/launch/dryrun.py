@@ -19,7 +19,7 @@ from repro.configs.registry import ARCHS, get_config        # noqa: E402
 from repro.launch import sharding as shp                    # noqa: E402
 from repro.launch.mesh import (make_gus_mesh,               # noqa: E402
                                make_production_mesh, mesh_context)
-from repro.models.model import (build_model, cache_specs,   # noqa: E402
+from repro.models.model import (cache_specs,                # noqa: E402
                                 input_specs, params_specs)
 from repro.serve.serve_step import make_decode_step, make_prefill_step  # noqa: E402
 from repro.train.optimizer import AdamWConfig               # noqa: E402

@@ -88,6 +88,9 @@ def main():
                          "=N set before launch)")
     ap.add_argument("--replicas", type=int, default=0,
                     help="replica fleet size backing straggler hedging")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="async double-buffered write path "
+                         "(serve.pipeline.MutationPipeline)")
     args = ap.parse_args()
 
     if args.shards > len(jax.devices()):
@@ -97,12 +100,14 @@ def main():
     engine, stream, cluster = build_engine(
         args.dataset, args.points, scann_nn=args.scann_nn,
         idf_size=args.idf_size, filter_percent=args.filter_percent,
-        backend=args.backend, shards=args.shards, replicas=args.replicas)
+        backend=args.backend, shards=args.shards, replicas=args.replicas,
+        engine_cfg=EngineConfig(pipeline=args.pipeline))
     print(f"[serve] bootstrapped {len(engine.gus.index)} points")
 
     for i, batch in zip(range(args.mutations), stream):
         engine.submit_mutations(batch)
         if args.queries and i % max(args.mutations // 10, 1) == 0:
+            engine.flush()       # the probe below bypasses engine.query
             qids = stream.query_ids(min(16, args.queries))
             res = engine.gus.neighbors_of_ids(qids)
             same = [cluster[n] == cluster[q]
@@ -110,6 +115,7 @@ def main():
                     for n in res.ids[r] if 0 <= n < len(cluster)]
             print(f"[serve] after batch {i}: index={len(engine.gus.index)} "
                   f"same-cluster={np.mean(same):.2f}")
+    engine.flush()
     print(json.dumps(engine.stats(), indent=1, default=str))
 
 

@@ -14,8 +14,6 @@ is taken instead (e.g. qwen2-vl's 28 heads fall back to head_dim=128).
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P

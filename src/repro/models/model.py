@@ -12,7 +12,6 @@ frontends, caches for decode) — no device allocation, per the brief.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

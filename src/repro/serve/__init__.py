@@ -1,2 +1,3 @@
 from repro.serve.serve_step import make_decode_step, make_prefill_step
 from repro.serve.engine import GusEngine, EngineConfig
+from repro.serve.pipeline import MutationPipeline, PipelineConfig

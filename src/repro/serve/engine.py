@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.core.gus import DynamicGUS
 from repro.core.types import MutationBatch, NeighborResult
+from repro.serve.pipeline import MutationPipeline, PipelineConfig
 from repro.utils import pow2_pad
 from repro.utils.timing import Timer, percentiles
 
@@ -37,6 +38,11 @@ class EngineConfig:
     query_batch: int = 64         # padded query batch size
     hedge_ms: float = 50.0        # straggler hedge deadline
     snapshot_every: int = 50      # mutation batches between snapshots
+    # async write path: double-buffer mutate batches through
+    # serve.pipeline.MutationPipeline (final state identical to the
+    # synchronous path; queries/snapshots flush first)
+    pipeline: bool = False
+    repair_per_tick: int | None = None   # None = graph's repair_per_batch
 
 
 class GusEngine:
@@ -47,6 +53,11 @@ class GusEngine:
         self.replicas = list(replicas)
         self.replica_hedges = [0] * len(self.replicas)
         self._next_replica = 0
+        self.pipelines: list[MutationPipeline] = []
+        if cfg.pipeline:
+            pcfg = PipelineConfig(repair_per_tick=cfg.repair_per_tick)
+            self.pipelines = [MutationPipeline(g, pcfg)
+                              for g in (gus, *self.replicas)]
         self.mutation_log: list[MutationBatch] = []
         self.log_since_snapshot = 0
         self.snapshot_state: dict | None = None
@@ -58,15 +69,27 @@ class GusEngine:
 
     def submit_mutations(self, batch: MutationBatch) -> None:
         t0 = time.perf_counter()
-        self.gus.mutate(batch)
-        for replica in self.replicas:    # replicas stay mutation-consistent
-            replica.mutate(batch)
+        if self.pipelines:
+            for pipe in self.pipelines:
+                pipe.submit(batch)
+        else:
+            self.gus.mutate(batch)
+            for replica in self.replicas:  # replicas stay consistent
+                replica.mutate(batch)
         self.mutation_log.append(batch)
         self.log_since_snapshot += 1
-        # visibility lag: mutation is visible as soon as mutate() returns
+        # visibility lag: synchronous mutations are visible when mutate()
+        # returns; pipelined ones when the next hand-off completes (the
+        # engine flushes before any read, so this is the submit latency)
         self.freshness.record(time.perf_counter() - t0)
         if self.log_since_snapshot >= self.cfg.snapshot_every:
             self.snapshot()
+
+    def flush(self) -> None:
+        """Barrier for the async write path: after this, every submitted
+        mutation is applied, graph-maintained, and query-visible."""
+        for pipe in self.pipelines:
+            pipe.flush()
 
     # -------------------------------------------------------------- queries
 
@@ -74,6 +97,7 @@ class GusEngine:
         """Pad the query batch to a power of two, answer, unpad; hedge
         against a replica if the primary exceeds the deadline."""
         self.queries += 1
+        self.flush()              # read-your-writes across the async path
         n = next(iter(features.values())).shape[0]
         padded = pow2_pad(n, self.cfg.query_batch)
         feats = {key: np.concatenate(
@@ -100,7 +124,9 @@ class GusEngine:
     def snapshot(self) -> None:
         """Snapshot = live ids + features (the index is rebuildable state)
         + the maintained graph arrays (rebuildable too, but restoring them
-        skips the full-corpus re-query on recovery)."""
+        skips the full-corpus re-query on recovery). Flushes the async
+        write path first so the snapshot observes every submitted batch."""
+        self.flush()
         ids = self.gus.store.ids()
         self.snapshot_state = {
             "ids": ids,
@@ -115,7 +141,10 @@ class GusEngine:
                 replicas: Sequence[DynamicGUS] = ()) -> "GusEngine":
         """Restart onto a fresh engine: bootstrap from the snapshot (graph
         state restored rather than recomputed where both sides have one),
-        then replay the mutation-log suffix (onto the new replicas too)."""
+        then replay the mutation-log suffix (onto the new replicas too).
+        The log is appended at submit time, so batches that were still in
+        flight in a crashed pipeline replay too — recovery never touches
+        the dead engine's device state."""
         eng = GusEngine(fresh_gus, self.cfg, replicas)
         targets = [fresh_gus, *eng.replicas]
         if self.snapshot_state is not None and len(self.snapshot_state["ids"]):
@@ -148,6 +177,8 @@ class GusEngine:
             "query_latency": self.gus.query_timer.summary(),
             "mutation_latency": self.gus.mutation_timer.summary(),
         }
+        if self.pipelines:
+            out["pipeline"] = self.pipelines[0].stats()
         if self.gus.graph is not None:
             out["graph"] = {
                 **self.gus.graph.stats(),

@@ -1,0 +1,210 @@
+"""Async double-buffered mutation pipeline with batched graph repair.
+
+The paper's headline claim is tens-of-milliseconds mutation latency
+*while serving*: the write path must not serialize host work behind
+device work. The synchronous ``DynamicGUS.mutate`` alternates strictly —
+host routing/encoding, then the device append, then graph maintenance —
+so on every batch one side idles while the other runs, and every RPC
+batch pays the full fixed dispatch cost of the encode + append programs.
+
+``MutationPipeline`` double-buffers *windows* of mutate batches:
+
+  stage A (host)    — ``encode_mutation`` for window *w+1*: feature
+                      normalization, embedding, backend routing / PQ
+                      encoding, dispatched as ONE fused device program
+                      over the window's rows. Pure w.r.t. engine state.
+  stage B (device)  — the dispatched append/tombstone for window *w*,
+                      still in flight from the previous hand-off.
+
+``submit(batch)`` accumulates batches into the staging window; when the
+window closes (``PipelineConfig.window`` batches, a delete, an id staged
+twice, or ``flush``), the fused window is encoded (stage A) and the
+previous window's hand-off runs: ``jax.block_until_ready`` lives only
+inside that hand-off, followed by the maintained-graph tick for exactly
+that window. Fusing amortizes the per-dispatch overhead that dominates
+small-batch mutation streams — the RPC batch size is unchanged; only the
+device-side program sees the fused rows.
+
+**Exactness.** A fused window is restricted to upsert-only batches with
+pairwise-disjoint ids (every operation in the write path — hashing,
+IDF lookup, CountSketch, partition argmin, PQ encode, slab scatter — is
+row-independent, and free-list pops happen in the same order), so fused
+execution is *bit-identical* to applying the batches one at a time.
+Batches containing deletes close the window and apply alone, preserving
+order. When a maintained graph is configured the window is pinned to 1:
+the graph tick for batch *i* must observe the index exactly as of batch
+*i*, the same state the synchronous path sees.
+
+Graph repair rides the hand-off cadence: rows left under-full by purges
+or evictions accumulate in ``DynamicGraphStore``'s coalesced, deduped
+repair queue and are re-queried as **one batched**
+``_index_neighbors_of_ids`` call per tick, capped at
+``repair_per_tick`` — never as per-mutation one-offs. The forward probe
+for the upserted points reuses the staged embeddings
+(``graph_apply(reuse_emb=True)``), bit-identical to the synchronous
+re-gather + re-embed because the store holds the same feature values.
+
+Equivalence contract: with the default configuration, a ``submit`` per
+batch plus a final ``flush()`` produces **bit-identical** index rows,
+graph adjacency, and CC labels to calling ``DynamicGUS.mutate`` per
+batch — the pipeline only moves work in time and fuses device dispatches,
+never changes per-row results. ``flush()`` is the explicit barrier: call
+it before snapshots, recovery, rebuilds, or any read that must observe
+every submitted batch (``GusEngine`` does).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.gus import DynamicGUS, StagedMutation
+from repro.core.types import MutationBatch, MUTATION_DELETE
+from repro.utils.timing import Timer
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    # max upsert-only batches fused per window (1 = strict per-batch
+    # double buffering; forced to 1 while a maintained graph is on)
+    window: int = 8
+    # repair re-queries drained per tick; None = the graph's
+    # repair_per_batch, which keeps the pipeline bit-identical to the
+    # synchronous path (the equivalence tests pin this)
+    repair_per_tick: int | None = None
+
+
+def fuse_batches(batches: list) -> MutationBatch:
+    """Concatenate window batches into one MutationBatch (rows in submit
+    order; callers guarantee upsert-only and disjoint ids)."""
+    if len(batches) == 1:
+        return batches[0]
+    return MutationBatch(
+        kinds=np.concatenate([np.asarray(b.kinds) for b in batches]),
+        ids=np.concatenate([np.asarray(b.ids) for b in batches]),
+        features={k: np.concatenate(
+            [np.asarray(b.features[k]) for b in batches])
+            for k in batches[0].features})
+
+
+class MutationPipeline:
+    """Double-buffered write path over a ``DynamicGUS`` (see module doc)."""
+
+    def __init__(self, gus: DynamicGUS,
+                 cfg: PipelineConfig = PipelineConfig()):
+        self.gus = gus
+        self.cfg = cfg
+        self._queue: list[MutationBatch] = []     # accumulating window
+        self._queue_ids: set = set()              # upserted ids staged
+        self._inflight: StagedMutation | None = None
+        self._inflight_ids: set = set()           # upserted ids in flight
+        # backends whose update path re-routes free-list slots (scann)
+        # cannot fuse updates of live ids bit-exactly — fall back to a
+        # window boundary before them
+        self._fused_updates_exact = getattr(
+            gus.index, "FUSED_UPDATES_EXACT", True)
+        self.submitted = 0            # points acknowledged
+        self.windows = 0              # fused windows encoded
+        self.ticks = 0                # completed hand-offs
+        self.repaired = 0             # repair re-queries drained
+        self.encode_timer = Timer("pipeline_encode")
+        self.handoff_timer = Timer("pipeline_handoff")
+
+    @property
+    def in_flight(self) -> bool:
+        return self._inflight is not None or bool(self._queue)
+
+    def window_size(self) -> int:
+        """Effective fuse window: a maintained graph pins it to 1 so the
+        per-batch graph tick sees exactly the synchronous index states."""
+        return 1 if self.gus.graph is not None else max(1, self.cfg.window)
+
+    def submit(self, batch: MutationBatch) -> int:
+        """Stage the batch. Returns the number of points acknowledged
+        (they become query-visible at the next hand-off — ``flush()``
+        forces it)."""
+        kinds = np.asarray(batch.kinds)
+        ids = np.asarray(batch.ids)
+        has_del = bool((kinds == MUTATION_DELETE).any())
+        up_ids = set(ids[kinds != MUTATION_DELETE].tolist())
+        updates_live = (not self._fused_updates_exact) and any(
+            pid in self.gus.store or pid in self._inflight_ids
+            for pid in up_ids)
+        # window boundaries keep fused windows upsert-only with disjoint
+        # ids (and, for layout-sensitive backends, free of updates) — the
+        # regime where fused == sequential, bitwise
+        if self._queue and (has_del or updates_live
+                            or len(self._queue) >= self.window_size()
+                            or (up_ids & self._queue_ids)):
+            self._close_window()
+        self._queue.append(batch)
+        self._queue_ids |= up_ids
+        self.submitted += int(ids.size)
+        if has_del:                   # deletes apply alone, in order
+            self._close_window()
+        return int(ids.size)
+
+    def flush(self) -> None:
+        """Barrier: encode + apply everything staged and complete the
+        in-flight window (device append, host maps, graph tick, repair
+        drain). After ``flush`` the engine state is exactly what the
+        synchronous path would have produced."""
+        self._close_window()
+        self._handoff()
+
+    def _close_window(self) -> None:
+        """Stage A for the accumulated window: fuse, encode (dispatch
+        only), then hand off the previous window and park this one as
+        in-flight."""
+        if not self._queue:
+            return
+        fused = fuse_batches(self._queue)
+        queue_ids = self._queue_ids
+        self._queue = []
+        self._queue_ids = set()
+        t0 = time.perf_counter()
+        staged = self.gus.encode_mutation(fused)
+        t_encode = time.perf_counter() - t0
+        self.encode_timer.record(t_encode)
+        # mutation latency in pipelined mode = the stage-A dispatch; the
+        # window's apply/barrier overlaps later submits (handoff timer)
+        self.gus.mutation_timer.record(t_encode)
+        self.windows += 1
+        self._handoff()
+        self._inflight = staged
+        self._inflight_ids = queue_ids
+
+    def _handoff(self) -> None:
+        staged = self._inflight
+        if staged is None:
+            return
+        self._inflight = None
+        self._inflight_ids = set()
+        with self.handoff_timer:
+            # stage B: the encode results dispatched at window close have
+            # had the whole in-flight window to compute — materializing
+            # them (inside apply) no longer waits on the device
+            self.gus.apply_mutation(staged)
+            self.gus.finish_mutation(staged)          # block_until_ready
+            if self.gus.graph is not None:
+                with self.gus.graph_timer:
+                    self.gus.graph_apply(staged, reuse_emb=True)
+                    self.repaired += self.gus.flush_graph_repair(
+                        self.cfg.repair_per_tick)
+        self.ticks += 1
+
+    def stats(self) -> dict:
+        out = {
+            "submitted": self.submitted,
+            "windows": self.windows,
+            "ticks": self.ticks,
+            "staged_batches": len(self._queue),
+            "in_flight": self.in_flight,
+            "repaired": self.repaired,
+            "encode": self.encode_timer.summary(),
+            "handoff": self.handoff_timer.summary(),
+        }
+        if self.gus.graph is not None:
+            out["repair_backlog"] = self.gus.graph.repair_backlog()
+        return out

@@ -11,7 +11,6 @@ the standard EF-SGD construction that keeps convergence unbiased.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

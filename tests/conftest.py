@@ -1,6 +1,8 @@
 import os
 import random
+import signal
 import sys
+import threading
 
 # tests must see the default single CPU device (the 512-device override is
 # the dry-run's business only — see src/repro/launch/dryrun.py); multi-device
@@ -12,12 +14,23 @@ sys.path.insert(0, os.path.dirname(__file__))
 import numpy as np   # noqa: E402
 import pytest        # noqa: E402
 
+# per-test wall-clock budget: generous for a single test, small enough
+# that one wedged test cannot eat the quick lane's ~5-minute budget.
+# Subprocess-mesh tests (all @slow) get a larger ceiling; override any
+# test with @pytest.mark.timeout(seconds).
+QUICK_TIMEOUT_S = 120
+SLOW_TIMEOUT_S = 900
+
 
 def pytest_configure(config):
     config.addinivalue_line(
         "markers",
         "slow: long-running tests (subprocess meshes, large corpora); "
         "deselect with -m 'not slow' for the quick CI lane")
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): per-test wall-clock limit enforced via SIGALRM "
+        f"(defaults: {QUICK_TIMEOUT_S}s, {SLOW_TIMEOUT_S}s for @slow)")
 
 
 @pytest.fixture(autouse=True)
@@ -27,3 +40,32 @@ def _deterministic_seeds():
     random.seed(0)
     np.random.seed(0)
     yield
+
+
+@pytest.fixture(autouse=True)
+def _per_test_timeout(request):
+    """SIGALRM-based per-test timeout (pytest-timeout is not available in
+    the hermetic CI container). No-op off the main thread / off POSIX."""
+    marker = request.node.get_closest_marker("timeout")
+    if marker is not None:
+        seconds = int(marker.args[0])
+    elif request.node.get_closest_marker("slow") is not None:
+        seconds = SLOW_TIMEOUT_S
+    else:
+        seconds = QUICK_TIMEOUT_S
+    if (not hasattr(signal, "SIGALRM")
+            or threading.current_thread() is not threading.main_thread()):
+        yield
+        return
+
+    def _on_timeout(signum, frame):
+        pytest.fail(f"test exceeded the {seconds}s per-test timeout",
+                    pytrace=False)
+
+    old = signal.signal(signal.SIGALRM, _on_timeout)
+    signal.alarm(seconds)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)

@@ -1,0 +1,250 @@
+"""Async mutation pipeline contract (serve.pipeline.MutationPipeline).
+
+The pipeline only moves work in time and fuses device dispatches — it must
+never change results. These tests pin the equivalence bit-exactly against
+the synchronous ``DynamicGUS.mutate`` path under randomized interleavings
+of inserts / updates / deletes:
+
+* index rows (per-point neighborhoods, raw backend arrays),
+* maintained-graph adjacency (slots + weights),
+* connected-component labels,
+
+for all three backends, plus the window-boundary rules (deletes and
+duplicate ids close the fuse window) and the ``flush()`` barrier through
+``GusEngine`` snapshot / recover / query.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.ann.scann import ScannConfig
+from repro.ann.sharded_index import ShardedConfig
+from repro.core import (BucketConfig, DynamicGUS, GusConfig, MutationBatch,
+                        MUTATION_DELETE, MUTATION_INSERT)
+from repro.core.scorer import train_scorer
+from repro.data.stream import MutationStream, StreamConfig
+from repro.data.synthetic import OGB_ARXIV_LIKE, labeled_pairs, make_dataset
+from repro.graph.cc import offline_components
+from repro.graph.store import GraphConfig
+from repro.serve.engine import EngineConfig, GusEngine
+from repro.serve.pipeline import MutationPipeline, PipelineConfig
+
+DATA = dataclasses.replace(OGB_ARXIV_LIKE, n_points=300, n_clusters=6)
+BUCKETS = BucketConfig(dense_tables=8, dense_bits=10, scalar_widths=(2.0,))
+
+BACKENDS = {
+    "brute": {},
+    "scann": {"scann": ScannConfig(d_proj=32, n_partitions=16, nprobe=4,
+                                   reorder=64)},
+    "sharded": {"sharded": ShardedConfig(
+        n_shards=1, d_proj=32, n_partitions=8, nprobe_local=0, reorder=512,
+        pq_m=4, kmeans_iters=4, pq_iters=2)},
+}
+
+
+@pytest.fixture(scope="module")
+def world():
+    ids, feats, cluster = make_dataset(DATA)
+    pf, lbl = labeled_pairs(feats, cluster, 600, DATA.spec, seed=1)
+    scorer, _ = train_scorer(jax.random.PRNGKey(0), DATA.spec, pf, lbl,
+                             steps=40)
+    return ids, feats, scorer
+
+
+def _gus_raw(world, backend, graph=True):
+    """A constructed-but-unbootstrapped engine (the recover() target)."""
+    ids, feats, scorer = world
+    return DynamicGUS(DATA.spec, BUCKETS, scorer, GusConfig(
+        scann_nn=5, backend=backend,
+        graph=GraphConfig(k=4, capacity=512) if graph else None,
+        **BACKENDS[backend]))
+
+
+def _gus(world, backend, graph=True):
+    ids, feats, scorer = world
+    gus = _gus_raw(world, backend, graph)
+    gus.bootstrap(ids[:150], {k: v[:150] for k, v in feats.items()})
+    return gus
+
+
+def _stream(seed, **kw):
+    return MutationStream(DATA, StreamConfig(batch_size=16, seed=seed, **kw),
+                          bootstrap_fraction=0.5)
+
+
+def _assert_index_equal(a: DynamicGUS, b: DynamicGUS):
+    assert set(a.store._rows) == set(b.store._rows)
+    qids = np.asarray(sorted(a.store._rows))[:24]
+    r1 = a._index_neighbors_of_ids(qids, 5)
+    r2 = b._index_neighbors_of_ids(qids, 5)
+    np.testing.assert_array_equal(r1.ids, r2.ids)
+    np.testing.assert_array_equal(r1.weights, r2.weights)
+    np.testing.assert_array_equal(r1.distances, r2.distances)
+    if a.cfg.backend == "sharded":
+        assert a.index.row_of == b.index.row_of
+        for key in a.index.state:
+            np.testing.assert_array_equal(
+                np.asarray(a.index.state[key]),
+                np.asarray(b.index.state[key]), err_msg=key)
+    elif a.cfg.backend == "brute":
+        np.testing.assert_array_equal(np.asarray(a.index.db_idx),
+                                      np.asarray(b.index.db_idx))
+        np.testing.assert_array_equal(np.asarray(a.index.db_val),
+                                      np.asarray(b.index.db_val))
+        np.testing.assert_array_equal(np.asarray(a.index.valid),
+                                      np.asarray(b.index.valid))
+    else:
+        np.testing.assert_array_equal(np.asarray(a.index.sp_idx),
+                                      np.asarray(b.index.sp_idx))
+        np.testing.assert_array_equal(np.asarray(a.index.members),
+                                      np.asarray(b.index.members))
+        np.testing.assert_array_equal(np.asarray(a.index.valid_list),
+                                      np.asarray(b.index.valid_list))
+
+
+def _assert_graph_equal(a: DynamicGUS, b: DynamicGUS):
+    np.testing.assert_array_equal(np.asarray(a.graph.nbr_slots),
+                                  np.asarray(b.graph.nbr_slots))
+    np.testing.assert_array_equal(np.asarray(a.graph.nbr_w),
+                                  np.asarray(b.graph.nbr_w))
+    assert a.graph.slot_of == b.graph.slot_of
+    cc_a, cc_b = a.graph.components(), b.graph.components()
+    assert cc_a == cc_b
+    # and both agree with the offline union-find oracle
+    assert cc_a == offline_components(
+        a.graph.edges()[0], np.asarray(sorted(a.graph.slot_of)))
+
+
+# ------------------------------------------------ pipelined == synchronous
+
+@pytest.mark.parametrize("backend", ["brute", "scann", "sharded"])
+def test_pipeline_matches_sync_with_graph(world, backend):
+    """Randomized insert/update/delete interleavings, maintained graph on:
+    bit-identical index rows, graph adjacency, and CC labels (the strict
+    per-batch schedule a configured graph pins)."""
+    sync_g = _gus(world, backend)
+    pipe_g = _gus(world, backend)
+    pipe = MutationPipeline(pipe_g)
+    for _, (a, b) in zip(range(6), zip(_stream(5), _stream(5))):
+        sync_g.mutate(a)
+        pipe.submit(b)
+    pipe.flush()
+    assert pipe.window_size() == 1          # graph pins strict windows
+    _assert_index_equal(sync_g, pipe_g)
+    _assert_graph_equal(sync_g, pipe_g)
+
+
+@pytest.mark.parametrize("backend", ["brute", "scann", "sharded"])
+def test_pipeline_matches_sync_fused_windows(world, backend):
+    """Without a graph the pipeline fuses upsert-only windows into single
+    device programs — still bit-identical to per-batch execution, across
+    randomized streams whose deletes exercise the window boundaries."""
+    sync_g = _gus(world, backend, graph=False)
+    pipe_g = _gus(world, backend, graph=False)
+    pipe = MutationPipeline(pipe_g)
+    for _, (a, b) in zip(range(8), zip(
+            _stream(9, insert_frac=0.7, update_frac=0.2),
+            _stream(9, insert_frac=0.7, update_frac=0.2))):
+        sync_g.mutate(a)
+        pipe.submit(b)
+    pipe.flush()
+    assert pipe.windows <= pipe.submitted // 16   # something actually fused
+    _assert_index_equal(sync_g, pipe_g)
+
+
+def test_window_boundaries(world):
+    """Deletes and duplicate upserted ids close the fuse window."""
+    ids, feats, scorer = world
+    gus = _gus(world, "brute", graph=False)
+    pipe = MutationPipeline(gus, PipelineConfig(window=8))
+
+    def insert(lo, n=4):
+        return MutationBatch(
+            kinds=np.full(n, MUTATION_INSERT, np.int32),
+            ids=ids[lo:lo + n],
+            features={k: v[lo:lo + n] for k, v in feats.items()})
+
+    pipe.submit(insert(150))
+    pipe.submit(insert(154))
+    assert pipe.windows == 0                 # still staging
+    # duplicate id forces the staged window out first
+    pipe.submit(insert(150))
+    assert pipe.windows == 1
+    # a delete closes the staged window and applies alone, in order
+    pipe.submit(MutationBatch(
+        kinds=np.asarray([MUTATION_DELETE], np.int32),
+        ids=ids[150:151], features=None))
+    assert pipe.windows == 3
+    pipe.flush()
+    assert int(ids[150]) not in gus.store._rows
+    assert int(ids[154]) in gus.store._rows
+
+
+# --------------------------------------------------- flush() via the engine
+
+def test_engine_pipeline_query_reads_writes(world):
+    """Queries flush the async write path first: a submitted batch is
+    visible to the very next query (read-your-writes)."""
+    ids, feats, scorer = world
+    gus = _gus(world, "brute", graph=False)
+    engine = GusEngine(gus, EngineConfig(pipeline=True))
+    assert engine.pipelines
+    engine.submit_mutations(MutationBatch(
+        kinds=np.full(8, MUTATION_INSERT, np.int32), ids=ids[200:208],
+        features={k: v[200:208] for k, v in feats.items()}))
+    assert engine.pipelines[0].in_flight
+    res = engine.query({k: v[200:201] for k, v in feats.items()}, k=3)
+    assert not engine.pipelines[0].in_flight      # flushed
+    assert res.ids[0, 0] == ids[200]
+    stats = engine.stats()
+    assert stats["pipeline"]["submitted"] == 8
+    assert stats["pipeline"]["ticks"] >= 1
+
+
+def test_engine_pipeline_snapshot_recover(world):
+    """snapshot() and recover() flush the pipeline: recovery lands on
+    exactly the state a synchronous engine would have (graph included)."""
+    ids, feats, scorer = world
+    sync_g = _gus(world, "scann")
+    sync_eng = GusEngine(sync_g, EngineConfig(snapshot_every=1000))
+    pipe_g = _gus(world, "scann")
+    pipe_eng = GusEngine(pipe_g, EngineConfig(snapshot_every=1000,
+                                              pipeline=True))
+    for _, (a, b) in zip(range(4), zip(_stream(3), _stream(3))):
+        sync_eng.submit_mutations(a)
+        pipe_eng.submit_mutations(b)
+    # in-flight work exists, then snapshot() must flush before reading
+    pipe_eng.snapshot()
+    assert not pipe_eng.pipelines[0].in_flight
+    _assert_index_equal(sync_g, pipe_g)
+    _assert_graph_equal(sync_g, pipe_g)
+
+    # recovery rebuilds the quantized index from the snapshot corpus, so
+    # the oracle is a synchronous engine recovered from its own snapshot:
+    # both retrain on identical corpora and must land bit-identical
+    sync_eng.snapshot()
+    rec_sync = sync_eng.recover(_gus_raw(world, "scann"))
+    rec_pipe = pipe_eng.recover(_gus_raw(world, "scann"))
+    assert rec_pipe.cfg.pipeline and rec_pipe.pipelines
+    _assert_index_equal(rec_sync.gus, rec_pipe.gus)
+    _assert_graph_equal(rec_sync.gus, rec_pipe.gus)
+
+
+def test_engine_pipeline_recover_replays_inflight_log(world):
+    """The mutation log is appended at submit time, so recovery replays
+    batches that were still staged/in flight in the dead engine."""
+    ids, feats, scorer = world
+    gus = _gus(world, "brute", graph=False)
+    engine = GusEngine(gus, EngineConfig(snapshot_every=1000, pipeline=True))
+    batches = [b for _, b in zip(range(3), _stream(11))]
+    for b in batches:
+        engine.submit_mutations(b)
+    assert len(engine.mutation_log) == 3
+    # a synchronous twin fed the same batches is the recovery oracle
+    oracle = _gus(world, "brute", graph=False)
+    for b in batches:
+        oracle.mutate(b)
+    recovered = engine.recover(_gus(world, "brute", graph=False))
+    _assert_index_equal(oracle, recovered.gus)

@@ -45,7 +45,10 @@ def test_sharded_query_matches_local_oracle():
         c, s = cell.n_partitions, cell.slab
         state = {
           "centroids": jnp.asarray(rng.normal(size=(c, cell.d_proj)), jnp.float32),
-          "books": jnp.asarray(rng.normal(size=(cell.pq_m, 256, cell.d_proj//cell.pq_m))*0.01, jnp.float32),
+          "books": jnp.asarray(
+              rng.normal(size=(cell.pq_m, 256,
+                               cell.d_proj // cell.pq_m)) * 0.01,
+              jnp.float32),
           "members_idx": jnp.asarray(rng.integers(0, 30, (c, s, cell.k_dims)), jnp.uint32),
           "members_val": jnp.asarray(rng.random((c, s, cell.k_dims)), jnp.float32),
           "codes": jnp.asarray(rng.integers(0, 256, (c, s, cell.pq_m)), jnp.uint8),

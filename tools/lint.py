@@ -1,0 +1,126 @@
+"""Dependency-free fallback linter for ``./ci.sh --lint``.
+
+Implements the subset of the repo's ruff config (pyproject.toml) that an
+AST walk can check without third-party packages:
+
+  E501  line longer than the configured limit (100)
+  E711  comparison to None with == / !=
+  E712  comparison to True / False with == / !=
+  E722  bare ``except:``
+  E9    syntax errors (ast.parse)
+  F401  module-level import never used (skipped in __init__.py re-exports)
+  W291/W293  trailing whitespace
+
+When ruff itself is installed (the GitHub Actions lane installs it),
+ci.sh prefers it; this keeps the lint lane meaningful in hermetic
+containers where pip installs are off the table.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+LINE_LIMIT = 100
+SKIP_DIRS = {".git", "__pycache__", ".ruff_cache", ".pytest_cache"}
+
+
+def _module_imports(tree: ast.Module) -> dict[str, ast.stmt]:
+    """Top-level imported binding name -> import node."""
+    out: dict[str, ast.stmt] = {}
+    for node in tree.body:
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                name = alias.asname or alias.name.split(".")[0]
+                out[name] = node
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":   # never "unused"
+                continue
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                out[alias.asname or alias.name] = node
+    return out
+
+
+def _used_names(tree: ast.Module) -> set[str]:
+    used: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            root = node
+            while isinstance(root, ast.Attribute):
+                root = root.value
+            if isinstance(root, ast.Name):
+                used.add(root.id)
+    # names re-exported via __all__ count as used
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign)
+                and any(isinstance(t, ast.Name) and t.id == "__all__"
+                        for t in node.targets)
+                and isinstance(node.value, (ast.List, ast.Tuple))):
+            for elt in node.value.elts:
+                if isinstance(elt, ast.Constant) and isinstance(elt.value,
+                                                               str):
+                    used.add(elt.value)
+    return used
+
+
+def lint_file(path: Path) -> list[str]:
+    problems = []
+    text = path.read_text()
+    for i, line in enumerate(text.splitlines(), 1):
+        if len(line) > LINE_LIMIT:
+            problems.append(f"{path}:{i}: E501 line too long "
+                            f"({len(line)} > {LINE_LIMIT})")
+        if line != line.rstrip():
+            code = "W293" if not line.strip() else "W291"
+            problems.append(f"{path}:{i}: {code} trailing whitespace")
+    try:
+        tree = ast.parse(text, filename=str(path))
+    except SyntaxError as exc:
+        problems.append(f"{path}:{exc.lineno}: E999 {exc.msg}")
+        return problems
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Compare):
+            for op, comp in zip(node.ops, node.comparators):
+                if not isinstance(op, (ast.Eq, ast.NotEq)):
+                    continue
+                if isinstance(comp, ast.Constant):
+                    if comp.value is None:
+                        problems.append(f"{path}:{node.lineno}: E711 "
+                                        "comparison to None (use `is`)")
+                    elif comp.value is True or comp.value is False:
+                        problems.append(f"{path}:{node.lineno}: E712 "
+                                        "comparison to bool (use `is`)")
+        elif isinstance(node, ast.ExceptHandler) and node.type is None:
+            problems.append(f"{path}:{node.lineno}: E722 bare except")
+    if path.name != "__init__.py":          # re-export surface is exempt
+        imports = _module_imports(tree)
+        used = _used_names(tree)
+        for name, node in imports.items():
+            if name not in used:
+                problems.append(f"{path}:{node.lineno}: F401 "
+                                f"'{name}' imported but unused")
+    return problems
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    problems = []
+    for path in sorted(root.rglob("*.py")):
+        if SKIP_DIRS & set(p.name for p in path.parents):
+            continue
+        problems.extend(lint_file(path))
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"\n{len(problems)} problem(s)", file=sys.stderr)
+        return 1
+    print("lint clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,7 +2,11 @@
 deletes/updates) into the dynamic index — plus the async write path:
 ``--pipeline`` runs the same mutation stream synchronously and through
 ``serve.pipeline.MutationPipeline`` (equal submitted batch size) and
-reports the throughput ratio and the query-latency interference.
+reports the throughput ratio and the query-latency interference — plus
+the sharded slab lifecycle: ``run_churn`` drives a delete/insert stream
+that wraps deliberately tight slabs and reports compaction throughput,
+reclaimed slots, and live-row retention (the smoke records the
+compaction-throughput metric report-only; retention is gated).
 
     PYTHONPATH=src python -m benchmarks.mutations [--pipeline] [--smoke]
 """
@@ -164,6 +168,59 @@ def run_pipeline(dataset: str = "arxiv", n: int = 2400, batches: int = 24,
     return out
 
 
+# ------------------------------------------- slab lifecycle churn (PR 5)
+
+def run_churn(dataset: str = "arxiv", n_boot: int = 128, rounds: int = 16,
+              delete_per: int = 24, insert_per: int = 48) -> dict:
+    """Wrap-under-churn on the sharded backend: tight slabs, a stream
+    that appends >2x their capacity, auto-compaction keeping live rows.
+
+    Reports retention (live rows kept / expected — 1.0 with
+    auto-compaction, the gated contract), compaction throughput (live
+    rows moved per second inside ``compact()``, machine-dependent:
+    report-only), and the reclaimed-slot total."""
+    from repro.ann.sharded_index import ShardedGusIndex
+
+    ids, feats, cluster, spec, scorer, gen = corpus(dataset)
+    emb = gen(feats)
+    cfg = ShardedConfig(n_shards=1, d_proj=64, n_partitions=8, slab=64,
+                        slab_headroom=2.0, nprobe_local=0, reorder=2048,
+                        pq_m=8, kmeans_iters=6, pq_iters=3)
+    idx = ShardedGusIndex(gen.k_max, cfg)
+    idx.build(ids[:n_boot], emb[:n_boot])
+    live = list(ids[:n_boot].tolist())
+    rng = np.random.default_rng(11)
+    next_id = 1_000_000
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        sel = sorted(rng.choice(len(live), delete_per, replace=False),
+                     reverse=True)
+        idx.delete([live.pop(int(j)) for j in sel])
+        new_ids = np.arange(next_id, next_id + insert_per, dtype=np.int64)
+        next_id += insert_per
+        idx.upsert(new_ids, emb[rng.integers(0, len(ids), insert_per)])
+        live += new_ids.tolist()
+    wall = time.perf_counter() - t0
+    occ = idx.occupancy()
+    retention = len(idx.row_of) / len(live)
+    rows_s = (idx.compacted_rows / idx.compact_s) if idx.compact_s else 0.0
+    out = {
+        "dataset": dataset, "rounds": rounds, "wall_s": wall,
+        "retention": retention, "aged_out": occ["aged_out"],
+        "compactions": occ["compactions"], "slab_grows": occ["slab_grows"],
+        "reclaimed_slots": occ["reclaimed_slots"],
+        "compaction_rows_s": rows_s,
+        "compact_s": idx.compact_s,
+    }
+    emit(f"mutations_churn_{dataset}", wall / max(rounds, 1) * 1e6,
+         f"retention={retention:.3f};compactions={occ['compactions']};"
+         f"reclaimed={occ['reclaimed_slots']};rows_s={rows_s:.0f}")
+    record_metric("sharded_churn_retention", retention, better="higher")
+    record_metric("sharded_compaction_rows_s", rows_s, better="higher",
+                  portable=False)
+    return out
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -182,10 +239,12 @@ if __name__ == "__main__":
             print(run_pipeline("arxiv", n=1600, batches=12,
                                backend=args.backend, queries_every=1,
                                trials=2))
+            print(run_churn("arxiv"))
         else:
             for backend in ("brute", "scann", "sharded"):
                 print(run_pipeline("arxiv", queries_every=2,
                                    backend=backend))
+            print(run_churn("arxiv", rounds=32))
     elif args.smoke:
         print(run("arxiv", n=1000, ops=60))
     else:

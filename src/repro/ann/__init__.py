@@ -1,3 +1,20 @@
+"""ANN backends behind the Dynamic GUS index protocol.
+
+Every backend speaks ``build / upsert / delete / search`` over
+``SparseBatch`` embeddings (``core.gus.make_index`` selects one):
+
+  brute.py         — exact full-scan oracle (small corpora, tests);
+  scann.py         — quantized single-replica ScaNN-style index
+                     (partitions + residual PQ + SOAR + exact rescore);
+  sharded_index.py — ``ShardedGusIndex``, the multi-device shard_map
+                     backend with a maintained slab lifecycle (SOAR
+                     copies, compaction, skew re-split);
+  sharded.py       — the shard_map device programs behind it (also
+                     lowered by the dry-run for the pod cells);
+  partition.py     — k-means partitioner + SOAR assignment;
+  quantize.py      — anisotropic product-quantization codebooks;
+  sparse.py        — CountSketch projection and exact sparse dots.
+"""
 from repro.ann.brute import BruteIndex
 from repro.ann.scann import ScannConfig, ScannIndex
 from repro.ann.sharded_index import ShardedConfig, ShardedGusIndex

@@ -66,21 +66,58 @@ def kmeans(x: jax.Array, n_clusters: int, iters: int = 20,
     return centroids
 
 
+def soar_cost(x: jax.Array, centroids: jax.Array, d2: jax.Array,
+              p1: jax.Array, soar_lambda: float) -> jax.Array:
+    """SOAR secondary-assignment cost given the primary ``p1``: residual
+    norm plus the weighted component parallel to the primary residual.
+    The one home of the formula — shared by ``assign_partitions`` (scann),
+    ``assign_partitions_local`` (sharded host mirror), and the sharded
+    device mutate step (``ann/sharded.py``), so the copies can never
+    drift. ``d2`` is the caller's [N, C] base cost (inf-masked entries
+    stay inf)."""
+    r1 = x - centroids[p1]                                   # primary residual
+    r1n = r1 / (jnp.linalg.norm(r1, axis=-1, keepdims=True) + 1e-9)
+    # residual to every centroid: r_j = x - c_j; parallel component to r1_hat
+    par = jnp.sum(x * r1n, -1)[:, None] - r1n @ centroids.T  # (x - c_j) . r1_hat
+    return d2 + soar_lambda * par * par
+
+
 @partial(jax.jit, static_argnames=("eta", "soar_lambda"))
 def assign_partitions(x: jax.Array, centroids: jax.Array,
                       eta: float = 1.0, soar_lambda: float = 1.0):
     """Primary + SOAR secondary partition per point. Returns (p1, p2) [N]."""
     cost = anisotropic_cost(x, centroids, eta)
     p1 = jnp.argmin(cost, axis=-1)
-    r1 = x - centroids[p1]                                   # primary residual
-    r1n = r1 / (jnp.linalg.norm(r1, axis=-1, keepdims=True) + 1e-9)
-    # residual to every centroid: r_j = x - c_j; parallel component to r1_hat
-    d2 = _pairwise_sq_dist(x, centroids)
-    par = jnp.sum(x * r1n, -1)[:, None] - r1n @ centroids.T  # (x - c_j) . r1_hat
-    soar = d2 + soar_lambda * par * par
+    soar = soar_cost(x, centroids, _pairwise_sq_dist(x, centroids), p1,
+                     soar_lambda)
     soar = soar.at[jnp.arange(x.shape[0]), p1].set(jnp.inf)  # j != primary
     p2 = jnp.argmin(soar, axis=-1)
     return p1, p2
+
+
+@partial(jax.jit, static_argnames=("c_loc", "soar_lambda"))
+def assign_partitions_local(x: jax.Array, centroids: jax.Array,
+                            owners: jax.Array, *, c_loc: int,
+                            soar_lambda: float = -1.0):
+    """``assign_partitions`` restricted to each point's owner block.
+
+    The sharded mutate path hash-routes every point to an owner shard that
+    holds ``c_loc`` consecutive partitions; primary and SOAR secondary are
+    chosen *inside* that block (write amplification stays shard-local).
+    This is the host mirror of the device-side assignment in
+    ``ann/sharded.py::make_mutate_step`` — same plain-L2 primary cost,
+    same SOAR secondary cost. ``soar_lambda < 0`` disables the secondary
+    (returns ``p2 = -1``). Returns ``(p1, p2)`` int32 [N] global ids.
+    """
+    d2 = _pairwise_sq_dist(x, centroids)
+    block = jnp.arange(centroids.shape[0])[None, :] // c_loc
+    masked = jnp.where(block == owners[:, None], d2, jnp.inf)
+    p1 = jnp.argmin(masked, axis=-1)
+    if soar_lambda < 0:
+        return p1, jnp.full_like(p1, -1)
+    soar = soar_cost(x, centroids, masked, p1, soar_lambda)
+    soar = soar.at[jnp.arange(x.shape[0]), p1].set(jnp.inf)
+    return p1, jnp.argmin(soar, axis=-1)
 
 
 @jax.jit

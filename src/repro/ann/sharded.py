@@ -11,22 +11,45 @@ answered by a scatter/merge dataflow with static shapes end-to-end:
                  shortlist -> local top-k. Then one all_gather of
                  k-per-shard candidates and a final merge top-k.
                  No all-to-all, no data-dependent gathers across chips.
+                 With SOAR enabled the shortlist carries each slot's point
+                 id (``row_ids``) and duplicates (a point probed via both
+                 its copies) are masked before the local top-k — the
+                 two-copy dedup discipline of ``ann/scann.py``.
 
   mutate step  — mutation batch replicated in; each shard keeps the rows it
-                 owns (hash routing), appends them ring-buffer style into
-                 its slabs. Write amplification is 1 (each row lands on
-                 exactly one shard + its SOAR copy locally). The step also
-                 returns each row's landing site (global partition, slot) —
-                 replicated via psum — so a host-side engine can maintain
-                 the id -> row map that deletes and result translation need.
+                 owns (hash routing over a ``salt`` — bump the salt and
+                 re-insert to re-balance owners, see ShardedGusIndex
+                 ``resplit``), appends them ring-buffer style into its
+                 slabs. With ``soar_lambda >= 0`` each row is appended to
+                 its primary partition *and* a SOAR secondary (Sun et al.
+                 2024) chosen inside the same shard — write amplification
+                 stays local. Copies append in per-row interleaved order
+                 (row0 primary, row0 secondary, row1 primary, ...) so the
+                 slab layout is a pure function of the row sequence — the
+                 invariant the fused-window write path relies on. The step
+                 also returns each row's landing sites (global partition,
+                 slot) per copy — replicated via psum — so a host-side
+                 engine can maintain the id -> rows map that deletes and
+                 result translation need.
 
   delete step  — tombstones: (global partition, slot) pairs replicated in;
                  each shard clears the validity bits of the slots it owns.
 
+  compact step — per-shard slab squeeze: tombstoned / superseded slots are
+                 dropped and live rows slide to the front of their slab in
+                 stable order; the ring cursor resets to the live count.
+                 Returns the old-slot -> new-slot map (sharded out, so the
+                 reassembled global array is the device truth) with which
+                 the host keeps its id -> rows map exact. Stability makes
+                 post-compaction queries bit-identical: every top-k /
+                 shortlist tie in the query step breaks by candidate
+                 order, and compaction preserves the relative order of all
+                 live slots.
+
 These are the programs the dry-run lowers for the GUS cells, and the very
 same functions serve live traffic on a small CPU mesh through
 ``repro.ann.sharded_index.ShardedGusIndex`` (tests/test_sharded.py,
-tests/test_dynamic_equivalence.py).
+tests/test_sharded_lifecycle.py, tests/test_dynamic_equivalence.py).
 """
 from __future__ import annotations
 
@@ -37,6 +60,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.ann.partition import soar_cost
 from repro.core import hashing
 from repro.core.types import PAD_INDEX
 
@@ -62,6 +86,18 @@ class GusCellConfig:
     # k-per-shard over every chip) or "hier" (two-stage: intra-"model"
     # gather + top-k, then cross-"data"/"pod" — the §Perf C optimization)
     merge: str = "flat"
+    # SOAR secondary-copy weight (Sun et al. 2024); < 0 = single copy.
+    # When enabled the mutate step writes two copies per row and the query
+    # step dedups shortlists by point id before the local top-k.
+    soar_lambda: float = -1.0
+
+    @property
+    def use_soar(self) -> bool:
+        return self.soar_lambda >= 0
+
+    @property
+    def n_copies(self) -> int:
+        return 2 if self.use_soar else 1
 
 
 # reserved id that no shard ever owns: mutation batches are padded with it
@@ -90,6 +126,7 @@ def index_specs(cell: GusCellConfig, mesh):
         "members_idx": P(ax, None, None),    # [C, S, K] sparse rows by slab
         "members_val": P(ax, None, None),
         "codes": P(ax, None, None),          # [C, S, M] u8
+        "row_ids": P(ax, None),              # [C, S] point id per slot
         "valid": P(ax, None),                # [C, S]
         "counts": P(ax),                     # [C] ring-buffer cursors
     }
@@ -105,6 +142,7 @@ def index_shapes(cell: GusCellConfig):
         "members_idx": jax.ShapeDtypeStruct((c, s, cell.k_dims), jnp.uint32),
         "members_val": jax.ShapeDtypeStruct((c, s, cell.k_dims), jnp.float32),
         "codes": jax.ShapeDtypeStruct((c, s, cell.pq_m), jnp.uint8),
+        "row_ids": jax.ShapeDtypeStruct((c, s), jnp.uint32),
         "valid": jax.ShapeDtypeStruct((c, s), jnp.bool_),
         "counts": jax.ShapeDtypeStruct((c,), jnp.int32),
     }
@@ -125,7 +163,7 @@ def make_query_step(mesh, cell: GusCellConfig):
     ispec = index_specs(cell, mesh)
 
     def local_query(q_idx, q_val, q_sketch, centroids, books,
-                    m_idx, m_val, codes, valid, counts):
+                    m_idx, m_val, codes, row_ids, valid, counts):
         # shapes here are per-shard: centroids [C/shards, d] etc.
         b = q_idx.shape[0]
         s = m_idx.shape[1]
@@ -164,6 +202,22 @@ def make_query_step(mesh, cell: GusCellConfig):
         valid_short = jnp.take_along_axis(
             cand_valid.reshape(b, -1), short, axis=-1)
         exact = jnp.where(valid_short, exact, -jnp.inf)
+        if cell.use_soar:
+            # SOAR dedup (mirrors scann.py's two-copy probe): both copies
+            # of a point live on its owner shard, so masking duplicates by
+            # point id before the local top-k is complete. Sorting by id
+            # also makes tie order slot-free — compaction-invariant.
+            sid = row_ids[part_of, pos_of]                     # [B, r]
+            sid = jnp.where(valid_short, sid, PAD_ID)
+            order = jnp.argsort(sid, axis=-1)
+            sid = jnp.take_along_axis(sid, order, axis=-1)
+            exact = jnp.take_along_axis(exact, order, axis=-1)
+            part_of = jnp.take_along_axis(part_of, order, axis=-1)
+            pos_of = jnp.take_along_axis(pos_of, order, axis=-1)
+            dup = jnp.concatenate(
+                [jnp.zeros((b, 1), bool), sid[:, 1:] == sid[:, :-1]],
+                axis=-1)
+            exact = jnp.where(dup, -jnp.inf, exact)
         k = min(cell.top_k, r)
         loc_scores, loc_pos = jax.lax.top_k(exact, k)
         # globalize candidate ids: (shard, partition, pos) -> flat row id
@@ -198,27 +252,37 @@ def make_query_step(mesh, cell: GusCellConfig):
         local_query, mesh=mesh,
         in_specs=(P(), P(), P(),
                   ispec["centroids"], ispec["books"], ispec["members_idx"],
-                  ispec["members_val"], ispec["codes"], ispec["valid"],
-                  ispec["counts"]),
+                  ispec["members_val"], ispec["codes"], ispec["row_ids"],
+                  ispec["valid"], ispec["counts"]),
         out_specs=(P(), P()),
         check_rep=False)
 
     def step(q_idx, q_val, q_sketch, state):
         return fn(q_idx, q_val, q_sketch, state["centroids"], state["books"],
                   state["members_idx"], state["members_val"], state["codes"],
-                  state["valid"], state["counts"])
+                  state["row_ids"], state["valid"], state["counts"])
 
     return step
 
 
-def make_mutate_step(mesh, cell: GusCellConfig):
+def make_mutate_step(mesh, cell: GusCellConfig, salt: int = 3):
     """Batched upsert: rows hash-route to one shard; each shard appends its
-    rows into the nearest local partition's slab (ring-buffer cursor).
+    rows into the nearest local partition's slab (ring-buffer cursor), and
+    — with SOAR enabled — into a secondary local partition whose residual
+    is as orthogonal as possible to the primary residual.
+
+    Copies append in per-row interleaved order (primary then secondary per
+    row, rows in batch order), which keeps the slab layout a pure function
+    of the row sequence: fusing consecutive batches into one call lands
+    every copy in exactly the slot per-batch calls would have used.
 
     Besides the updated index state, the step returns each row's landing
-    site ``(global partition, slot)`` (replicated across shards via psum;
-    ``(-1, 0)`` for ``PAD_ID`` padding rows) so the serving engine can keep
-    its host-side id -> row map in lockstep with the device truth.
+    sites ``(global partition, slot)`` per copy, shaped ``[B, n_copies]``
+    (replicated across shards via psum; ``(-1, 0)`` for ``PAD_ID`` padding
+    rows) so the serving engine can keep its host-side id -> rows map in
+    lockstep with the device truth. ``salt`` seeds the owner hash and is a
+    *compile-time* constant: bumping it (``ShardedGusIndex.resplit``)
+    re-jits the step and re-routes subsequent inserts.
     """
     ax = _flat_axes(mesh)
     n_shards = 1
@@ -227,53 +291,84 @@ def make_mutate_step(mesh, cell: GusCellConfig):
     ispec = index_specs(cell, mesh)
 
     def local_mutate(ids, new_idx, new_val, new_sketch, new_codes,
-                     centroids, m_idx, m_val, codes, valid, counts):
+                     new_codes2, centroids, m_idx, m_val, codes, row_ids,
+                     valid, counts):
+        b = ids.shape[0]
         shard_id = _linear_shard_id(mesh)
-        owner = (hashing.uhash(3, ids) % jnp.uint32(n_shards)).astype(jnp.int32)
+        owner = (hashing.uhash(salt, ids)
+                 % jnp.uint32(n_shards)).astype(jnp.int32)
         mine = (owner == shard_id) & (ids != PAD_ID)
         # nearest local partition for every row (masked rows write nowhere)
         d2 = (jnp.sum(new_sketch ** 2, -1)[:, None]
               - 2.0 * new_sketch @ centroids.T
               + jnp.sum(centroids ** 2, -1)[None, :])
-        part = jnp.argmin(d2, axis=-1)                        # [Bm]
+        p1 = jnp.argmin(d2, axis=-1)                          # [Bm]
+        if cell.use_soar:
+            # SOAR secondary on the shard's local centroid block — the
+            # cost formula is shared with the host mirror
+            # (ann/partition.py::soar_cost) so the two can never drift
+            cost2 = soar_cost(new_sketch, centroids, d2, p1,
+                              cell.soar_lambda)
+            cost2 = cost2.at[jnp.arange(b), p1].set(jnp.inf)
+            p2 = jnp.argmin(cost2, axis=-1)
+            part = jnp.stack([p1, p2], axis=1).reshape(-1)    # interleaved
+            put_idx = jnp.repeat(new_idx, 2, axis=0)
+            put_val = jnp.repeat(new_val, 2, axis=0)
+            put_codes = jnp.stack([new_codes, new_codes2],
+                                  axis=1).reshape(-1, new_codes.shape[1])
+            put_ids = jnp.repeat(ids, 2)
+            put_mine = jnp.repeat(mine, 2)
+        else:
+            part, put_idx, put_val, put_codes = p1, new_idx, new_val, \
+                new_codes
+            put_ids, put_mine = ids, mine
         # ring-buffer position: cursor[part] + my running count within part
         onehot = jax.nn.one_hot(part, centroids.shape[0],
-                                dtype=jnp.int32) * mine[:, None]
+                                dtype=jnp.int32) * put_mine[:, None]
         within = jnp.cumsum(onehot, axis=0) - onehot          # prior count
         pos = (counts[part] + jnp.sum(within * onehot, axis=-1)) \
             % m_idx.shape[1]
-        row = jnp.where(mine, part, centroids.shape[0])       # OOB drops
-        m_idx = m_idx.at[row, pos].set(new_idx, mode="drop")
-        m_val = m_val.at[row, pos].set(new_val, mode="drop")
-        codes = codes.at[row, pos].set(new_codes, mode="drop")
+        row = jnp.where(put_mine, part, centroids.shape[0])   # OOB drops
+        m_idx = m_idx.at[row, pos].set(put_idx, mode="drop")
+        m_val = m_val.at[row, pos].set(put_val, mode="drop")
+        codes = codes.at[row, pos].set(put_codes, mode="drop")
+        row_ids = row_ids.at[row, pos].set(put_ids, mode="drop")
         valid = valid.at[row, pos].set(True, mode="drop")
         counts = counts + jnp.sum(onehot, axis=0)
         # landing sites, replicated out: exactly one shard owns each row,
         # so the psum reconstructs (part, pos) on every shard.
         part_global = shard_id * centroids.shape[0] + part
         route_part = jax.lax.psum(
-            jnp.where(mine, part_global + 1, 0), ax) - 1
+            jnp.where(put_mine, part_global + 1, 0), ax) - 1
         route_pos = jax.lax.psum(
-            jnp.where(mine, pos, 0).astype(jnp.int32), ax)
-        return m_idx, m_val, codes, valid, counts, route_part, route_pos
+            jnp.where(put_mine, pos, 0).astype(jnp.int32), ax)
+        nc = cell.n_copies
+        return (m_idx, m_val, codes, row_ids, valid, counts,
+                route_part.reshape(b, nc), route_pos.reshape(b, nc))
 
     fn = shard_map(
         local_mutate, mesh=mesh,
-        in_specs=(P(), P(), P(), P(), P(),
+        in_specs=(P(), P(), P(), P(), P(), P(),
                   ispec["centroids"], ispec["members_idx"],
-                  ispec["members_val"], ispec["codes"], ispec["valid"],
-                  ispec["counts"]),
+                  ispec["members_val"], ispec["codes"], ispec["row_ids"],
+                  ispec["valid"], ispec["counts"]),
         out_specs=(ispec["members_idx"], ispec["members_val"], ispec["codes"],
-                   ispec["valid"], ispec["counts"], P(), P()),
+                   ispec["row_ids"], ispec["valid"], ispec["counts"],
+                   P(), P()),
         check_rep=False)
 
-    def step(ids, new_idx, new_val, new_sketch, new_codes, state):
-        m_idx, m_val, codes, valid, counts, r_part, r_pos = fn(
-            ids, new_idx, new_val, new_sketch, new_codes,
+    def step(ids, new_idx, new_val, new_sketch, new_codes, state,
+             new_codes2=None):
+        if new_codes2 is None:
+            new_codes2 = new_codes            # single-copy: slot unused
+        m_idx, m_val, codes, row_ids, valid, counts, r_part, r_pos = fn(
+            ids, new_idx, new_val, new_sketch, new_codes, new_codes2,
             state["centroids"], state["members_idx"], state["members_val"],
-            state["codes"], state["valid"], state["counts"])
+            state["codes"], state["row_ids"], state["valid"],
+            state["counts"])
         return ({**state, "members_idx": m_idx, "members_val": m_val,
-                 "codes": codes, "valid": valid, "counts": counts},
+                 "codes": codes, "row_ids": row_ids, "valid": valid,
+                 "counts": counts},
                 (r_part, r_pos))
 
     return step
@@ -282,10 +377,12 @@ def make_mutate_step(mesh, cell: GusCellConfig):
 def make_delete_step(mesh, cell: GusCellConfig):
     """Tombstone step: clear validity at (global partition, slot) pairs.
 
-    Deletes are host-routed — the engine knows each id's landing site from
+    Deletes are host-routed — the engine knows each id's landing sites from
     the mutate step's returned routes — so the program is a pure masked
     scatter: each shard clears the slots that fall in its partition range,
     everything else drops. Pairs with ``part == -1`` (padding) are ignored.
+    Tombstoned slots keep their stale payload until the compact step
+    squeezes them out (the validity mask excludes them from every query).
     """
     ispec = index_specs(cell, mesh)
 
@@ -305,6 +402,65 @@ def make_delete_step(mesh, cell: GusCellConfig):
 
     def step(parts, poss, state):
         return {**state, "valid": fn(parts, poss, state["valid"])}
+
+    return step
+
+
+def make_compact_step(mesh, cell: GusCellConfig):
+    """Slab compaction: squeeze tombstoned / superseded slots out, in place.
+
+    Per shard, per local partition: live rows slide to the front of the
+    slab in **stable order** (relative order of live slots is preserved —
+    that is what keeps post-compaction queries bit-identical, every tie in
+    the query step breaks by candidate order); dead tails are reset to
+    padding; the ring cursor restarts at the live count, so subsequent
+    appends land right after the compacted region.
+
+    Returns, alongside the updated state, the old-slot -> new-slot map
+    ``new_pos`` (i32 [C, S], −1 at dead slots; sharded out like ``valid``,
+    so the reassembled global array is the device truth) — the host uses
+    it to remap its id -> rows map without re-deriving anything.
+    """
+    ispec = index_specs(cell, mesh)
+
+    def local_compact(m_idx, m_val, codes, row_ids, valid):
+        s = valid.shape[1]
+        live_rank = jnp.cumsum(valid, axis=1) - 1             # [C_loc, S]
+        key = jnp.where(valid, live_rank, s + jnp.arange(s)[None, :])
+        perm = jnp.argsort(key, axis=1)                       # stable
+        n_live = jnp.sum(valid, axis=1).astype(jnp.int32)
+        new_valid = jnp.arange(s)[None, :] < n_live[:, None]
+
+        def g2(a, fill):
+            return jnp.where(new_valid,
+                             jnp.take_along_axis(a, perm, axis=1), fill)
+
+        def g3(a, fill):
+            return jnp.where(new_valid[:, :, None],
+                             jnp.take_along_axis(a, perm[:, :, None],
+                                                 axis=1), fill)
+
+        new_pos = jnp.where(valid, live_rank, -1).astype(jnp.int32)
+        return (g3(m_idx, PAD_INDEX), g3(m_val, 0.0),
+                g3(codes, 0).astype(jnp.uint8), g2(row_ids, PAD_ID),
+                new_valid, n_live, new_pos)
+
+    fn = shard_map(
+        local_compact, mesh=mesh,
+        in_specs=(ispec["members_idx"], ispec["members_val"], ispec["codes"],
+                  ispec["row_ids"], ispec["valid"]),
+        out_specs=(ispec["members_idx"], ispec["members_val"], ispec["codes"],
+                   ispec["row_ids"], ispec["valid"], ispec["counts"],
+                   ispec["valid"]),
+        check_rep=False)
+
+    def step(state):
+        m_idx, m_val, codes, row_ids, valid, counts, new_pos = fn(
+            state["members_idx"], state["members_val"], state["codes"],
+            state["row_ids"], state["valid"])
+        return ({**state, "members_idx": m_idx, "members_val": m_val,
+                 "codes": codes, "row_ids": row_ids, "valid": valid,
+                 "counts": counts}, new_pos)
 
     return step
 

@@ -1,36 +1,67 @@
 """Live sharded GUS backend: the shard_map programs behind the index protocol.
 
-``ShardedGusIndex`` takes the distributed query/mutate/delete programs of
-``repro.ann.sharded`` — the exact programs the dry-run lowers for the pod
-cells — and runs them on a small local mesh (``launch.mesh.make_gus_mesh``)
-behind the same ``build / upsert / delete / search`` protocol as
-``BruteIndex`` and ``ScannIndex``, so ``DynamicGUS`` can serve from it
-unchanged (``GusConfig(backend="sharded")``).
+``ShardedGusIndex`` takes the distributed query/mutate/delete/compact
+programs of ``repro.ann.sharded`` — the exact programs the dry-run lowers
+for the pod cells — and runs them on a small local mesh
+(``launch.mesh.make_gus_mesh``) behind the same ``build / upsert / delete /
+search`` protocol as ``BruteIndex`` and ``ScannIndex``, so ``DynamicGUS``
+can serve from it unchanged (``GusConfig(backend="sharded")``).
 
 Serving dataflow (paper §3.1 mapped onto shards, static shapes end-to-end):
 
   mutate  — batch replicated to every shard; rows hash-route to their owner
-            shard, append ring-buffer style into the nearest local
-            partition's slab. The device returns each row's landing site
-            (global partition, slot), which the host mirrors into an
-            id -> row map (needed for deletes and result translation).
+            shard (salted hash — see re-split below), append ring-buffer
+            style into the nearest local partition's slab *and*, with SOAR
+            enabled (the default), into a secondary local partition chosen
+            for residual orthogonality (Sun et al. 2024 — the same
+            effective redundancy ``ScannIndex`` spills). The device
+            returns each row's landing sites (global partition, slot) per
+            copy, which the host mirrors into an id -> rows map (needed
+            for deletes and result translation).
   delete  — host looks up landing sites, the tombstone program clears the
             validity bits on the owning shard.
   search  — per-shard: centroid matmul -> local top-nprobe -> PQ LUT
-            scoring -> exact sparse rescore -> local top-k; one all_gather
-            + merge top-k across shards. The host translates global rows
-            back to point ids.
+            scoring -> exact sparse rescore -> SOAR dedup by point id ->
+            local top-k; one all_gather + merge top-k across shards. The
+            host translates global rows back to point ids.
 
-Storage is fixed-capacity (partitions x slab ring buffers): when a
-partition's cursor wraps, the oldest rows in that slab are overwritten and
-their ids silently age out of the host map — the incremental, bounded-
-memory discipline of online k-NN-graph maintenance. Size ``slab`` to the
-expected per-partition occupancy with headroom (``build`` auto-grows it to
-8x the mean occupancy of the bootstrap corpus).
+Slab lifecycle (capacity is *maintained*, not silently recycled):
+
+  compaction — ``compact()`` runs the per-shard compact program: dead
+            slots (tombstones, superseded copies) are squeezed out, live
+            rows slide forward in stable order, the ring cursor resets to
+            the live count, and the host id -> rows map is remapped from
+            the device-reported old-slot -> new-slot map. Stability makes
+            search results **bit-identical** before/after compaction.
+            With ``auto_compact`` (default), ``begin_upsert`` compacts any
+            slab an incoming chunk would wrap — and if live occupancy
+            alone would still overflow, doubles the slab — so live rows
+            never silently age out (``aged_out`` counts the rows the old
+            wrap behavior would have dropped; it stays 0).
+  re-split — ``resplit()`` fixes per-shard occupancy skew: when
+            ``max/mean`` live rows per shard exceeds the threshold, the
+            hottest shard's rows are read back, the owner-hash ``salt`` is
+            bumped (a compile-time constant of the mutate program), and
+            the rows re-insert through the ordinary route/mutate machinery
+            — spreading them across the whole mesh. Queries never consult
+            the owner hash, so mixed-salt placements stay exactly
+            servable; ``GusEngine`` snapshots the salt so recovery
+            re-routes the same way.
+
+Fuse-window rule (the compaction boundary — see serve/pipeline.py): both
+compaction and slab growth move or re-home slots, so they must never land
+mid-fused-window. They only ever run inside ``begin_upsert`` — after the
+pending landing sites of the current call are materialized — and
+``maintenance_pressure()`` tells the pipeline when a wrap (hence a
+compaction) is possible so it can pin the fuse window to one batch; under
+pressure the pipelined schedule degenerates to exactly the synchronous
+per-batch schedule, keeping the two bit-identical
+(tests/test_pipeline.py::test_pipeline_compaction_boundary).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -39,8 +70,9 @@ from jax.sharding import NamedSharding
 
 from repro.ann import partition as part_mod
 from repro.ann import quantize as pq
-from repro.ann.sharded import (GusCellConfig, index_specs, make_delete_step,
-                               make_mutate_step, make_query_step)
+from repro.ann.sharded import (GusCellConfig, index_specs, make_compact_step,
+                               make_delete_step, make_mutate_step,
+                               make_query_step)
 from repro.ann.sparse import count_sketch
 from repro.core import hashing
 from repro.core.types import PAD_INDEX, SparseBatch
@@ -55,7 +87,8 @@ class ShardedConfig:
     n_shards: int = 1
     d_proj: int = 64            # CountSketch dimension
     n_partitions: int = 16      # global partition count (divisible by shards)
-    slab: int = 512             # ring-buffer rows per partition
+    slab: int = 512             # ring-buffer rows per partition (minimum;
+    #                             build() grows it to fit the corpus)
     nprobe_local: int = 0       # partitions probed per shard (0 = all local)
     reorder: int = 256          # per-shard exact-rescore shortlist
     query_batch: int = 64       # max padded query batch per device call
@@ -67,6 +100,27 @@ class ShardedConfig:
     eta: float = 1.0            # anisotropic weight for codebook training
     seed: int = 13
     merge: str = "flat"         # cross-shard candidate merge: "flat" | "hier"
+    # ---- slab lifecycle -------------------------------------------------
+    # SOAR secondary-copy weight (< 0 disables; also disabled when a shard
+    # owns a single partition — no distinct secondary exists)
+    soar_lambda: float = 1.0
+    # compact (and, if live rows alone would overflow, double) a slab an
+    # incoming chunk would wrap, instead of silently overwriting old rows
+    auto_compact: bool = True
+    # build() sizes slabs to hold headroom * n_copies * corpus rows
+    slab_headroom: float = 8.0
+    # > 0: upsert() auto-triggers resplit() when max/mean per-shard live
+    # occupancy exceeds this (0 = manual / engine-driven re-split only)
+    resplit_imbalance: float = 0.0
+
+    @property
+    def use_soar(self) -> bool:
+        return (self.soar_lambda >= 0
+                and self.n_partitions // max(self.n_shards, 1) > 1)
+
+    @property
+    def n_copies(self) -> int:
+        return 2 if self.use_soar else 1
 
 
 class ShardedGusIndex:
@@ -87,12 +141,26 @@ class ShardedGusIndex:
                                   two_level=cfg.merge == "hier")
         self.trained = False
         self.slab = cfg.slab
+        self.salt = 3                        # owner-hash salt (resplit bumps)
         self.state: dict | None = None
-        self.row_of: dict[int, int] = {}     # id -> global row (part*S + pos)
+        # id -> landing rows (part*S + pos), one per copy, primary first
+        self.row_of: dict[int, tuple[int, ...]] = {}
         self.id_of_row: np.ndarray | None = None
+        self._cursor = np.zeros((cfg.n_partitions,), np.int64)  # appends/part
         self._query_steps: dict = {}         # (padded B, k) -> jitted step
         self._mutate = None
         self._tombstone = None
+        self._compact_step = None
+        self._in_maintenance = False
+        # lifecycle counters (occupancy()/stats() surface them)
+        self.compactions = 0
+        self.slab_grows = 0
+        self.resplits = 0
+        self.reclaimed = 0                   # dead slots squeezed out
+        self.compacted_rows = 0              # live rows moved by compactions
+        self.compact_s = 0.0                 # wall-clock spent compacting
+        self.aged_out = 0                    # ids lost to ring wrap (0 when
+        #                                      auto_compact is on)
 
     def __len__(self) -> int:
         return len(self.row_of)
@@ -111,29 +179,32 @@ class ShardedGusIndex:
             slab=self.slab, nprobe_local=npl,
             query_batch=query_batch or cfg.query_batch,
             mutate_batch=cfg.mutate_batch, top_k=top_k or 10,
-            reorder=cfg.reorder, merge=cfg.merge)
+            reorder=cfg.reorder, merge=cfg.merge,
+            soar_lambda=cfg.soar_lambda if cfg.use_soar else -1.0)
 
     def _sketch(self, emb: SparseBatch) -> jax.Array:
         return count_sketch(emb, self.cfg.d_proj, self.cfg.seed)
 
     def _owners(self, ids: np.ndarray) -> np.ndarray:
-        """Hash routing, identical to the device program."""
-        h = np.asarray(hashing.uhash(3, jnp.asarray(ids, jnp.uint32)))
+        """Hash routing, identical to the device program (same salt)."""
+        h = np.asarray(hashing.uhash(self.salt, jnp.asarray(ids, jnp.uint32)))
         return (h % np.uint32(self.cfg.n_shards)).astype(np.int64)
 
-    def _route_partitions(self, sk: np.ndarray, owners: np.ndarray
-                          ) -> np.ndarray:
-        """Mirror of the device assignment: nearest partition within the
-        owner shard's local centroid block (used to encode PQ residuals
-        before shipping the batch; placements themselves come back from the
-        device as ground truth)."""
-        c = self._centroids_np
-        d2 = (np.sum(sk ** 2, -1)[:, None] - 2.0 * sk @ c.T
-              + np.sum(c ** 2, -1)[None, :])
-        c_loc = self.cfg.n_partitions // self.cfg.n_shards
-        block = np.arange(self.cfg.n_partitions)[None, :] // c_loc
-        d2 = np.where(block == owners[:, None], d2, np.inf)
-        return np.argmin(d2, axis=-1)
+    def _route_partitions(self, sk: np.ndarray, owners: np.ndarray):
+        """Mirror of the device assignment (primary + SOAR secondary inside
+        the owner shard's local centroid block, via
+        ``ann.partition.assign_partitions_local``) — used to encode PQ
+        residuals before shipping the batch; placements themselves come
+        back from the device as ground truth. Returns ``(p1, p2)``;
+        ``p2`` is None with SOAR disabled."""
+        cfg = self.cfg
+        p1, p2 = part_mod.assign_partitions_local(
+            jnp.asarray(sk, jnp.float32),
+            jnp.asarray(self._centroids_np, jnp.float32),
+            jnp.asarray(owners, jnp.int32),
+            c_loc=cfg.n_partitions // cfg.n_shards,
+            soar_lambda=cfg.soar_lambda if cfg.use_soar else -1.0)
+        return np.asarray(p1), (np.asarray(p2) if cfg.use_soar else None)
 
     def _query_step(self, padded: int, k: int):
         key = (padded, k)
@@ -156,15 +227,18 @@ class ShardedGusIndex:
         self._centroids_np = np.asarray(centroids)
         # residuals w.r.t. the *routed* assignment (owner-local nearest
         # partition) — the geometry the codes will actually live in
-        parts = self._route_partitions(sk, self._owners(ids)) if n else \
-            np.zeros((0,), np.int64)
-        residuals = jnp.asarray(sk - self._centroids_np[parts]) if n else \
-            jnp.zeros((1, cfg.d_proj), jnp.float32)
+        if n:
+            p1, _ = self._route_partitions(sk, self._owners(ids))
+            residuals = jnp.asarray(sk - self._centroids_np[p1])
+        else:
+            residuals = jnp.zeros((1, cfg.d_proj), jnp.float32)
         books = pq.train_codebooks(residuals, cfg.pq_m, cfg.pq_centers,
                                    cfg.pq_iters, cfg.eta, cfg.seed)
-        # size the ring buffers to the bootstrap corpus with 8x headroom
+        # size the ring buffers to the bootstrap corpus (every point lands
+        # n_copies times) with slab_headroom slack for churn
         slab = 64
-        while slab * cfg.n_partitions < 8 * max(n, 1):
+        while slab * cfg.n_partitions < \
+                cfg.slab_headroom * cfg.n_copies * max(n, 1):
             slab *= 2
         self.slab = max(cfg.slab, slab)
         self._alloc(centroids, books)
@@ -183,6 +257,7 @@ class ShardedGusIndex:
                                     jnp.uint32),
             "members_val": jnp.zeros((c, s, self.k_dims), jnp.float32),
             "codes": jnp.zeros((c, s, cfg.pq_m), jnp.uint8),
+            "row_ids": jnp.full((c, s), _PAD_ID, jnp.uint32),
             "valid": jnp.zeros((c, s), bool),
             "counts": jnp.zeros((c,), jnp.int32),
         }
@@ -192,26 +267,47 @@ class ShardedGusIndex:
                 for k, v in init.items()}
         self.row_of = {}
         self.id_of_row = np.full((c * s,), -1, np.int64)
+        self._cursor = np.zeros((c,), np.int64)
         self._query_steps = {}
-        self._mutate = jax.jit(make_mutate_step(self.mesh, cell))
+        self._mutate = jax.jit(make_mutate_step(self.mesh, cell, self.salt))
         self._tombstone = jax.jit(make_delete_step(self.mesh, cell))
+        self._compact_step = jax.jit(make_compact_step(self.mesh, cell))
 
     # ------------------------------------------------------------ mutations
 
     def upsert(self, ids: np.ndarray, emb: SparseBatch) -> None:
+        self.auto_resplit()
         self.finish_upsert(
             self.begin_upsert(ids, emb, self.encode_upsert(ids, emb)))
+
+    @property
+    def auto_resplit_on(self) -> bool:
+        """Whether the skew re-split policy is armed. The async pipeline
+        pins its fuse window to 1 while this holds and calls
+        ``auto_resplit`` on the synchronous per-batch schedule."""
+        return self.cfg.resplit_imbalance > 0
+
+    def auto_resplit(self) -> int:
+        """Policy trigger: re-split when the configured per-shard
+        imbalance is exceeded. Runs before a batch's encode — the salt it
+        may bump is baked into staged routing, so it must never fire
+        between a batch's encode and its append (``serve.pipeline`` calls
+        it only at window boundaries, after the previous hand-off)."""
+        if self.auto_resplit_on and self.trained:
+            return self.resplit(self.cfg.resplit_imbalance)
+        return 0
 
     # Two-phase mutate entry points (serve.pipeline double-buffers these).
     # ``encode_upsert`` reads only build-time structures (centroids, books)
     # so it can run for batch i+1 while batch i's shard_map append is in
     # flight; ``finish_upsert`` materializes the device-reported landing
-    # sites into the host id -> row map. ``upsert`` is the composition.
+    # sites into the host id -> rows map. ``upsert`` is the composition.
 
     def encode_upsert(self, ids: np.ndarray, emb: SparseBatch
                       ) -> dict | None:
-        """Stage A: dedup, hash-route owners, sketch, partition routing,
-        residual PQ codes, padded mutate-batch staging (all pure)."""
+        """Stage A: dedup, hash-route owners, sketch, partition routing
+        (primary + SOAR secondary), residual PQ codes per copy, padded
+        mutate-batch staging (all pure)."""
         assert self.trained, "build() the index before mutating it"
         cfg = self.cfg
         ids = np.asarray(ids, np.int64)
@@ -226,11 +322,15 @@ class ShardedGusIndex:
             ids, emb = ids[keep], emb[keep]
 
         sk = np.asarray(self._sketch(emb))    # host routing needs the sketch
-        parts = self._route_partitions(sk, self._owners(ids))
+        p1, p2 = self._route_partitions(sk, self._owners(ids))
         # the PQ codes stay device-side: begin_upsert materializes them
         # after the previous window's in-flight time has hidden the wait
-        codes = pq.encode(jnp.asarray(sk - self._centroids_np[parts]),
+        codes = pq.encode(jnp.asarray(sk - self._centroids_np[p1]),
                           self.state["books"])
+        codes2 = None
+        if p2 is not None:
+            codes2 = pq.encode(jnp.asarray(sk - self._centroids_np[p2]),
+                               self.state["books"])
 
         bm = cfg.mutate_batch
         chunks = []
@@ -247,13 +347,22 @@ class ShardedGusIndex:
             b_sk[:n_c] = sk[sel]
             chunks.append((n_c, ids[sel].tolist(),
                            (ids_u, b_idx, b_val, b_sk, sel)))
-        return {"ids": ids, "codes": codes, "chunks": chunks}
+        return {"ids": ids, "codes": codes, "codes2": codes2,
+                "parts": p1, "parts2": p2, "chunks": chunks}
 
     def begin_upsert(self, ids: np.ndarray, emb: SparseBatch,
                      staged: dict | None = None):
         """Stage B dispatch: tombstone overwritten rows, ship the staged
         chunks through the shard_map append (async — landing sites are
-        returned as in-flight device arrays)."""
+        returned as in-flight device arrays).
+
+        This is also where the slab lifecycle runs (the compaction
+        boundary): before dispatching a chunk that would wrap a slab,
+        already-dispatched landing sites are materialized, the slabs
+        compact, and — only if live occupancy alone still would not fit —
+        the slab doubles. Compaction never runs anywhere else, so a
+        pipeline that closes its fuse window under ``maintenance_pressure``
+        keeps the pipelined and synchronous schedules bit-identical."""
         assert self.trained, "build() the index before mutating it"
         if staged is None:
             staged = self.encode_upsert(ids, emb)
@@ -263,46 +372,85 @@ class ShardedGusIndex:
                      if pid in self.row_of])
         cfg = self.cfg
         codes = np.asarray(staged["codes"])
+        codes2 = None if staged["codes2"] is None \
+            else np.asarray(staged["codes2"])
+        p1, p2 = staged["parts"], staged["parts2"]
         pending = []
         for n_c, chunk_ids, arrays in staged["chunks"]:
             ids_u, b_idx, b_val, b_sk, sel = arrays
+            inc = np.bincount(p1[sel], minlength=cfg.n_partitions)
+            if p2 is not None:
+                inc += np.bincount(p2[sel], minlength=cfg.n_partitions)
+            if cfg.auto_compact and np.any(self._cursor + inc > self.slab):
+                self._materialize(pending)
+                self.compact()
+                while np.any(self._live_per_partition() + inc > self.slab):
+                    self._grow_slab()
             b_codes = np.zeros((cfg.mutate_batch, cfg.pq_m), np.uint8)
             b_codes[:n_c] = codes[sel]
+            b_codes2 = None
+            if codes2 is not None:
+                b_codes2 = np.zeros((cfg.mutate_batch, cfg.pq_m), np.uint8)
+                b_codes2[:n_c] = codes2[sel]
+                b_codes2 = jnp.asarray(b_codes2)
             with mesh_context(self.mesh):
                 self.state, (r_part, r_pos) = self._mutate(
                     jnp.asarray(ids_u), jnp.asarray(b_idx),
                     jnp.asarray(b_val), jnp.asarray(b_sk),
-                    jnp.asarray(b_codes), self.state)
-            pending.append((n_c, chunk_ids, r_part, r_pos))
+                    jnp.asarray(b_codes), self.state,
+                    new_codes2=b_codes2)
+            self._cursor += inc
+            pending.append((n_c, chunk_ids, r_part, r_pos, inc))
         return pending
+
+    def _materialize(self, pending) -> None:
+        """Fold device-reported landing sites into the host id -> rows map,
+        consuming ``pending`` in place. A ring overwrite (only possible
+        with ``auto_compact`` off) ages the overwritten id out: its
+        surviving copies are tombstoned so no stale slot can serve."""
+        if not pending:
+            return
+        stale: list[int] = []
+        while pending:
+            n_c, chunk_ids, r_part, r_pos, host_inc = pending.pop(0)
+            r_part = np.asarray(r_part)[:n_c]
+            r_pos = np.asarray(r_pos)[:n_c]
+            # the landing sites are the device truth: resync the cursor
+            # mirror in case the host routing mirror disagreed by a float
+            # ulp (placement stays exact either way; the mirror is only
+            # the wrap-risk heuristic, but keep it in lockstep)
+            dev_inc = np.bincount(r_part.reshape(-1),
+                                  minlength=self.cfg.n_partitions)
+            self._cursor += dev_inc - host_inc
+            rows = r_part * self.slab + r_pos          # [n_c, n_copies]
+            for pid, rowvec in zip(chunk_ids, rows.tolist()):
+                for row in rowvec:
+                    old = int(self.id_of_row[row])
+                    if old >= 0 and old != pid:
+                        self.aged_out += 1             # ring buffer wrapped
+                        for other in self.row_of.pop(old, ()):
+                            if other != row:
+                                self.id_of_row[other] = -1
+                                stale.append(other)
+                for row in rowvec:
+                    self.id_of_row[row] = pid
+                self.row_of[pid] = tuple(rowvec)
+        # only slots that were not re-assigned by a later chunk need the
+        # device-side tombstone
+        stale = [r for r in set(stale) if self.id_of_row[r] < 0]
+        if stale:
+            self._tombstone_rows(stale)
 
     def finish_upsert(self, pending) -> None:
         """Barrier: materialize landing sites, mirror them into the host
-        id -> row map (needed by deletes and result translation)."""
-        if not pending:
+        id -> rows map (needed by deletes and result translation)."""
+        if pending is None:
             return
-        for n_c, chunk_ids, r_part, r_pos in pending:
-            r_part = np.asarray(r_part)[:n_c]
-            r_pos = np.asarray(r_pos)[:n_c]
-            rows = r_part * self.slab + r_pos
-            for pid, row in zip(chunk_ids, rows.tolist()):
-                old = int(self.id_of_row[row])
-                if old >= 0 and self.row_of.get(old) == row:
-                    self.row_of.pop(old)      # ring buffer overwrote it
-                self.id_of_row[row] = pid
-                self.row_of[pid] = row
+        self._materialize(pending)
         jax.block_until_ready(self.state)
 
-    def delete(self, ids) -> int:
-        assert self.trained, "build() the index before mutating it"
-        rows = []
-        for pid in list(ids):
-            row = self.row_of.pop(int(pid), None)
-            if row is not None:
-                rows.append(row)
-                self.id_of_row[row] = -1
-        if not rows:
-            return 0
+    def _tombstone_rows(self, rows: list) -> None:
+        """Clear validity at global rows (chunked tombstone dispatches)."""
         bm = self.cfg.mutate_batch
         for lo in range(0, len(rows), bm):
             chunk = rows[lo:lo + bm]
@@ -313,7 +461,214 @@ class ShardedGusIndex:
             with mesh_context(self.mesh):
                 self.state = self._tombstone(
                     jnp.asarray(parts), jnp.asarray(poss), self.state)
-        return len(rows)
+
+    def delete(self, ids) -> int:
+        assert self.trained, "build() the index before mutating it"
+        rows = []
+        n_del = 0
+        for pid in list(ids):
+            rowvec = self.row_of.pop(int(pid), None)
+            if rowvec is None:
+                continue
+            n_del += 1
+            for row in rowvec:
+                rows.append(row)
+                self.id_of_row[row] = -1
+        if rows:
+            self._tombstone_rows(rows)
+        return n_del
+
+    # ------------------------------------------------------ slab lifecycle
+
+    def _live_per_partition(self) -> np.ndarray:
+        """Live copies per partition, from the host id -> rows map."""
+        c = self.cfg.n_partitions
+        if not self.row_of:
+            return np.zeros((c,), np.int64)
+        rows = np.fromiter((r for t in self.row_of.values() for r in t),
+                           np.int64)
+        return np.bincount(rows // self.slab, minlength=c)
+
+    def compact(self) -> dict:
+        """Squeeze tombstoned / superseded slots out of every slab.
+
+        Live rows keep their relative order (the compact program is
+        stable), so unchanged queries return bit-identical results; the
+        ring cursors restart at the live counts and the host id -> rows
+        map is remapped from the device-reported slot map. Callers driving
+        the async write path must flush it first — compaction moves slots,
+        and in-flight landing sites name the old layout (``begin_upsert``'s
+        auto-trigger materializes its own pending sites before compacting).
+        """
+        assert self.trained, "build() the index before compacting it"
+        t0 = time.perf_counter()
+        with mesh_context(self.mesh):
+            self.state, new_pos = self._compact_step(self.state)
+        new_pos = np.asarray(new_pos)
+        occupied = int(np.minimum(self._cursor, self.slab).sum())
+        s = self.slab
+        new_id_of_row = np.full_like(self.id_of_row, -1)
+        if self.row_of:
+            # vectorized remap: n_copies is uniform across the index, so
+            # the id -> rows map flattens to one [points, copies] gather
+            pids = np.fromiter(self.row_of.keys(), np.int64,
+                               len(self.row_of))
+            old_rows = np.asarray(list(self.row_of.values()), np.int64)
+            parts, poss = np.divmod(old_rows, s)
+            new_rows = parts * s + new_pos[parts, poss]
+            self.row_of = {int(p): tuple(r) for p, r in
+                           zip(pids.tolist(), new_rows.tolist())}
+            new_id_of_row[new_rows.reshape(-1)] = np.repeat(
+                pids, new_rows.shape[1])
+            live = np.bincount(new_rows.reshape(-1) // s,
+                               minlength=self.cfg.n_partitions)
+        else:
+            live = np.zeros((self.cfg.n_partitions,), np.int64)
+        self.id_of_row = new_id_of_row
+        self._cursor = live.astype(np.int64)
+        n_live = int(live.sum())
+        reclaimed = max(occupied - n_live, 0)
+        self.compactions += 1
+        self.compacted_rows += n_live
+        self.reclaimed += reclaimed
+        self.compact_s += time.perf_counter() - t0
+        return {"live_rows": n_live, "reclaimed": reclaimed}
+
+    def _grow_slab(self) -> None:
+        """Double every partition's slab (device realloc + host row remap).
+
+        Only reached from ``begin_upsert`` right after a compaction, when
+        live occupancy alone would overflow a slab: positions within a
+        partition are preserved, so cursors (== live counts) stay valid."""
+        assert int(self._cursor.max()) <= self.slab
+        cfg = self.cfg
+        c, old_s = cfg.n_partitions, self.slab
+        st = dict(self.state)
+        pads = {
+            "members_idx": np.full((c, old_s, self.k_dims), PAD_INDEX,
+                                   np.uint32),
+            "members_val": np.zeros((c, old_s, self.k_dims), np.float32),
+            "codes": np.zeros((c, old_s, cfg.pq_m), np.uint8),
+            "row_ids": np.full((c, old_s), _PAD_ID, np.uint32),
+            "valid": np.zeros((c, old_s), bool),
+        }
+        self.slab = old_s * 2
+        cell = self._cell()
+        specs = index_specs(cell, self.mesh)
+        with mesh_context(self.mesh):
+            for key, pad in pads.items():
+                st[key] = jax.device_put(
+                    np.concatenate([np.asarray(st[key]), pad], axis=1),
+                    NamedSharding(self.mesh, specs[key]))
+        self.state = st
+        new_id_of_row = np.full((c * self.slab,), -1, np.int64)
+        for pid, rowvec in self.row_of.items():
+            moved = tuple((r // old_s) * self.slab + (r % old_s)
+                          for r in rowvec)
+            self.row_of[pid] = moved
+            for row in moved:
+                new_id_of_row[row] = pid
+        self.id_of_row = new_id_of_row
+        self._query_steps = {}
+        self._mutate = jax.jit(make_mutate_step(self.mesh, cell, self.salt))
+        self._tombstone = jax.jit(make_delete_step(self.mesh, cell))
+        self._compact_step = jax.jit(make_compact_step(self.mesh, cell))
+        self.slab_grows += 1
+
+    def resplit(self, imbalance: float | None = None) -> int:
+        """Skew re-split: re-hash the hottest shard's rows across the mesh.
+
+        When per-shard live occupancy skew (``max / mean``) exceeds
+        ``imbalance`` (default ``cfg.resplit_imbalance`` or 2.0), the
+        hottest shard's rows are read back from the slabs, the owner-hash
+        salt is bumped (re-jitting the mutate program — the salt is a
+        compile-time constant), and the rows re-insert through the
+        ordinary route/mutate machinery, spreading across every shard.
+        Queries never consult the owner hash, so rows placed under old
+        salts remain exactly servable. Returns the number of points moved.
+        Like ``compact()``, callers on the async write path must flush it
+        first (the engine does)."""
+        assert self.trained, "build() the index before re-splitting it"
+        cfg = self.cfg
+        if self._in_maintenance:           # the re-insert upserts recurse
+            return 0
+        if cfg.n_shards < 2 or not self.row_of:
+            return 0
+        fac = imbalance if imbalance is not None \
+            else (cfg.resplit_imbalance or 2.0)
+        c_loc = cfg.n_partitions // cfg.n_shards
+        shard_live = self._live_per_partition() \
+            .reshape(cfg.n_shards, c_loc).sum(axis=1)
+        mean = float(shard_live.mean())
+        if mean <= 0 or shard_live.max() <= fac * mean:
+            return 0
+        hot = int(shard_live.argmax())
+        move = [pid for pid, rowvec in self.row_of.items()
+                if rowvec[0] // self.slab // c_loc == hot]
+        if not move:
+            return 0
+        self._in_maintenance = True
+        try:
+            return self._resplit_move(move)
+        finally:
+            self._in_maintenance = False
+
+    def _resplit_move(self, move: list) -> int:
+        # the slabs hold the padded sparse rows — read the hot shard's
+        # points back without any feature-store round trip
+        rows0 = np.asarray([self.row_of[pid][0] for pid in move], np.int64)
+        m_idx = np.asarray(self.state["members_idx"]) \
+            .reshape(-1, self.k_dims)[rows0]
+        m_val = np.asarray(self.state["members_val"]) \
+            .reshape(-1, self.k_dims)[rows0]
+        emb = SparseBatch(jnp.asarray(m_idx), jnp.asarray(m_val))
+        self.salt += 1
+        self._mutate = jax.jit(
+            make_mutate_step(self.mesh, self._cell(), self.salt))
+        self.delete(move)
+        self.upsert(np.asarray(move, np.int64), emb)
+        self.resplits += 1
+        return len(move)
+
+    def maintenance_pressure(self, n_rows: int) -> bool:
+        """True when appending ``n_rows`` more points could wrap a slab,
+        i.e. a compaction / slab grow may trigger inside the next
+        ``begin_upsert``. ``serve.pipeline`` closes its fuse window while
+        this holds, so the pipelined schedule degenerates to the
+        synchronous per-batch schedule exactly when slot movement is
+        possible (the compaction-boundary rule)."""
+        if not self.trained or not self.cfg.auto_compact:
+            return False
+        return bool(int(self._cursor.max())
+                    + n_rows * self.cfg.n_copies > self.slab)
+
+    def occupancy(self) -> dict:
+        """Slab / shard occupancy and lifecycle counters (engine stats)."""
+        cfg = self.cfg
+        live = self._live_per_partition()
+        c_loc = cfg.n_partitions // cfg.n_shards
+        shard_live = live.reshape(cfg.n_shards, c_loc).sum(axis=1)
+        mean = float(shard_live.mean())
+        return {
+            "points": len(self.row_of),
+            "live_rows": int(live.sum()),
+            "slots": int(cfg.n_partitions * self.slab),
+            "slab": int(self.slab),
+            "cursor_max": int(self._cursor.max()),
+            "partition_max": int(live.max()),
+            "shard_live": shard_live.tolist(),
+            "shard_imbalance": float(shard_live.max() / mean)
+            if mean > 0 else 1.0,
+            "soar": cfg.use_soar,
+            "salt": self.salt,
+            "compactions": self.compactions,
+            "reclaimed_slots": self.reclaimed,
+            "slab_grows": self.slab_grows,
+            "resplits": self.resplits,
+            "aged_out": self.aged_out,
+        }
+
+    stats = occupancy
 
     # ------------------------------------------------------------- queries
 
@@ -350,4 +705,3 @@ class ShardedGusIndex:
             out_ids[sel, :k_eff] = ids_c
             out_d[sel, :k_eff] = np.where(hit, dists, np.inf)
         return out_ids, out_d
-

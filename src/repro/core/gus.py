@@ -11,7 +11,9 @@ The backend is selected by ``GusConfig.backend``:
   "scann"   — quantized single-replica ``ScannIndex``;
   "sharded" — ``ShardedGusIndex``, the shard_map scatter/merge programs of
               ``ann.sharded`` on a multi-device mesh (the paper's index
-              tower sharded across chips).
+              tower sharded across chips), with a maintained slab
+              lifecycle: SOAR secondary copies, auto-compaction instead of
+              ring-buffer age-out, and skew re-splits (ann/sharded_index).
 
 Every backend speaks the same ``build / upsert / delete / search``
 protocol, so the RPC surfaces below are backend-agnostic; ``serve.engine``

@@ -27,6 +27,21 @@ Connected components ride on top (see ``cc.py``): the store tracks the
 dirty frontier (slots whose edges changed) and the labels of components
 that *lost* an edge (which must be reset before relabelling), so
 ``components()`` does work proportional to the churn, not the corpus.
+
+Async write path (the graph's window-closing rule — serve/pipeline.py
+holds the full list): a configured graph **pins the fuse window to 1**.
+The tick for mutation batch *i* re-queries the index for the upserted
+points' neighborhoods, so it must observe the index exactly as of batch
+*i* — a fused window would expose batch *i+1*'s rows to batch *i*'s
+probes and change the scored candidates. Repair rides the same cadence:
+``take_repair_ids`` drains the coalesced queue in deterministic slot
+order so the synchronous and pipelined paths pop identical batches, and
+the per-tick cap (``repair_per_batch`` / ``PipelineConfig.
+repair_per_tick``) must match across the paths being compared for the
+adjacency to stay bit-identical. Index-side slot movement (the sharded
+backend's compaction) never involves the graph — the graph keys rows by
+its own slots, not index rows — but it shares the same boundary
+discipline: lifecycle steps only run between windows, never inside one.
 """
 from __future__ import annotations
 

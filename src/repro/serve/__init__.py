@@ -1,3 +1,13 @@
+"""Serving layer: the operational wrap around ``core.gus.DynamicGUS``.
+
+  engine.py   — ``GusEngine``: request batching, straggler hedging
+                against replica fleets, mutation log + snapshot/recover;
+  pipeline.py — ``MutationPipeline``: the async double-buffered write
+                path (fuse windows over the two-phase backend entry
+                points, bit-identical to the synchronous path — the
+                module doc lists the window-closing rules);
+  serve_step.py — jitted prefill/decode steps for the LM scorer path.
+"""
 from repro.serve.serve_step import make_decode_step, make_prefill_step
 from repro.serve.engine import GusEngine, EngineConfig
 from repro.serve.pipeline import MutationPipeline, PipelineConfig

@@ -16,6 +16,10 @@ needs (paper §3.1 runs at "hundreds of thousands of RPCs per second"):
 * **mutation log + snapshot restart** — every applied mutation batch is
   appended to a host-side log; ``recover()`` replays the suffix after a
   crash/restart, giving checkpoint/restart semantics for the serving tier.
+  Snapshots carry the sharded backend's owner-hash salt (placement policy
+  bumped by skew re-splits) so a recovered engine routes inserts the same
+  way; ``stats()`` surfaces the backend's slab occupancy and lifecycle
+  counters (compactions, reclaimed slots, re-splits, age-outs).
 """
 from __future__ import annotations
 
@@ -133,6 +137,9 @@ class GusEngine:
             "features": self.gus.store.gather(ids),
             "graph": (self.gus.graph.snapshot_state()
                       if self.gus.graph is not None else None),
+            # sharded backend: the owner-hash salt is placement policy
+            # (bumped by re-splits); recovery must re-route the same way
+            "index_salt": getattr(self.gus.index, "salt", None),
         }
         self.mutation_log.clear()
         self.log_since_snapshot = 0
@@ -149,7 +156,10 @@ class GusEngine:
         targets = [fresh_gus, *eng.replicas]
         if self.snapshot_state is not None and len(self.snapshot_state["ids"]):
             graph_state = self.snapshot_state.get("graph")
+            salt = self.snapshot_state.get("index_salt")
             for gus in targets:
+                if salt is not None and hasattr(gus.index, "salt"):
+                    gus.index.salt = salt      # before build(): routing
                 restorable = graph_state is not None and gus.graph is not None
                 gus.bootstrap(self.snapshot_state["ids"],
                               self.snapshot_state["features"],
@@ -179,6 +189,10 @@ class GusEngine:
         }
         if self.pipelines:
             out["pipeline"] = self.pipelines[0].stats()
+        index_stats = getattr(self.gus.index, "stats", None)
+        if callable(index_stats):
+            # slab occupancy + lifecycle counters (sharded backend)
+            out["index"] = index_stats()
         if self.gus.graph is not None:
             out["graph"] = {
                 **self.gus.graph.stats(),

@@ -25,15 +25,39 @@ that window. Fusing amortizes the per-dispatch overhead that dominates
 small-batch mutation streams — the RPC batch size is unchanged; only the
 device-side program sees the fused rows.
 
-**Exactness.** A fused window is restricted to upsert-only batches with
-pairwise-disjoint ids (every operation in the write path — hashing,
-IDF lookup, CountSketch, partition argmin, PQ encode, slab scatter — is
-row-independent, and free-list pops happen in the same order), so fused
-execution is *bit-identical* to applying the batches one at a time.
-Batches containing deletes close the window and apply alone, preserving
-order. When a maintained graph is configured the window is pinned to 1:
-the graph tick for batch *i* must observe the index exactly as of batch
-*i*, the same state the synchronous path sees.
+**Exactness — the window-closing rules.** A fused window is restricted
+to upsert-only batches with pairwise-disjoint ids (every operation in
+the write path — hashing, IDF lookup, CountSketch, partition argmin, PQ
+encode, slab scatter — is row-independent, and free-list pops happen in
+the same order), so fused execution is *bit-identical* to applying the
+batches one at a time. Each rule below closes the window because it
+names a regime where that stops holding:
+
+* **deletes** close the window and apply alone, preserving order;
+* **duplicate ids** (an id staged or in flight twice) close it — fused
+  last-write-wins would drop the earlier write's slot churn;
+* **updates of live ids on scann** close it
+  (``ScannIndex.FUSED_UPDATES_EXACT = False``): its update path
+  re-routes free-list slots, which shifts slab layout and breaks
+  PQ-score *ties* at the shortlist cut;
+* **a maintained graph pins the window to 1**: the graph tick for batch
+  *i* must observe the index exactly as of batch *i*, the same state the
+  synchronous path sees;
+* **compaction boundary (sharded)**: the sharded backend's slab
+  lifecycle may compact or grow a slab inside ``begin_upsert`` when an
+  append could wrap a ring buffer — compaction moves slots, so it must
+  never land mid-fused-window. While the backend reports
+  ``maintenance_pressure`` (a wrap is possible given the staged +
+  in-flight rows), the window is pinned to 1, which makes the pipelined
+  schedule — and therefore every compaction trigger — exactly the
+  synchronous per-batch schedule. With no pressure, no slab can wrap, so
+  no compaction can fire in either schedule and fusion is safe;
+* **armed auto-resplit (sharded)** likewise pins the window to 1: the
+  skew trigger must evaluate once per batch with every prior batch
+  applied, and the salt it may bump is baked into staged routing — so
+  the pipeline hands off the previous window and runs
+  ``auto_resplit()`` before each window's encode, reproducing the
+  synchronous order ``trigger -> encode -> append`` exactly.
 
 Graph repair rides the hand-off cadence: rows left under-full by purges
 or evictions accumulate in ``DynamicGraphStore``'s coalesced, deduped
@@ -104,6 +128,18 @@ class MutationPipeline:
         # window boundary before them
         self._fused_updates_exact = getattr(
             gus.index, "FUSED_UPDATES_EXACT", True)
+        # backends with a slab lifecycle (sharded) report wrap pressure;
+        # the window closes while it holds (the compaction boundary)
+        self._pressure = getattr(gus.index, "maintenance_pressure", None)
+        # an armed auto-resplit policy pins the window to 1 and runs on
+        # the synchronous schedule: previous hand-off first (the trigger
+        # must see every prior batch applied), then the trigger, then
+        # this batch's encode (the salt it may bump is baked into staged
+        # routing, so it can never fire between an encode and its append)
+        self._maintain = gus.index \
+            if getattr(gus.index, "auto_resplit_on", False) else None
+        self._queued_rows = 0         # upsert rows staged in the window
+        self._inflight_rows = 0       # upsert rows in the in-flight window
         self.submitted = 0            # points acknowledged
         self.windows = 0              # fused windows encoded
         self.ticks = 0                # completed hand-offs
@@ -117,8 +153,12 @@ class MutationPipeline:
 
     def window_size(self) -> int:
         """Effective fuse window: a maintained graph pins it to 1 so the
-        per-batch graph tick sees exactly the synchronous index states."""
-        return 1 if self.gus.graph is not None else max(1, self.cfg.window)
+        per-batch graph tick sees exactly the synchronous index states;
+        an armed auto-resplit policy pins it too (the trigger must
+        evaluate per batch, as the synchronous path does)."""
+        if self.gus.graph is not None or self._maintain is not None:
+            return 1
+        return max(1, self.cfg.window)
 
     def submit(self, batch: MutationBatch) -> int:
         """Stage the batch. Returns the number of points acknowledged
@@ -131,17 +171,24 @@ class MutationPipeline:
         updates_live = (not self._fused_updates_exact) and any(
             pid in self.gus.store or pid in self._inflight_ids
             for pid in up_ids)
+        # compaction boundary: while an append could wrap a slab (counting
+        # staged + in-flight + incoming rows), windows pin to 1 so the
+        # backend's auto-compaction fires on exactly the per-batch
+        # schedule the synchronous path runs
+        pressure = self._pressure is not None and self._pressure(
+            self._queued_rows + self._inflight_rows + len(up_ids))
         # window boundaries keep fused windows upsert-only with disjoint
         # ids (and, for layout-sensitive backends, free of updates) — the
         # regime where fused == sequential, bitwise
-        if self._queue and (has_del or updates_live
+        if self._queue and (has_del or updates_live or pressure
                             or len(self._queue) >= self.window_size()
                             or (up_ids & self._queue_ids)):
             self._close_window()
         self._queue.append(batch)
         self._queue_ids |= up_ids
+        self._queued_rows += len(up_ids)
         self.submitted += int(ids.size)
-        if has_del:                   # deletes apply alone, in order
+        if has_del or pressure:       # deletes / wrap risk apply alone
             self._close_window()
         return int(ids.size)
 
@@ -159,10 +206,17 @@ class MutationPipeline:
         in-flight."""
         if not self._queue:
             return
+        if self._maintain is not None:
+            # synchronous-schedule re-split: apply the previous window,
+            # then let the policy fire before this window's encode
+            self._handoff()
+            self._maintain.auto_resplit()
         fused = fuse_batches(self._queue)
         queue_ids = self._queue_ids
+        queue_rows = self._queued_rows
         self._queue = []
         self._queue_ids = set()
+        self._queued_rows = 0
         t0 = time.perf_counter()
         staged = self.gus.encode_mutation(fused)
         t_encode = time.perf_counter() - t0
@@ -174,6 +228,7 @@ class MutationPipeline:
         self._handoff()
         self._inflight = staged
         self._inflight_ids = queue_ids
+        self._inflight_rows = queue_rows
 
     def _handoff(self) -> None:
         staged = self._inflight
@@ -181,6 +236,7 @@ class MutationPipeline:
             return
         self._inflight = None
         self._inflight_ids = set()
+        self._inflight_rows = 0
         with self.handoff_timer:
             # stage B: the encode results dispatched at window close have
             # had the whole in-flight window to compute — materializing

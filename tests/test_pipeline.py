@@ -154,6 +154,68 @@ def test_pipeline_matches_sync_fused_windows(world, backend):
     _assert_index_equal(sync_g, pipe_g)
 
 
+def test_pipeline_compaction_boundary(world):
+    """The compaction boundary: on the sharded backend with deliberately
+    tight slabs, a churn stream forces auto-compaction (and slab growth)
+    inside ``begin_upsert``. The pipeline must close its fuse window under
+    ``maintenance_pressure`` so every compaction fires on the synchronous
+    per-batch schedule — raw index state stays bit-identical."""
+    ids, feats, scorer = world
+    tight = ShardedConfig(
+        n_shards=1, d_proj=32, n_partitions=4, slab=64, slab_headroom=1.5,
+        nprobe_local=0, reorder=2048, pq_m=4, kmeans_iters=4, pq_iters=2)
+
+    def make():
+        gus = DynamicGUS(DATA.spec, BUCKETS, scorer, GusConfig(
+            scann_nn=5, backend="sharded", sharded=tight))
+        gus.bootstrap(ids[:150], {k: v[:150] for k, v in feats.items()})
+        return gus
+
+    sync_g, pipe_g = make(), make()
+    pipe = MutationPipeline(pipe_g)
+    for _, (a, b) in zip(range(14), zip(
+            _stream(21, insert_frac=0.6, update_frac=0.1),
+            _stream(21, insert_frac=0.6, update_frac=0.1))):
+        sync_g.mutate(a)
+        pipe.submit(b)
+    pipe.flush()
+    # the lifecycle actually ran, identically on both paths
+    assert sync_g.index.compactions >= 1
+    assert pipe_g.index.compactions == sync_g.index.compactions
+    assert pipe_g.index.slab_grows == sync_g.index.slab_grows
+    assert pipe_g.index.aged_out == sync_g.index.aged_out == 0
+    _assert_index_equal(sync_g, pipe_g)
+
+
+def test_pipeline_armed_resplit_pins_window(world):
+    """An armed auto-resplit policy pins the fuse window to 1 and runs
+    the trigger on the synchronous schedule (previous hand-off, then
+    trigger, then encode) — state stays bit-identical to sync even
+    though on a 1-shard mesh the trigger itself no-ops."""
+    ids, feats, scorer = world
+    armed = ShardedConfig(
+        n_shards=1, d_proj=32, n_partitions=8, nprobe_local=0, reorder=512,
+        pq_m=4, kmeans_iters=4, pq_iters=2, resplit_imbalance=1.5)
+
+    def make():
+        gus = DynamicGUS(DATA.spec, BUCKETS, scorer, GusConfig(
+            scann_nn=5, backend="sharded", sharded=armed))
+        gus.bootstrap(ids[:150], {k: v[:150] for k, v in feats.items()})
+        return gus
+
+    sync_g, pipe_g = make(), make()
+    pipe = MutationPipeline(pipe_g)
+    assert pipe.window_size() == 1
+    for _, (a, b) in zip(range(6), zip(
+            _stream(31, insert_frac=0.7, update_frac=0.2),
+            _stream(31, insert_frac=0.7, update_frac=0.2))):
+        sync_g.mutate(a)
+        pipe.submit(b)
+    pipe.flush()
+    assert pipe_g.index.salt == sync_g.index.salt
+    _assert_index_equal(sync_g, pipe_g)
+
+
 def test_window_boundaries(world):
     """Deletes and duplicate upserted ids close the fuse window."""
     ids, feats, scorer = world

@@ -52,6 +52,7 @@ def test_sharded_query_matches_local_oracle():
           "members_idx": jnp.asarray(rng.integers(0, 30, (c, s, cell.k_dims)), jnp.uint32),
           "members_val": jnp.asarray(rng.random((c, s, cell.k_dims)), jnp.float32),
           "codes": jnp.asarray(rng.integers(0, 256, (c, s, cell.pq_m)), jnp.uint8),
+          "row_ids": jnp.asarray(rng.integers(0, 1 << 30, (c, s)), jnp.uint32),
           "valid": jnp.ones((c, s), bool),
           "counts": jnp.zeros((c,), jnp.int32),
         }
@@ -116,6 +117,7 @@ def test_sharded_mutate_routes_and_tombstones():
                                   jnp.uint32),
           "members_val": jnp.zeros((c, s, cell.k_dims), jnp.float32),
           "codes": jnp.zeros((c, s, cell.pq_m), jnp.uint8),
+          "row_ids": jnp.full((c, s), int(PAD_ID), jnp.uint32),
           "valid": jnp.zeros((c, s), bool),
           "counts": jnp.zeros((c,), jnp.int32),
         }
@@ -135,7 +137,9 @@ def test_sharded_mutate_routes_and_tombstones():
             mutate = jax.jit(make_mutate_step(mesh, cell))
             state, (r_part, r_pos) = mutate(
                 jnp.asarray(ids), new_idx, new_val, new_sk, new_codes, state)
-            r_part, r_pos = np.asarray(r_part), np.asarray(r_pos)
+            # single-copy cell: one (part, pos) per row
+            r_part = np.asarray(r_part)[:, 0]
+            r_pos = np.asarray(r_pos)[:, 0]
             m_idx = np.asarray(state["members_idx"])
             valid = np.asarray(state["valid"])
             ok_rows = bool((r_part[:n_real] >= 0).all())

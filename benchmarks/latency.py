@@ -1,12 +1,15 @@
 """Paper Fig. 9: query-latency distribution of Dynamic GUS in a dynamic
 setting, swept over ScaNN-NN / IDF-S / Filter-P (sequential queries,
-wall-clock request-to-response, percentiles) — plus the scale-out sweep:
-per-request latency of the sharded backend over ``shards in {1, 2, 4}``.
+wall-clock request-to-response, percentiles) — plus the scale-out sweep
+(per-request latency of the sharded backend over ``shards in {1, 2, 4}``)
+and the serving-plane load test (``--loadgen``: open-loop target-QPS
+traffic through the admission front-end with the mutation pipeline
+active, reporting p99-under-load and shed rate).
 
 Run standalone for the multi-shard sweep (forces 4 host devices before jax
 initializes):
 
-    PYTHONPATH=src python -m benchmarks.latency [--smoke]
+    PYTHONPATH=src python -m benchmarks.latency [--smoke] [--loadgen]
 """
 from __future__ import annotations
 
@@ -18,7 +21,8 @@ if __name__ == "__main__":
 
 import numpy as np
 
-from benchmarks.common import BUCKET_CFG, corpus, emit, record_metric
+from benchmarks.common import (BUCKET_CFG, DATASETS, corpus, emit,
+                               record_metric)
 from repro.ann.scann import ScannConfig
 from repro.core import DynamicGUS, GusConfig
 
@@ -100,6 +104,70 @@ def run_sharded(dataset: str = "arxiv", n: int = 2000, queries: int = 100,
     return rows
 
 
+def run_loadgen_bench(dataset: str = "arxiv", n: int = 2000,
+                      requests: int = 400, target_qps: float = 200.0,
+                      mode: str = "open", mutate_every: int = 8,
+                      replicas: int = 1, smoke: bool = False) -> dict:
+    """Serving plane under sustained load: an open-loop (default) traffic
+    mix through ``Frontend`` -> ``GusEngine`` with the async mutation
+    pipeline active and a replica group for hedging. Reports
+    p99-under-load from the *scheduled* arrival (queueing counts) and
+    the admission shed rate.
+
+    The smoke configuration sizes the queues above the total request
+    count, which makes shedding structurally impossible — so the gated
+    ``admission_shed_rate`` baseline is exactly 0.0 on every machine,
+    while ``serving_p99_loaded_ms`` stays machine-scoped."""
+    import dataclasses as _dc
+
+    from benchmarks.loadgen import LoadgenConfig, run_loadgen
+    from repro.data.stream import MutationStream, StreamConfig
+    from repro.serve import EngineConfig, Frontend, FrontendConfig, GusEngine
+
+    ids, feats, cluster, spec, scorer, _ = corpus(dataset)
+    data_cfg = _dc.replace(DATASETS[dataset], n_points=n)
+    stream = MutationStream(data_cfg, StreamConfig(batch_size=16, seed=7),
+                            bootstrap_fraction=0.6)
+    boot_ids, boot_feats = stream.bootstrap()
+
+    def mk():
+        gus = DynamicGUS(spec, BUCKET_CFG, scorer, GusConfig(
+            scann_nn=10, scann=ScannConfig(d_proj=64, n_partitions=32,
+                                           nprobe=8, reorder=128)))
+        gus.bootstrap(boot_ids, boot_feats)
+        return gus
+
+    engine = GusEngine(mk(), EngineConfig(pipeline=True, max_batch=64),
+                       replicas=[mk() for _ in range(replicas)])
+    frontend = Frontend(engine, FrontendConfig(
+        query_queue=max(256, requests + 1),
+        mutate_queue=max(64, requests + 1),
+        query_dispatch=16, mutate_dispatch=8))
+    # warm the jit caches so the first scheduled arrivals don't pay
+    # compile time (the paper's steady-state claim)
+    engine.query(stream.query_features(1), 10)
+    engine.serving.samples_ms.clear()
+    engine.gus.query_timer.samples_ms.clear()
+
+    report = run_loadgen(frontend, stream, LoadgenConfig(
+        mode=mode, requests=requests, target_qps=target_qps,
+        mutate_every=mutate_every, k=10, seed=7))
+    row = report.row()
+    emit(f"loadgen_{dataset}_{mode}_qps{int(target_qps)}",
+         report.query_p99_ms * 1e3,
+         f"p50_ms={report.query_p50_ms:.1f};"
+         f"achieved_qps={report.achieved_qps:.0f};"
+         f"shed_rate={report.shed_rate:.3f};lost={report.lost}")
+    if smoke:
+        record_metric("serving_p99_loaded_ms", report.query_p99_ms,
+                      better="lower", portable=False)
+        record_metric("admission_shed_rate", report.shed_rate,
+                      better="lower", portable=True)
+    assert report.lost == 0, \
+        f"serving plane lost {report.lost} accepted requests"
+    return row
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -109,14 +177,28 @@ if __name__ == "__main__":
     ap.add_argument("--merge", default="flat", choices=("flat", "hier"),
                     help="cross-shard candidate-merge schedule for the "
                          "sharded sweep (ROADMAP: hier on the CPU mesh)")
+    ap.add_argument("--loadgen", action="store_true",
+                    help="serving-plane load test only (open-loop "
+                         "target-QPS traffic, p99-under-load + shed rate)")
+    ap.add_argument("--qps", type=float, default=200.0,
+                    help="open-loop target arrival rate for --loadgen")
+    ap.add_argument("--mode", default="open", choices=("open", "closed"),
+                    help="loadgen shape: open (target QPS) or closed "
+                         "(fixed concurrency)")
     args = ap.parse_args()
-    if args.smoke:
+    if args.loadgen:
+        print(run_loadgen_bench("arxiv", target_qps=args.qps,
+                                mode=args.mode, smoke=args.smoke))
+    elif args.smoke:
         run("arxiv", n=800, queries=30)
         run_sharded("arxiv", n=800, queries=20, shards=(1, 2),
                     merge=args.merge)
+        run_loadgen_bench("arxiv", n=800, requests=120, target_qps=150.0,
+                          smoke=True)
     else:
         for ds in ("arxiv", "products"):
             for r in run(ds):
                 print(r)
             for r in run_sharded(ds, merge=args.merge):
                 print(r)
+        print(run_loadgen_bench("arxiv"))

@@ -1,0 +1,162 @@
+"""Closed-loop traffic harness for the serving plane (p99 *under load*).
+
+The paper's latency story is measured under sustained mixed traffic, not
+sequential lone queries. This module drives a ``serve.frontend.Frontend``
+with a reproducible query+mutate mix from ``data.stream.MutationStream``
+in either canonical load-testing shape:
+
+* **open loop** (``mode="open"``) — requests arrive on a fixed virtual
+  schedule at ``target_qps`` regardless of completion: request *i* is
+  due at ``t0 + i / target_qps``. Latency is measured from the
+  *scheduled* arrival, so queueing delay counts — this is the shape that
+  exposes coordinated omission and drives real shedding when the plane
+  can't keep up.
+* **closed loop** (``mode="closed"``) — ``users`` concurrent callers,
+  each submitting its next request only when the previous one completes.
+  Offered load self-throttles to the plane's capacity; with queues at
+  least ``users`` deep, shedding is structurally impossible (the chaos
+  tier leans on this to pin "zero lost accepted requests" while faults
+  fire).
+
+Determinism: the traffic *content* and interleaving are fully seeded
+(``LoadgenConfig.seed`` + the stream's seed); only latencies depend on
+the machine. Time enters exclusively through ``frontend.clock`` and the
+injectable ``sleep`` — tests pass a virtual clock and assert structure
+(counts, ordering, zero-loss), never wall-clock values.
+
+Every issued request is accounted for: ``LoadgenReport.lost`` counts
+accepted requests that never received a terminal response, and the
+serving plane's contract is that it is always zero.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.serve.frontend import Frontend, Response
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadgenConfig:
+    mode: str = "open"           # "open" | "closed"
+    requests: int = 200          # total requests to issue
+    target_qps: float = 500.0    # open-loop virtual arrival rate
+    users: int = 8               # closed-loop concurrency
+    mutate_every: int = 10       # every Nth request is a mutation batch
+    mutate_rows: int = 16        # rows per mutation request
+    k: int = 10                  # neighbors per query
+    seed: int = 0
+    max_steps: int = 1_000_000   # runaway guard
+
+
+@dataclasses.dataclass
+class LoadgenReport:
+    issued: int
+    accepted: int
+    shed: int
+    completed: int
+    errors: int
+    lost: int                    # accepted but never terminal (must be 0)
+    duration_s: float
+    achieved_qps: float
+    shed_rate: float
+    query_p50_ms: float
+    query_p95_ms: float
+    query_p99_ms: float
+    frontend: dict               # Frontend.stats() at the end of the run
+
+    def row(self) -> dict:
+        return {k: v for k, v in dataclasses.asdict(self).items()
+                if k != "frontend"}
+
+
+def _percentile(samples: list, q: float) -> float:
+    return float(np.percentile(np.asarray(samples), q)) if samples else 0.0
+
+
+def run_loadgen(frontend: Frontend, stream, cfg: LoadgenConfig,
+                sleep=time.sleep) -> LoadgenReport:
+    """Drive ``frontend`` with ``cfg.requests`` of seeded mixed traffic
+    (queries, plus a mutation batch every ``mutate_every``-th request)
+    and account for every response. ``stream`` is a
+    ``data.stream.MutationStream`` positioned after bootstrap. Time is
+    read from ``frontend.clock``; ``sleep`` is only used by the open
+    loop to wait for the next scheduled arrival (inject a virtual-clock
+    advancer for deterministic tests)."""
+    if cfg.mode not in ("open", "closed"):
+        raise ValueError(f"mode={cfg.mode!r} must be 'open' or 'closed'")
+    clock = frontend.clock
+    mutations = iter(stream)
+    issued = 0
+    accepted_rids: set = set()
+    terminal: list[Response] = []
+
+    def submit(arrival_s: float | None) -> Response:
+        nonlocal issued
+        issued += 1
+        if cfg.mutate_every and issued % cfg.mutate_every == 0:
+            resp = frontend.submit_mutation(next(mutations),
+                                            arrival_s=arrival_s)
+        else:
+            feats = stream.query_features(1)
+            resp = frontend.submit_query(feats, k=cfg.k,
+                                         arrival_s=arrival_s)
+        if resp.status == "accepted":
+            accepted_rids.add(resp.rid)
+        return resp
+
+    t0 = clock()
+    steps = 0
+    if cfg.mode == "open":
+        while issued < cfg.requests or any(frontend._queues.values()):
+            now = clock()
+            while (issued < cfg.requests
+                   and t0 + issued / cfg.target_qps <= now):
+                due = t0 + issued / cfg.target_qps
+                r = submit(due)
+                if r.terminal:
+                    terminal.append(r)
+            if any(frontend._queues.values()):
+                terminal += frontend.step()
+            elif issued < cfg.requests:
+                sleep(max(0.0, t0 + issued / cfg.target_qps - clock()))
+            steps += 1
+            if steps > cfg.max_steps:
+                raise RuntimeError(f"open loop exceeded {cfg.max_steps} "
+                                   "steps")
+    else:
+        inflight = 0
+        while issued < cfg.requests or inflight:
+            while inflight < cfg.users and issued < cfg.requests:
+                r = submit(None)
+                if r.terminal:
+                    terminal.append(r)
+                else:
+                    inflight += 1
+            out = frontend.step()
+            inflight -= len(out)
+            terminal += out
+            steps += 1
+            if steps > cfg.max_steps:
+                raise RuntimeError(f"closed loop exceeded {cfg.max_steps} "
+                                   "steps")
+    duration = max(clock() - t0, 1e-9)
+
+    done_rids = {r.rid for r in terminal if r.status in ("ok", "error")}
+    lost = len(accepted_rids - done_rids)
+    q_lat = [r.latency_ms for r in terminal
+             if r.kind == "query" and r.status == "ok"]
+    n_shed = sum(1 for r in terminal if r.shed)
+    n_err = sum(1 for r in terminal if r.status == "error")
+    n_done = len(done_rids)
+    return LoadgenReport(
+        issued=issued, accepted=len(accepted_rids), shed=n_shed,
+        completed=n_done - n_err, errors=n_err, lost=lost,
+        duration_s=duration, achieved_qps=n_done / duration,
+        shed_rate=n_shed / max(issued, 1),
+        query_p50_ms=_percentile(q_lat, 50),
+        query_p95_ms=_percentile(q_lat, 95),
+        query_p99_ms=_percentile(q_lat, 99),
+        frontend=frontend.stats())

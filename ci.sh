@@ -38,10 +38,13 @@ fi
 lint
 
 if [[ "${1:-}" == "--full" ]]; then
+    # the whole tier: slow subprocess-mesh tests AND the chaos tier
+    # (fault-injection serving-plane tests, tests/test_chaos_plane.py)
     python -m pytest -x -q
 else
-    # quick lane (includes the graph-store/CC suites of tests/test_graph*.py)
-    python -m pytest -x -q -m "not slow"
+    # quick lane (includes the graph-store/CC suites of tests/test_graph*.py;
+    # the slow subprocess-mesh and chaos fault-injection tiers run in --full)
+    python -m pytest -x -q -m "not slow and not chaos"
 fi
 
 # CPU smokes: single- and multi-shard serving, maintained graph (edges/sec,

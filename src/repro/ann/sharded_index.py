@@ -109,9 +109,17 @@ class ShardedConfig:
     auto_compact: bool = True
     # build() sizes slabs to hold headroom * n_copies * corpus rows
     slab_headroom: float = 8.0
-    # > 0: upsert() auto-triggers resplit() when max/mean per-shard live
-    # occupancy exceeds this (0 = manual / engine-driven re-split only)
+    # > 0: upsert() auto-triggers resplit() when max/mean per-shard skew
+    # exceeds this (0 = manual / engine-driven re-split only)
     resplit_imbalance: float = 0.0
+    # skew metric the re-split trigger watches: "occupancy" (live rows
+    # per shard) or "load" (queries served per shard since the last
+    # load-driven re-split — catches hot shards that occupancy misses:
+    # balanced row counts, skewed read traffic)
+    resplit_by: str = "occupancy"
+    # replica group this index belongs to: its mesh is carved from the
+    # pod'th disjoint device slice (launch.mesh.make_gus_mesh)
+    pod: int = 0
 
     @property
     def use_soar(self) -> bool:
@@ -135,10 +143,15 @@ class ShardedGusIndex:
             raise ValueError(
                 f"d_proj={cfg.d_proj} must split into pq_m={cfg.pq_m} "
                 "subspaces")
+        if cfg.resplit_by not in ("occupancy", "load"):
+            raise ValueError(
+                f"resplit_by={cfg.resplit_by!r} must be 'occupancy' or "
+                "'load'")
         self.k_dims = k_dims
         self.cfg = cfg
         self.mesh = make_gus_mesh(cfg.n_shards,
-                                  two_level=cfg.merge == "hier")
+                                  two_level=cfg.merge == "hier",
+                                  pod=cfg.pod)
         self.trained = False
         self.slab = cfg.slab
         self.salt = 3                        # owner-hash salt (resplit bumps)
@@ -147,6 +160,9 @@ class ShardedGusIndex:
         self.row_of: dict[int, tuple[int, ...]] = {}
         self.id_of_row: np.ndarray | None = None
         self._cursor = np.zeros((cfg.n_partitions,), np.int64)  # appends/part
+        # queries served per partition since the last load-driven
+        # re-split (the "load" skew metric; search() accumulates hits)
+        self.query_load = np.zeros((cfg.n_partitions,), np.int64)
         self._query_steps: dict = {}         # (padded B, k) -> jitted step
         self._mutate = None
         self._tombstone = None
@@ -268,6 +284,7 @@ class ShardedGusIndex:
         self.row_of = {}
         self.id_of_row = np.full((c * s,), -1, np.int64)
         self._cursor = np.zeros((c,), np.int64)
+        self.query_load = np.zeros((c,), np.int64)
         self._query_steps = {}
         self._mutate = jax.jit(make_mutate_step(self.mesh, cell, self.salt))
         self._tombstone = jax.jit(make_delete_step(self.mesh, cell))
@@ -575,21 +592,33 @@ class ShardedGusIndex:
         self._compact_step = jax.jit(make_compact_step(self.mesh, cell))
         self.slab_grows += 1
 
-    def resplit(self, imbalance: float | None = None) -> int:
+    def resplit(self, imbalance: float | None = None,
+                by: str | None = None) -> int:
         """Skew re-split: re-hash the hottest shard's rows across the mesh.
 
-        When per-shard live occupancy skew (``max / mean``) exceeds
-        ``imbalance`` (default ``cfg.resplit_imbalance`` or 2.0), the
-        hottest shard's rows are read back from the slabs, the owner-hash
-        salt is bumped (re-jitting the mutate program — the salt is a
-        compile-time constant), and the rows re-insert through the
-        ordinary route/mutate machinery, spreading across every shard.
-        Queries never consult the owner hash, so rows placed under old
-        salts remain exactly servable. Returns the number of points moved.
-        Like ``compact()``, callers on the async write path must flush it
-        first (the engine does)."""
+        When per-shard skew (``max / mean``) exceeds ``imbalance``
+        (default ``cfg.resplit_imbalance`` or 2.0), the hottest shard's
+        rows are read back from the slabs, the owner-hash salt is bumped
+        (re-jitting the mutate program — the salt is a compile-time
+        constant), and the rows re-insert through the ordinary
+        route/mutate machinery, spreading across every shard. Queries
+        never consult the owner hash, so rows placed under old salts
+        remain exactly servable. Returns the number of points moved.
+
+        ``by`` picks the skew metric (default ``cfg.resplit_by``):
+        ``"occupancy"`` watches live rows per shard; ``"load"`` watches
+        queries served per shard since the last load-driven re-split —
+        a shard can be occupancy-balanced yet serve most of the read
+        traffic, and only the load metric moves its rows. A load-driven
+        move resets the counters (a fresh observation window over the
+        new placement). Like ``compact()``, callers on the async write
+        path must flush it first (the engine does)."""
         assert self.trained, "build() the index before re-splitting it"
         cfg = self.cfg
+        by = by if by is not None else cfg.resplit_by
+        if by not in ("occupancy", "load"):
+            raise ValueError(f"resplit by={by!r} must be 'occupancy' or "
+                             "'load'")
         if self._in_maintenance:           # the re-insert upserts recurse
             return 0
         if cfg.n_shards < 2 or not self.row_of:
@@ -597,21 +626,26 @@ class ShardedGusIndex:
         fac = imbalance if imbalance is not None \
             else (cfg.resplit_imbalance or 2.0)
         c_loc = cfg.n_partitions // cfg.n_shards
-        shard_live = self._live_per_partition() \
-            .reshape(cfg.n_shards, c_loc).sum(axis=1)
-        mean = float(shard_live.mean())
-        if mean <= 0 or shard_live.max() <= fac * mean:
+        metric = (self.query_load if by == "load"
+                  else self._live_per_partition())
+        shard_metric = np.asarray(metric).reshape(
+            cfg.n_shards, c_loc).sum(axis=1)
+        mean = float(shard_metric.mean())
+        if mean <= 0 or shard_metric.max() <= fac * mean:
             return 0
-        hot = int(shard_live.argmax())
+        hot = int(shard_metric.argmax())
         move = [pid for pid, rowvec in self.row_of.items()
                 if rowvec[0] // self.slab // c_loc == hot]
         if not move:
             return 0
         self._in_maintenance = True
         try:
-            return self._resplit_move(move)
+            moved = self._resplit_move(move)
         finally:
             self._in_maintenance = False
+        if by == "load" and moved:
+            self.query_load[:] = 0
+        return moved
 
     def _resplit_move(self, move: list) -> int:
         # the slabs hold the padded sparse rows — read the hot shard's
@@ -649,6 +683,8 @@ class ShardedGusIndex:
         c_loc = cfg.n_partitions // cfg.n_shards
         shard_live = live.reshape(cfg.n_shards, c_loc).sum(axis=1)
         mean = float(shard_live.mean())
+        shard_load = self.query_load.reshape(cfg.n_shards, c_loc).sum(axis=1)
+        load_mean = float(shard_load.mean())
         return {
             "points": len(self.row_of),
             "live_rows": int(live.sum()),
@@ -659,6 +695,9 @@ class ShardedGusIndex:
             "shard_live": shard_live.tolist(),
             "shard_imbalance": float(shard_live.max() / mean)
             if mean > 0 else 1.0,
+            "shard_load": shard_load.tolist(),
+            "load_imbalance": float(shard_load.max() / load_mean)
+            if load_mean > 0 else 1.0,
             "soar": cfg.use_soar,
             "salt": self.salt,
             "compactions": self.compactions,
@@ -701,6 +740,13 @@ class ShardedGusIndex:
             rows = np.asarray(rows)[:n_c]
             dists = np.asarray(dists)[:n_c]
             hit = np.isfinite(dists)
+            if hit.any():
+                # per-partition read-traffic counters: every returned
+                # candidate charges the partition it was served from
+                # (the "load" re-split metric)
+                self.query_load += np.bincount(
+                    (rows[hit] // self.slab).astype(np.int64),
+                    minlength=cfg.n_partitions)
             ids_c = np.where(hit, self.id_of_row[np.where(hit, rows, 0)], -1)
             out_ids[sel, :k_eff] = ids_c
             out_d[sel, :k_eff] = np.where(hit, dists, np.inf)

@@ -95,6 +95,11 @@ class FeatureStore:
         for pid in np.asarray(ids).tolist():
             self._rows.pop(pid, None)
 
+    def clear(self) -> None:
+        """Drop every row (a stale replica re-bootstrapping from a
+        snapshot must not keep features the snapshot already dropped)."""
+        self._rows.clear()
+
     def ids(self) -> np.ndarray:
         """Live point ids, ascending (the public view of the corpus)."""
         return np.asarray(sorted(self._rows), np.int64)

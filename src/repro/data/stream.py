@@ -95,3 +95,8 @@ class MutationStream:
         live_list = list(self.live)
         sel = self.rng.integers(0, len(live_list), n)
         return np.asarray([live_list[i] for i in sel], np.int64)
+
+    def query_features(self, n: int) -> dict:
+        """Feature rows for ``n`` neighborhood queries drawn from the
+        live set — the serving front-end's read traffic."""
+        return self._features_of(self.query_ids(n))

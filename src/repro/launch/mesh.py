@@ -58,22 +58,31 @@ def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     return _make_mesh(shape, axes)
 
 
-def make_gus_mesh(n_shards: int, *, two_level: bool = False):
-    """Index-shard mesh over the first ``n_shards`` local devices — the
-    CPU counterpart of the production GUS cells (ShardedGusIndex serves on
+def make_gus_mesh(n_shards: int, *, two_level: bool = False, pod: int = 0):
+    """Index-shard mesh over ``n_shards`` local devices — the CPU
+    counterpart of the production GUS cells (ShardedGusIndex serves on
     it; the dry-run lowers the same programs for the pod meshes).
+
+    ``pod`` selects the replica group: pod *p* owns the device slice
+    ``devices[p*n_shards : (p+1)*n_shards]``, so a fleet of pods carves
+    the host's devices into disjoint replica meshes — each pod serves a
+    full copy of the index on its own devices, which is what
+    ``serve.engine``'s hedging/fail-over replicates across
+    (``make_pod_meshes`` builds the whole fleet at once).
 
     ``two_level=True`` factors the shards into a ("data", "model") grid so
     the hierarchical candidate-merge schedule (intra-"model" gather+top-k,
     then cross-"data") actually has a second stage to run — the 1-D mesh
     would silently degrade "hier" to the flat all_gather."""
     have = len(jax.devices())
-    if n_shards > have:
+    need = (pod + 1) * n_shards
+    if need > have:
         raise ValueError(
-            f"make_gus_mesh({n_shards}): only {have} device(s) visible; "
-            "set XLA_FLAGS=--xla_force_host_platform_device_count="
-            f"{n_shards} before jax initializes")
-    devices = jax.devices()[:n_shards]
+            f"make_gus_mesh({n_shards}, pod={pod}): needs {need} device(s) "
+            f"but only {have} visible; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} "
+            "before jax initializes")
+    devices = jax.devices()[pod * n_shards:need]
     if two_level:
         # largest divisor <= sqrt becomes the outer "data" dim, so "model"
         # (the stage-1 gather) gets the bigger factor, as in production
@@ -82,6 +91,16 @@ def make_gus_mesh(n_shards: int, *, two_level: bool = False):
         return _make_mesh((data, n_shards // data), ("data", "model"),
                           devices=devices)
     return _make_mesh((n_shards,), ("data",), devices=devices)
+
+
+def make_pod_meshes(n_pods: int, n_shards: int, *, two_level: bool = False):
+    """The replica-group fleet: one index mesh per pod, over disjoint
+    device slices (pod *p* gets ``devices[p*n_shards:(p+1)*n_shards]``).
+    This is the serving plane's "pod" axis: every pod holds a complete
+    replica of the sharded index, mutations fan out to all pods, and
+    queries hedge/fail over between them (``serve.engine``)."""
+    return [make_gus_mesh(n_shards, two_level=two_level, pod=p)
+            for p in range(n_pods)]
 
 
 def dp_axes(mesh) -> tuple:

@@ -1,7 +1,15 @@
 """Serving layer: the operational wrap around ``core.gus.DynamicGUS``.
 
-  engine.py   — ``GusEngine``: request batching, straggler hedging
-                against replica fleets, mutation log + snapshot/recover;
+  engine.py   — ``GusEngine``: request batching, straggler hedging and
+                fail-over across a replica group, mutation log +
+                snapshot/recover, per-replica freshness catch-up;
+  replica.py  — ``Replica``/``ReplicaSet``: health, ``applied_seq``
+                freshness clocks, eligibility, round-robin hedge pick;
+  frontend.py — ``Frontend``: bounded-queue admission over mixed
+                query+mutate traffic with class-based shedding and
+                backpressure to the mutation pipeline;
+  faults.py   — ``FaultInjector``: deterministic scripted faults
+                (kill/slow/partition a replica, delay a batch);
   pipeline.py — ``MutationPipeline``: the async double-buffered write
                 path (fuse windows over the two-phase backend entry
                 points, bit-identical to the synchronous path — the
@@ -9,5 +17,9 @@
   serve_step.py — jitted prefill/decode steps for the LM scorer path.
 """
 from repro.serve.serve_step import make_decode_step, make_prefill_step
-from repro.serve.engine import GusEngine, EngineConfig
+from repro.serve.engine import (GusEngine, EngineConfig,
+                                ServingUnavailableError)
+from repro.serve.faults import FaultInjector
+from repro.serve.frontend import Frontend, FrontendConfig
 from repro.serve.pipeline import MutationPipeline, PipelineConfig
+from repro.serve.replica import Replica, ReplicaSet

@@ -1,25 +1,46 @@
-"""GUS serving engine: request batching, straggler hedging, fault recovery.
+"""GUS serving engine: replica groups, hedging, fail-over, fault recovery.
 
 Wraps ``DynamicGUS`` with the operational layer a production deployment
 needs (paper §3.1 runs at "hundreds of thousands of RPCs per second"):
 
-* **batching** — mutation and query RPCs are accumulated and flushed as
-  fixed-shape batches (power-of-two padding bounds jit recompiles);
-* **freshness accounting** — per-mutation timestamps measure
-  visibility lag (the paper's "data freshness within seconds at p99");
-* **straggler hedging** — if the primary's reply lags past the hedge
-  deadline, the engine reissues the query against a real replica of the
-  index (round-robin over ``replicas``) and serves that answer — the
-  standard tail-latency mitigation at scale. Replicas are full
-  ``DynamicGUS`` instances (any backend, including the sharded one) kept
-  consistent by fanning every mutation batch out to them;
-* **mutation log + snapshot restart** — every applied mutation batch is
+* **replica groups** — the engine fans every mutation batch out to a
+  group of replicas (``serve.replica``). Replicas are full ``DynamicGUS``
+  instances on their own resources: with the sharded backend each one
+  pins its mesh to a "pod" — a disjoint device slice
+  (``launch.mesh.make_pod_meshes``, ``ShardedConfig.pod``) — so the
+  group is a real multi-pod serving plane, not N handles to the same
+  devices. Per-replica ``applied_seq`` tracks freshness against the
+  engine's committed mutation sequence;
+* **straggler hedging + fail-over** — if the primary's reply lags past
+  the hedge deadline, the query reissues against the next *eligible*
+  replica (round-robin; dead, partitioned, and stale members are
+  skipped). A dead primary fails over entirely; when nobody can serve,
+  the engine raises ``ServingUnavailableError`` — an explicit error, so
+  callers (the request front-end) answer the request rather than lose
+  it;
+* **fault injection** — every health/latency decision consults an
+  optional ``serve.faults.FaultInjector``: scripted kill / slow /
+  partition faults steer routing deterministically (synthetic straggler
+  latency is *added* to measured time, never slept). Revived or healed
+  members rejoin through **freshness catch-up**: the engine replays the
+  mutation-log suffix they missed (or re-bootstraps from the snapshot
+  when the log no longer reaches back far enough) before they serve
+  again;
+* **freshness accounting** — per-mutation timestamps measure visibility
+  lag (the paper's "data freshness within seconds at p99"); ``serving``
+  records per-request effective latency (hedges and injected straggler
+  time included) for the p95/p99-under-load metrics;
+* **mutation log + snapshot restart** — every submitted batch is
   appended to a host-side log; ``recover()`` replays the suffix after a
-  crash/restart, giving checkpoint/restart semantics for the serving tier.
-  Snapshots carry the sharded backend's owner-hash salt (placement policy
-  bumped by skew re-splits) so a recovered engine routes inserts the same
-  way; ``stats()`` surfaces the backend's slab occupancy and lifecycle
-  counters (compactions, reclaimed slots, re-splits, age-outs).
+  crash/restart. Snapshots carry the sharded backend's owner-hash salt
+  so a recovered engine routes inserts the same way; ``stats()``
+  surfaces slab occupancy, lifecycle counters, and per-replica health.
+
+Staleness contract: a query is answered only by members whose
+``applied_seq`` is within ``EngineConfig.staleness_batches`` of the
+committed sequence (default 0 — exact freshness: every answer observes
+every submitted mutation, because ``query()`` flushes the async write
+path and catches lagging members up first).
 """
 from __future__ import annotations
 
@@ -31,9 +52,15 @@ import numpy as np
 
 from repro.core.gus import DynamicGUS
 from repro.core.types import MutationBatch, NeighborResult
+from repro.serve.faults import FaultInjector
 from repro.serve.pipeline import MutationPipeline, PipelineConfig
+from repro.serve.replica import Replica, ReplicaSet
 from repro.utils import pow2_pad
 from repro.utils.timing import Timer, percentiles
+
+
+class ServingUnavailableError(RuntimeError):
+    """No eligible member (primary or replica) can answer a query."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,39 +74,86 @@ class EngineConfig:
     # synchronous path; queries/snapshots flush first)
     pipeline: bool = False
     repair_per_tick: int | None = None   # None = graph's repair_per_batch
+    # documented staleness bound: a member may answer while within this
+    # many committed batches of the engine's sequence (0 = exact)
+    staleness_batches: int = 0
 
 
 class GusEngine:
     def __init__(self, gus: DynamicGUS, cfg: EngineConfig = EngineConfig(),
-                 replicas: Sequence[DynamicGUS] = ()):
+                 replicas: Sequence[DynamicGUS] = (),
+                 faults: FaultInjector | None = None):
         self.gus = gus
         self.cfg = cfg
-        self.replicas = list(replicas)
-        self.replica_hedges = [0] * len(self.replicas)
-        self._next_replica = 0
+        self.faults = faults or FaultInjector()
+        self.primary = Replica("primary", gus, key=FaultInjector.PRIMARY)
+        self.replica_set = ReplicaSet(
+            [Replica(f"replica:{i}", g, key=i)
+             for i, g in enumerate(replicas)],
+            staleness_batches=cfg.staleness_batches)
         self.pipelines: list[MutationPipeline] = []
         if cfg.pipeline:
             pcfg = PipelineConfig(repair_per_tick=cfg.repair_per_tick)
             self.pipelines = [MutationPipeline(g, pcfg)
-                              for g in (gus, *self.replicas)]
+                              for g in (gus, *replicas)]
         self.mutation_log: list[MutationBatch] = []
         self.log_since_snapshot = 0
         self.snapshot_state: dict | None = None
+        self.seq = 0                 # committed mutation-batch sequence
+        self.seq_base = 0            # sequence at the log's first entry
         self.freshness = Timer("freshness")
+        self.serving = Timer("serving")   # per-request effective latency
         self.hedged = 0
+        self.failovers = 0
         self.queries = 0
+
+    # ----------------------------------------------------- replica plumbing
+
+    @property
+    def replicas(self) -> list[DynamicGUS]:
+        """The replica GUS instances (kept for API compatibility)."""
+        return [r.gus for r in self.replica_set]
+
+    @property
+    def replica_hedges(self) -> list[int]:
+        return [r.hedges for r in self.replica_set]
+
+    def _members(self):
+        """(member, pipeline-or-None) over primary + replicas, aligned
+        with the pipelines list."""
+        out = []
+        for i, member in enumerate((self.primary, *self.replica_set)):
+            pipe = self.pipelines[i] if self.pipelines else None
+            out.append((member, pipe))
+        return out
+
+    def _sync_health(self) -> None:
+        """Mirror the fault injector's scripted state into the members'
+        health flags (the injector is the script; Replica is the record)."""
+        for member, _ in self._members():
+            member.alive = not self.faults.killed(member.key)
+            member.partitioned = self.faults.partitioned(member.key)
+
+    def _eligible(self, member: Replica) -> bool:
+        return self.replica_set.eligible(member, self.seq)
 
     # ------------------------------------------------------------ mutations
 
     def submit_mutations(self, batch: MutationBatch) -> None:
+        """Commit the batch: append to the log, fan out to every member
+        that can currently receive it (dead/partitioned members miss it
+        and fall behind — catch-up replays the suffix when they rejoin)."""
+        self._sync_health()
         t0 = time.perf_counter()
-        if self.pipelines:
-            for pipe in self.pipelines:
+        self.seq += 1
+        for member, pipe in self._members():
+            if not member.alive or member.partitioned:
+                continue                      # falls behind; catch_up later
+            if pipe is not None:
                 pipe.submit(batch)
-        else:
-            self.gus.mutate(batch)
-            for replica in self.replicas:  # replicas stay consistent
-                replica.mutate(batch)
+            else:
+                member.gus.mutate(batch)
+            member.applied_seq = self.seq
         self.mutation_log.append(batch)
         self.log_since_snapshot += 1
         # visibility lag: synchronous mutations are visible when mutate()
@@ -95,33 +169,102 @@ class GusEngine:
         for pipe in self.pipelines:
             pipe.flush()
 
+    def mutation_backlog(self) -> int:
+        """Batches admitted to the async write path but not yet through a
+        hand-off (staged + in-flight). The front-end's backpressure
+        signal; 0 on the synchronous path."""
+        return sum(p.backlog() for p in self.pipelines)
+
+    # ----------------------------------------------------- freshness rejoin
+
+    def catch_up(self) -> int:
+        """Replay the mutation-log suffix to every alive, un-partitioned
+        member that lags the committed sequence (a revived/healed member's
+        freshness rejoin). Members whose ``applied_seq`` predates the log
+        (a snapshot truncated it) re-bootstrap from the snapshot first.
+        Returns the number of batches replayed."""
+        self._sync_health()
+        replayed = 0
+        for member in [self.primary, *self.replica_set]:
+            if (not member.alive or member.partitioned
+                    or member.applied_seq >= self.seq):
+                continue
+            if member.applied_seq < self.seq_base:
+                # the log no longer reaches back: restore the snapshot
+                # corpus, then replay the whole remaining log
+                if self.snapshot_state is not None:
+                    self._restore_gus(member.gus, self.snapshot_state)
+                start = 0
+            else:
+                start = member.applied_seq - self.seq_base
+            for mb in self.mutation_log[start:]:
+                member.gus.mutate(mb)
+                replayed += 1
+            member.caught_up_batches += len(self.mutation_log) - start
+            member.applied_seq = self.seq
+            member.catchups += 1
+        return replayed
+
     # -------------------------------------------------------------- queries
 
     def query(self, features: dict, k: int | None = None) -> NeighborResult:
-        """Pad the query batch to a power of two, answer, unpad; hedge
-        against a replica if the primary exceeds the deadline."""
+        """Pad the query batch to a power of two, answer, unpad. Routing:
+        primary if eligible, hedged against the next eligible replica past
+        the deadline; fail-over when the primary cannot serve; explicit
+        ``ServingUnavailableError`` when nobody can. Injected straggler
+        latency is added to measured time (never slept) so hedging and
+        the recorded serving latency respond to faults deterministically."""
         self.queries += 1
+        self._sync_health()
         self.flush()              # read-your-writes across the async path
+        self.catch_up()           # lagging members rejoin before serving
         n = next(iter(features.values())).shape[0]
         padded = pow2_pad(n, self.cfg.query_batch)
         feats = {key: np.concatenate(
             [v, np.repeat(v[-1:], padded - n, axis=0)], axis=0)
             if padded > n else v for key, v in features.items()}
-        t0 = time.perf_counter()
-        res = self.gus.neighbors(feats, k)
-        elapsed_ms = (time.perf_counter() - t0) * 1e3
-        if elapsed_ms > self.cfg.hedge_ms:
-            self.hedged += 1
-            if self.replicas:
-                i = self._next_replica
-                self._next_replica = (i + 1) % len(self.replicas)
-                self.replica_hedges[i] += 1
-                res = self.replicas[i].neighbors(feats, k)
-            else:
-                # no replica fleet: reissue against the primary
-                res = self.gus.neighbors(feats, k)
+        res, total_ms = self._route(feats, k)
+        self.serving.record(total_ms / 1e3)
         return NeighborResult(ids=res.ids[:n], weights=res.weights[:n],
                               distances=res.distances[:n])
+
+    def _timed_answer(self, member: Replica, feats, k):
+        """One member's answer + its effective latency (measured plus any
+        injected straggler ms)."""
+        t0 = time.perf_counter()
+        res = member.gus.neighbors(feats, k)
+        elapsed_ms = (time.perf_counter() - t0) * 1e3
+        return res, elapsed_ms + self.faults.extra_ms(member.key)
+
+    def _route(self, feats, k):
+        if self._eligible(self.primary):
+            res, elapsed_ms = self._timed_answer(self.primary, feats, k)
+            if elapsed_ms <= self.cfg.hedge_ms:
+                self.primary.served += 1
+                return res, elapsed_ms
+            self.hedged += 1
+            replica = self.replica_set.pick(self.seq)
+            if replica is not None:
+                res, r_ms = self._timed_answer(replica, feats, k)
+                replica.hedges += 1
+                replica.served += 1
+                return res, elapsed_ms + r_ms
+            # no eligible replica fleet: reissue against the primary
+            res, r_ms = self._timed_answer(self.primary, feats, k)
+            self.primary.served += 1
+            return res, elapsed_ms + r_ms
+        # primary down/stale: fail over to the replica group
+        replica = self.replica_set.pick(self.seq)
+        if replica is None:
+            raise ServingUnavailableError(
+                "no eligible member: primary "
+                f"{self.primary.stats()}, replicas "
+                f"{self.replica_set.stats()}")
+        res, r_ms = self._timed_answer(replica, feats, k)
+        replica.failovers += 1
+        replica.served += 1
+        self.failovers += 1
+        return res, r_ms
 
     # ------------------------------------------------------ fault tolerance
 
@@ -129,7 +272,12 @@ class GusEngine:
         """Snapshot = live ids + features (the index is rebuildable state)
         + the maintained graph arrays (rebuildable too, but restoring them
         skips the full-corpus re-query on recovery). Flushes the async
-        write path first so the snapshot observes every submitted batch."""
+        write path first so the snapshot observes every submitted batch.
+        Deferred while the primary cannot serve (dead/partitioned/stale):
+        its state would miss committed batches."""
+        self._sync_health()
+        if not self._eligible(self.primary):
+            return                      # retried after the next batch
         self.flush()
         ids = self.gus.store.ids()
         self.snapshot_state = {
@@ -142,7 +290,27 @@ class GusEngine:
             "index_salt": getattr(self.gus.index, "salt", None),
         }
         self.mutation_log.clear()
+        self.seq_base = self.seq
         self.log_since_snapshot = 0
+
+    @staticmethod
+    def _restore_gus(gus: DynamicGUS, snapshot_state: dict) -> None:
+        """Load one GUS from a snapshot: salt before build (routing),
+        graph arrays restored rather than recomputed where both sides
+        have one. Clears the store first — a stale member may hold rows
+        the snapshot has already dropped."""
+        if not len(snapshot_state["ids"]):
+            return
+        gus.store.clear()
+        salt = snapshot_state.get("index_salt")
+        if salt is not None and hasattr(gus.index, "salt"):
+            gus.index.salt = salt
+        graph_state = snapshot_state.get("graph")
+        restorable = graph_state is not None and gus.graph is not None
+        gus.bootstrap(snapshot_state["ids"], snapshot_state["features"],
+                      build_graph=not restorable)
+        if restorable:
+            gus.graph.restore(graph_state)
 
     def recover(self, fresh_gus: DynamicGUS,
                 replicas: Sequence[DynamicGUS] = ()) -> "GusEngine":
@@ -155,17 +323,8 @@ class GusEngine:
         eng = GusEngine(fresh_gus, self.cfg, replicas)
         targets = [fresh_gus, *eng.replicas]
         if self.snapshot_state is not None and len(self.snapshot_state["ids"]):
-            graph_state = self.snapshot_state.get("graph")
-            salt = self.snapshot_state.get("index_salt")
             for gus in targets:
-                if salt is not None and hasattr(gus.index, "salt"):
-                    gus.index.salt = salt      # before build(): routing
-                restorable = graph_state is not None and gus.graph is not None
-                gus.bootstrap(self.snapshot_state["ids"],
-                              self.snapshot_state["features"],
-                              build_graph=not restorable)
-                if restorable:
-                    gus.graph.restore(graph_state)
+                self._restore_gus(gus, self.snapshot_state)
         # carry the snapshot forward: if the recovered engine crashes again
         # before its next snapshot, a second recover() must not lose the
         # snapshot corpus
@@ -174,6 +333,9 @@ class GusEngine:
             for gus in targets:
                 gus.mutate(batch)
             eng.mutation_log.append(batch)
+        eng.seq = len(eng.mutation_log)
+        for member in [eng.primary, *eng.replica_set]:
+            member.applied_seq = eng.seq
         return eng
 
     # --------------------------------------------------------------- stats
@@ -182,8 +344,13 @@ class GusEngine:
         out = {
             "queries": self.queries,
             "hedged": self.hedged,
+            "failovers": self.failovers,
+            "seq": self.seq,
             "replica_hedges": list(self.replica_hedges),
+            "primary": self.primary.stats(),
+            "replicas": self.replica_set.stats(),
             "freshness": percentiles(self.freshness.samples_ms),
+            "serving": self.serving.summary(),
             "query_latency": self.gus.query_timer.summary(),
             "mutation_latency": self.gus.mutation_timer.summary(),
         }

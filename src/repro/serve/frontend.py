@@ -1,0 +1,289 @@
+"""Request front-end: admission control over mixed query+mutate traffic.
+
+The serving plane's front door. Producers ``submit_query`` /
+``submit_mutation``; the front-end queues them per class in bounded FIFO
+queues, and ``step()`` dispatches one scheduling round into the
+``GusEngine`` (queries batched into fused engine calls, mutations fed to
+the async write path). This is where the paper's "tens of milliseconds
+per request under heavy traffic" becomes an admission problem rather
+than an index problem: under overload the queues fill, and the
+front-end *sheds* — with an explicit rejection, never silence.
+
+Admission contract (pinned by ``tests/test_frontend.py``):
+
+* **bounded queues** — each class's queue never exceeds its configured
+  bound; a submit that would overflow is rejected immediately with
+  status ``"shed_capacity"``;
+* **backpressure** — mutate admissions are additionally rejected with
+  ``"shed_backpressure"`` while the engine's unflushed write backlog
+  (rows dispatched since the last flush/query, plus the async
+  pipeline's staged windows) exceeds ``max_unflushed`` — the queue
+  bound protects the front-end, this bound protects the mutation
+  pipeline behind it;
+* **no reordering within a class** — queues are FIFO and dispatch pops
+  from the head, so responses complete in admission order per class
+  (classes may interleave with each other; that is the point of having
+  two);
+* **no lost accepted requests** — every accepted request id receives
+  exactly one terminal response (``"ok"`` or ``"error"``) from
+  ``step()``/``drain()``; shed requests receive theirs at submit time.
+  ``ServingUnavailableError`` from the engine (every replica dead)
+  becomes an explicit ``"error"`` response, not an exception up the
+  stack and not a dropped ticket.
+
+Dispatch: each ``step()`` first dispatches up to ``mutate_dispatch``
+mutate requests (so writes admitted earlier are visible to queries
+dispatched the same round — the engine's query path flushes), then up to
+``query_dispatch`` query requests. Consecutive head-of-queue queries
+with the same ``k`` fuse into one padded engine call and are split back
+per request. A scripted ``FaultInjector.delay_batch`` holds a class's
+dispatch for N rounds (queueing-delay injection, no sleeping).
+
+Equivalence: given the same admitted sequence and step schedule, a
+front-end over a pipelined engine produces bit-identical query responses
+to one over a synchronous engine — the engine flushes before every
+query, so the staleness bound at the front door is
+``EngineConfig.staleness_batches`` (default 0: read-your-dispatched-
+writes exactly).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.core.types import MutationBatch, NeighborResult
+from repro.serve.engine import GusEngine, ServingUnavailableError
+from repro.serve.faults import FaultInjector
+from repro.utils.timing import Timer
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    query_queue: int = 256        # bounded admission queue, query class
+    mutate_queue: int = 64        # bounded admission queue, mutate class
+    query_dispatch: int = 8       # max query requests dispatched per step
+    mutate_dispatch: int = 4      # max mutate requests dispatched per step
+    # backpressure bound: mutation rows admitted but not yet
+    # flush-visible (plus staged pipeline windows) before mutate
+    # admissions shed
+    max_unflushed: int = 4096
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    kind: str                     # "query" | "mutate"
+    payload: object               # features dict | MutationBatch
+    k: int | None = None
+    rows: int = 1                 # mutation rows (backpressure accounting)
+    arrival_s: float = 0.0        # submit time (loadgen may backdate to
+    #                               the scheduled arrival — open-loop
+    #                               latency counts queueing, not the
+    #                               harness's submit jitter)
+
+
+@dataclasses.dataclass
+class Response:
+    rid: int
+    kind: str
+    status: str                   # "accepted" | "ok" | "error" |
+    #                               "shed_capacity" | "shed_backpressure"
+    result: object = None         # NeighborResult slice (query, "ok")
+    latency_ms: float = 0.0       # completion - arrival (terminal only)
+    detail: str = ""
+
+    @property
+    def terminal(self) -> bool:
+        return self.status != "accepted"
+
+    @property
+    def shed(self) -> bool:
+        return self.status.startswith("shed")
+
+
+class Frontend:
+    """Bounded-queue admission + batched dispatch over a ``GusEngine``."""
+
+    def __init__(self, engine: GusEngine,
+                 cfg: FrontendConfig = FrontendConfig(),
+                 faults: FaultInjector | None = None,
+                 clock=time.perf_counter):
+        self.engine = engine
+        self.cfg = cfg
+        # share the engine's injector unless the caller scripts another
+        self.faults = faults or engine.faults
+        self.clock = clock
+        self._queues: dict[str, deque] = {"query": deque(),
+                                          "mutate": deque()}
+        self._rid = 0
+        self._unflushed_rows = 0      # mutate rows dispatched, not flushed
+        self.steps = 0
+        self.accepted = {"query": 0, "mutate": 0}
+        self.shed = {"query": 0, "mutate": 0}
+        self.completed = {"query": 0, "mutate": 0}
+        self.errors = 0
+        self.queue_high_water = {"query": 0, "mutate": 0}
+        self.query_latency = Timer("frontend_query")
+        self.mutate_latency = Timer("frontend_mutate")
+
+    # ------------------------------------------------------------ admission
+
+    def queue_depth(self, kind: str) -> int:
+        return len(self._queues[kind])
+
+    def _admit(self, req: Request) -> Response:
+        limit = (self.cfg.query_queue if req.kind == "query"
+                 else self.cfg.mutate_queue)
+        if len(self._queues[req.kind]) >= limit:
+            self.shed[req.kind] += 1
+            return Response(req.rid, req.kind, "shed_capacity",
+                            detail=f"queue at bound {limit}")
+        if req.kind == "mutate" and self._backlog() > self.cfg.max_unflushed:
+            self.shed[req.kind] += 1
+            return Response(req.rid, req.kind, "shed_backpressure",
+                            detail=f"unflushed backlog {self._backlog()} > "
+                                   f"{self.cfg.max_unflushed}")
+        q = self._queues[req.kind]
+        q.append(req)
+        self.accepted[req.kind] += 1
+        self.queue_high_water[req.kind] = max(
+            self.queue_high_water[req.kind], len(q))
+        return Response(req.rid, req.kind, "accepted")
+
+    def _backlog(self) -> int:
+        """Unflushed write pressure: rows dispatched since the engine
+        last flushed (any query flushes) plus queued-but-undispatched
+        rows ahead in the mutate queue."""
+        queued = sum(r.rows for r in self._queues["mutate"])
+        return self._unflushed_rows + queued
+
+    def submit_query(self, features: dict, k: int | None = None,
+                     arrival_s: float | None = None) -> Response:
+        """Admit one query request (features carry the batch dim; usually
+        one row per request). Returns the admission response — status
+        ``"accepted"`` (terminal response comes from ``step()``) or an
+        explicit shed."""
+        self._rid += 1
+        now = self.clock()
+        return self._admit(Request(
+            self._rid, "query", features, k=k,
+            arrival_s=now if arrival_s is None else arrival_s))
+
+    def submit_mutation(self, batch: MutationBatch,
+                        arrival_s: float | None = None) -> Response:
+        """Admit one mutation request (a ``MutationBatch`` of any mix of
+        kinds; the async pipeline behind the engine re-windows rows)."""
+        self._rid += 1
+        now = self.clock()
+        return self._admit(Request(
+            self._rid, "mutate", batch, rows=int(np.asarray(batch.ids).size),
+            arrival_s=now if arrival_s is None else arrival_s))
+
+    # ------------------------------------------------------------- dispatch
+
+    def step(self) -> list[Response]:
+        """One scheduling round: mutations first (their effects are
+        visible to this round's queries via the engine's flush), then a
+        fused query batch. Returns the terminal responses completed this
+        round, in dispatch (= admission) order per class."""
+        self.steps += 1
+        out: list[Response] = []
+        if not self.faults.consume_hold("mutate"):
+            out += self._dispatch_mutations()
+        if not self.faults.consume_hold("query"):
+            out += self._dispatch_queries()
+        return out
+
+    def drain(self, max_steps: int = 100_000) -> list[Response]:
+        """Run steps until both queues are empty (scripted holds still
+        consume rounds). Every accepted request is terminal afterwards."""
+        out: list[Response] = []
+        while any(self._queues.values()):
+            if self.steps >= max_steps:
+                raise RuntimeError(f"drain exceeded {max_steps} steps")
+            out += self.step()
+        return out
+
+    def _dispatch_mutations(self) -> list[Response]:
+        out = []
+        q = self._queues["mutate"]
+        for _ in range(min(self.cfg.mutate_dispatch, len(q))):
+            req = q.popleft()
+            self.engine.submit_mutations(req.payload)
+            self._unflushed_rows += req.rows
+            lat = (self.clock() - req.arrival_s) * 1e3
+            self.mutate_latency.samples_ms.append(lat)
+            self.completed["mutate"] += 1
+            out.append(Response(req.rid, "mutate", "ok",
+                                result={"rows": req.rows}, latency_ms=lat))
+        return out
+
+    def _dispatch_queries(self) -> list[Response]:
+        out = []
+        q = self._queues["query"]
+        budget = min(self.cfg.query_dispatch, len(q))
+        while budget > 0:
+            # fuse the head run of same-k requests into one engine call
+            group = [q.popleft()]
+            budget -= 1
+            while budget > 0 and q and q[0].k == group[0].k:
+                group.append(q.popleft())
+                budget -= 1
+            out += self._dispatch_query_group(group)
+        return out
+
+    def _dispatch_query_group(self, group: list[Request]) -> list[Response]:
+        rows = [next(iter(r.payload.values())).shape[0] for r in group]
+        feats = {key: np.concatenate(
+            [np.asarray(r.payload[key]) for r in group], axis=0)
+            for key in group[0].payload}
+        try:
+            res = self.engine.query(feats, group[0].k)
+        except ServingUnavailableError as exc:
+            # explicit rejection for every request in the fused batch —
+            # an unavailable plane must never silently drop a ticket
+            self.errors += len(group)
+            now = self.clock()
+            return [Response(r.rid, "query", "error", detail=str(exc),
+                             latency_ms=(now - r.arrival_s) * 1e3)
+                    for r in group]
+        # any engine query flushes the async write path: backlog drains
+        self._unflushed_rows = 0
+        now = self.clock()
+        out = []
+        lo = 0
+        for req, n in zip(group, rows):
+            sl = slice(lo, lo + n)
+            lo += n
+            lat = (now - req.arrival_s) * 1e3
+            self.query_latency.samples_ms.append(lat)
+            self.completed["query"] += 1
+            out.append(Response(
+                req.rid, "query", "ok", latency_ms=lat,
+                result=NeighborResult(ids=res.ids[sl],
+                                      weights=res.weights[sl],
+                                      distances=res.distances[sl])))
+        return out
+
+    # ---------------------------------------------------------------- stats
+
+    def stats(self) -> dict:
+        return {
+            "steps": self.steps,
+            "accepted": dict(self.accepted),
+            "shed": dict(self.shed),
+            "completed": dict(self.completed),
+            "errors": self.errors,
+            "queued": {k: len(v) for k, v in self._queues.items()},
+            "queue_high_water": dict(self.queue_high_water),
+            "shed_rate": self.shed_rate(),
+            "query_latency": self.query_latency.summary(),
+            "mutate_latency": self.mutate_latency.summary(),
+        }
+
+    def shed_rate(self) -> float:
+        total = sum(self.accepted.values()) + sum(self.shed.values())
+        return (sum(self.shed.values()) / total) if total else 0.0

@@ -151,6 +151,11 @@ class MutationPipeline:
     def in_flight(self) -> bool:
         return self._inflight is not None or bool(self._queue)
 
+    def backlog(self) -> int:
+        """Batches submitted but not yet through a hand-off (staged window
+        + the in-flight window) — the front-end's backpressure signal."""
+        return len(self._queue) + (self._inflight is not None)
+
     def window_size(self) -> int:
         """Effective fuse window: a maintained graph pins it to 1 so the
         per-batch graph tick sees exactly the synchronous index states;

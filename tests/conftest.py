@@ -8,6 +8,9 @@ import threading
 # the dry-run's business only — see src/repro/launch/dryrun.py); multi-device
 # tests run in subprocesses that set XLA_FLAGS themselves.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# the repo root, so tests can import the benchmarks package (the chaos
+# tier drives traffic through benchmarks.loadgen)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 # the tests dir itself, for shared helpers (_hypo_compat)
 sys.path.insert(0, os.path.dirname(__file__))
 
@@ -29,8 +32,14 @@ def pytest_configure(config):
         "deselect with -m 'not slow' for the quick CI lane")
     config.addinivalue_line(
         "markers",
+        "chaos: fault-injection serving-plane tests (replica kill / slow / "
+        "partition under traffic); run in ci.sh --full, deselect with "
+        "-m 'not chaos' for the quick lane")
+    config.addinivalue_line(
+        "markers",
         "timeout(seconds): per-test wall-clock limit enforced via SIGALRM "
-        f"(defaults: {QUICK_TIMEOUT_S}s, {SLOW_TIMEOUT_S}s for @slow)")
+        f"(defaults: {QUICK_TIMEOUT_S}s, {SLOW_TIMEOUT_S}s for "
+        "@slow/@chaos)")
 
 
 @pytest.fixture(autouse=True)
@@ -49,7 +58,8 @@ def _per_test_timeout(request):
     marker = request.node.get_closest_marker("timeout")
     if marker is not None:
         seconds = int(marker.args[0])
-    elif request.node.get_closest_marker("slow") is not None:
+    elif (request.node.get_closest_marker("slow") is not None
+          or request.node.get_closest_marker("chaos") is not None):
         seconds = SLOW_TIMEOUT_S
     else:
         seconds = QUICK_TIMEOUT_S

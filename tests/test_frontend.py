@@ -1,0 +1,241 @@
+"""Admission-control contract of the serving front-end.
+
+Property tests over randomized (seeded, deterministic) mixed
+query+mutate traffic pin the four guarantees ``serve.frontend``
+documents: bounded queues never exceed their limit, admission never
+reorders within a class, shed requests get an explicit rejection (never
+silence), and no accepted request is lost — plus the serving-plane
+equivalence: the same admitted schedule through a pipelined engine is
+bit-identical to the synchronous path."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import BucketConfig, DynamicGUS, GusConfig
+from repro.core.scorer import train_scorer
+from repro.data.stream import MutationStream, StreamConfig
+from repro.data.synthetic import OGB_ARXIV_LIKE, labeled_pairs, make_dataset
+from repro.serve import (EngineConfig, FaultInjector, Frontend,
+                         FrontendConfig, GusEngine)
+
+DATA = dataclasses.replace(OGB_ARXIV_LIKE, n_points=300, n_clusters=8)
+BUCKETS = BucketConfig(dense_tables=8, dense_bits=10, scalar_widths=(2.0,))
+
+
+@pytest.fixture(scope="module")
+def world():
+    ids, feats, cluster = make_dataset(DATA)
+    pf, lbl = labeled_pairs(feats, cluster, 600, DATA.spec, seed=1)
+    scorer, _ = train_scorer(jax.random.PRNGKey(0), DATA.spec, pf, lbl,
+                             steps=40)
+    return ids, feats, scorer
+
+
+def _gus(world, n=150):
+    ids, feats, scorer = world
+    gus = DynamicGUS(DATA.spec, BUCKETS, scorer,
+                     GusConfig(scann_nn=10, backend="brute"))
+    gus.bootstrap(ids[:n], {k: v[:n] for k, v in feats.items()})
+    return gus
+
+
+def _stream(seed=5):
+    return MutationStream(DATA, StreamConfig(batch_size=8, seed=seed),
+                          bootstrap_fraction=0.5)
+
+
+def _frontend(world, fcfg=None, ecfg=None, replicas=0, faults=None):
+    engine = GusEngine(_gus(world), ecfg or EngineConfig(),
+                       replicas=[_gus(world) for _ in range(replicas)],
+                       faults=faults)
+    return Frontend(engine, fcfg or FrontendConfig())
+
+
+# ----------------------------------------------------------- bounded queues
+
+def test_bounded_queue_never_exceeds_limit(world):
+    fcfg = FrontendConfig(query_queue=5, mutate_queue=3,
+                          query_dispatch=2, mutate_dispatch=1)
+    fe = _frontend(world, fcfg)
+    stream = _stream()
+    rng = np.random.default_rng(11)
+    for _ in range(200):
+        op = rng.integers(3)
+        if op == 0:
+            fe.submit_query(stream.query_features(1), k=4)
+        elif op == 1:
+            fe.submit_mutation(next(stream))
+        else:
+            fe.step()
+        assert fe.queue_depth("query") <= fcfg.query_queue
+        assert fe.queue_depth("mutate") <= fcfg.mutate_queue
+    fe.drain()
+    assert fe.queue_high_water["query"] <= fcfg.query_queue
+    assert fe.queue_high_water["mutate"] <= fcfg.mutate_queue
+
+
+# --------------------------------------------------------- explicit shedding
+
+def test_shed_requests_get_explicit_rejection(world):
+    fe = _frontend(world, FrontendConfig(query_queue=3, mutate_queue=2,
+                                         query_dispatch=2,
+                                         mutate_dispatch=1))
+    stream = _stream()
+    responses = [fe.submit_query(stream.query_features(1), k=4)
+                 for _ in range(8)]
+    statuses = [r.status for r in responses]
+    assert statuses == ["accepted"] * 3 + ["shed_capacity"] * 5
+    for r in responses[3:]:           # shed at submit time, with a reason
+        assert r.terminal and r.shed and r.detail
+    # accounting closes: every issued request is accepted xor shed
+    assert fe.accepted["query"] + fe.shed["query"] == 8
+    terminal = fe.drain()
+    assert len(terminal) == 3         # only the accepted ones complete
+
+
+def test_backpressure_sheds_mutations_not_queries(world):
+    fcfg = FrontendConfig(query_queue=64, mutate_queue=64,
+                          mutate_dispatch=4, max_unflushed=20)
+    fe = _frontend(world, fcfg, ecfg=EngineConfig(pipeline=True))
+    stream = _stream()
+    seen_backpressure = False
+    for _ in range(8):                # 8 batches x 8 rows = 64 rows offered
+        r = fe.submit_mutation(next(stream))
+        seen_backpressure |= r.status == "shed_backpressure"
+        assert r.status in ("accepted", "shed_backpressure")
+    assert seen_backpressure
+    # the query class is not subject to write backpressure
+    assert fe.submit_query(stream.query_features(1), k=4).status == "accepted"
+    out = fe.drain()
+    # a dispatched query flushes the engine: backlog drains, admission opens
+    assert any(r.kind == "query" and r.status == "ok" for r in out)
+    assert fe.submit_mutation(next(stream)).status == "accepted"
+    fe.drain()
+
+
+# ------------------------------------------------------- ordering / no loss
+
+def test_admission_never_reorders_within_class(world):
+    fe = _frontend(world, FrontendConfig(query_queue=64, mutate_queue=64,
+                                         query_dispatch=3,
+                                         mutate_dispatch=2))
+    stream = _stream()
+    rng = np.random.default_rng(23)
+    admitted = {"query": [], "mutate": []}
+    completed = {"query": [], "mutate": []}
+    for _ in range(150):
+        op = rng.integers(4)
+        if op <= 1:
+            r = fe.submit_query(stream.query_features(1), k=4)
+        elif op == 2:
+            r = fe.submit_mutation(next(stream))
+        else:
+            for done in fe.step():
+                completed[done.kind].append(done.rid)
+            continue
+        if r.status == "accepted":
+            admitted[r.kind].append(r.rid)
+    for done in fe.drain():
+        completed[done.kind].append(done.rid)
+    # every accepted request completed, in admission order per class
+    assert completed["query"] == admitted["query"]
+    assert completed["mutate"] == admitted["mutate"]
+
+
+def test_no_accepted_request_lost_under_random_interleaving(world):
+    fe = _frontend(world, FrontendConfig(query_queue=8, mutate_queue=4,
+                                         query_dispatch=2,
+                                         mutate_dispatch=1))
+    stream = _stream(seed=9)
+    rng = np.random.default_rng(41)
+    accepted, terminal = set(), []
+    for _ in range(120):
+        op = rng.integers(3)
+        if op == 0:
+            r = fe.submit_query(stream.query_features(1), k=4)
+        elif op == 1:
+            r = fe.submit_mutation(next(stream))
+        else:
+            terminal += fe.step()
+            continue
+        if r.status == "accepted":
+            accepted.add(r.rid)
+        else:
+            assert r.terminal           # shed is a terminal answer too
+    terminal += fe.drain()
+    done = [r.rid for r in terminal if r.status in ("ok", "error")]
+    assert sorted(done) == sorted(accepted)       # exactly-once, none lost
+    assert len(done) == len(set(done))
+
+
+# --------------------------------------------------- pipelined == sync path
+
+def test_pipelined_frontend_equals_sync_path(world):
+    """The same admitted schedule through a pipelined engine returns
+    bit-identical query answers to the synchronous path (staleness bound
+    0: every query observes every mutation admitted before it)."""
+    stream_a, stream_b = _stream(seed=13), _stream(seed=13)
+    fcfg = FrontendConfig(query_queue=256, mutate_queue=256,
+                          query_dispatch=4, mutate_dispatch=2,
+                          max_unflushed=10**9)
+    fe_sync = _frontend(world, fcfg, EngineConfig(pipeline=False))
+    fe_pipe = _frontend(world, fcfg, EngineConfig(pipeline=True))
+    rng = np.random.default_rng(31)
+    results = {True: {}, False: {}}
+    for fe, stream, pipelined in ((fe_sync, stream_a, False),
+                                  (fe_pipe, stream_b, True)):
+        rng = np.random.default_rng(31)     # identical schedule both runs
+        for _ in range(60):
+            op = rng.integers(4)
+            if op <= 1:
+                fe.submit_query(stream.query_features(1), k=5)
+            elif op == 2:
+                fe.submit_mutation(next(stream))
+            else:
+                for r in fe.step():
+                    if r.kind == "query":
+                        results[pipelined][r.rid] = r.result
+        for r in fe.drain():
+            if r.kind == "query":
+                results[pipelined][r.rid] = r.result
+    assert set(results[True]) == set(results[False])
+    for rid, res in results[False].items():
+        np.testing.assert_array_equal(res.ids, results[True][rid].ids)
+        np.testing.assert_array_equal(res.distances,
+                                      results[True][rid].distances)
+
+
+# ------------------------------------------------------------ fault hooks
+
+def test_delay_batch_holds_dispatch_rounds(world):
+    fe = _frontend(world)
+    stream = _stream()
+    fe.submit_query(stream.query_features(1), k=4)
+    fe.submit_mutation(next(stream))
+    fe.faults.delay_batch("query", 2)
+    out1 = fe.step()                 # round 1: query held, mutate flows
+    assert [r.kind for r in out1] == ["mutate"]
+    assert fe.queue_depth("query") == 1
+    assert fe.step() == []           # round 2: still held
+    out3 = fe.step()                 # hold exhausted: query dispatches
+    assert [r.kind for r in out3] == ["query"]
+    assert out3[0].status == "ok"
+
+
+def test_unavailable_plane_answers_with_error(world):
+    faults = FaultInjector()
+    fe = _frontend(world, replicas=1, faults=faults)
+    stream = _stream()
+    fe.submit_query(stream.query_features(1), k=4)
+    faults.kill(FaultInjector.PRIMARY)
+    faults.kill(0)
+    out = fe.drain()
+    assert [r.status for r in out] == ["error"]
+    assert "no eligible member" in out[0].detail
+    assert fe.errors == 1
+    # revival restores service for later requests
+    faults.revive(FaultInjector.PRIMARY)
+    fe.submit_query(stream.query_features(1), k=4)
+    assert [r.status for r in fe.drain()] == ["ok"]

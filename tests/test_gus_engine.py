@@ -14,7 +14,9 @@ from repro.core.gus import _drop_self
 from repro.core.scorer import train_scorer
 from repro.data.stream import MutationStream, StreamConfig
 from repro.data.synthetic import OGB_ARXIV_LIKE, labeled_pairs, make_dataset
-from repro.serve.engine import EngineConfig, GusEngine
+from repro.serve.engine import (EngineConfig, GusEngine,
+                                ServingUnavailableError)
+from repro.serve.faults import FaultInjector
 
 DATA = dataclasses.replace(OGB_ARXIV_LIKE, n_points=400, n_clusters=8)
 BUCKETS = BucketConfig(dense_tables=8, dense_bits=10, scalar_widths=(2.0,))
@@ -231,3 +233,131 @@ def test_neighbors_of_ids_after_deleting_everything(world):
     assert (res.ids == -1).all()
     assert (res.weights == -np.inf).all()
     assert (res.distances == np.inf).all()
+
+
+# ------------------------------------------------- fault injection (chaos)
+
+def _fleet(world, n_replicas=2, **ecfg):
+    ids, feats, cluster, scorer = world
+    members = [_gus(scorer) for _ in range(n_replicas + 1)]
+    for g in members:
+        _boot(g, ids, feats)
+    faults = FaultInjector()
+    engine = GusEngine(members[0], EngineConfig(**ecfg),
+                       replicas=members[1:], faults=faults)
+    return engine, faults, feats
+
+
+def test_dead_primary_fails_over_to_survivors(world):
+    engine, faults, feats = _fleet(world)
+    q = {k: v[:1] for k, v in feats.items()}
+    faults.kill(FaultInjector.PRIMARY)
+    faults.kill(0)                         # one replica dead too
+    res = engine.query(q, k=5)
+    assert res.ids.shape == (1, 5)
+    survivor = engine.replica_set.members[1]
+    dead = engine.replica_set.members[0]
+    assert engine.failovers == 1
+    assert survivor.failovers == 1 and survivor.served == 1
+    assert dead.served == 0                # never answered from a dead replica
+    assert engine.primary.served == 0
+    st = engine.stats()
+    assert st["failovers"] == 1
+    assert st["replicas"][0]["alive"] is False
+
+
+def test_all_dead_raises_explicit_unavailable(world):
+    engine, faults, feats = _fleet(world, n_replicas=1)
+    faults.kill(FaultInjector.PRIMARY)
+    faults.kill(0)
+    with pytest.raises(ServingUnavailableError):
+        engine.query({k: v[:1] for k, v in feats.items()}, k=5)
+    faults.revive(FaultInjector.PRIMARY)   # revival restores service
+    res = engine.query({k: v[:1] for k, v in feats.items()}, k=5)
+    assert res.ids.shape == (1, 5)
+
+
+def test_slow_primary_hedges_and_p95_reflects_interference(world):
+    engine, faults, feats = _fleet(world, n_replicas=1)
+    q = {k: v[:1] for k, v in feats.items()}
+    for _ in range(8):                     # baseline: fast, no hedges
+        engine.query(q, k=5)
+    assert engine.hedged == 0
+    base_p95 = engine.stats()["serving"]["p95_ms"]
+    faults.slow(FaultInjector.PRIMARY, 500.0)   # straggler: +500ms, no sleep
+    for _ in range(2):
+        engine.query(q, k=5)
+    assert engine.hedged == 2              # deadline blown deterministically
+    assert engine.replica_hedges == [2]    # both answers from the replica
+    s = engine.stats()["serving"]
+    assert s["max_ms"] >= 500.0            # interference visible in the tail
+    assert s["p95_ms"] > base_p95
+    faults.clear_slow(FaultInjector.PRIMARY)
+    engine.query(q, k=5)
+    assert engine.hedged == 2              # back to the fast path
+
+
+def test_slow_replica_hedge_skips_to_next_eligible(world):
+    engine, faults, feats = _fleet(world, n_replicas=2, hedge_ms=-1.0)
+    q = {k: v[:1] for k, v in feats.items()}
+    faults.kill(0)                         # dead replica must be skipped
+    engine.query(q, k=5)
+    engine.query(q, k=5)
+    assert engine.replica_hedges == [0, 2]   # round robin over eligible only
+
+
+def test_killed_replica_rejoins_with_catch_up(world):
+    engine, faults, feats = _fleet(world, n_replicas=1,
+                                   snapshot_every=1000, hedge_ms=-1.0)
+    replica = engine.replica_set.members[0]
+    faults.kill(0)
+    stream = MutationStream(DATA, StreamConfig(batch_size=16, seed=21),
+                            bootstrap_fraction=0.5)
+    for _, mb in zip(range(3), stream):
+        engine.submit_mutations(mb)        # replica misses all three
+    assert replica.applied_seq == 0 and engine.seq == 3
+    assert len(replica.gus.index) != len(engine.gus.index)
+    faults.revive(0)
+    res = engine.query({k: v[:1] for k, v in feats.items()}, k=5)
+    # catch-up replayed the missed suffix before the replica served
+    assert replica.catchups == 1 and replica.caught_up_batches == 3
+    assert replica.applied_seq == engine.seq
+    assert set(replica.gus.store._rows) == set(engine.gus.store._rows)
+    assert replica.hedges == 1             # it answered this query
+    assert res.ids.shape == (1, 5)
+
+
+def test_revived_replica_rebootstraps_from_snapshot(world):
+    """When the log no longer reaches back (a snapshot truncated it), the
+    rejoining replica restores the snapshot corpus first, then replays."""
+    engine, faults, feats = _fleet(world, n_replicas=1, snapshot_every=2)
+    replica = engine.replica_set.members[0]
+    faults.kill(0)
+    stream = MutationStream(DATA, StreamConfig(batch_size=16, seed=22),
+                            bootstrap_fraction=0.5)
+    for _, mb in zip(range(3), stream):    # snapshot after 2, 1 in log
+        engine.submit_mutations(mb)
+    assert engine.seq_base == 2 and replica.applied_seq < engine.seq_base
+    faults.revive(0)
+    engine.query({k: v[:1] for k, v in feats.items()}, k=5)
+    assert replica.applied_seq == engine.seq
+    assert set(replica.gus.store._rows) == set(engine.gus.store._rows)
+
+
+def test_partitioned_replica_excluded_until_heal(world):
+    engine, faults, feats = _fleet(world, n_replicas=1, hedge_ms=-1.0,
+                                   snapshot_every=1000)
+    replica = engine.replica_set.members[0]
+    q = {k: v[:1] for k, v in feats.items()}
+    faults.partition(0)
+    stream = MutationStream(DATA, StreamConfig(batch_size=16, seed=23),
+                            bootstrap_fraction=0.5)
+    engine.submit_mutations(next(iter(stream)))
+    engine.query(q, k=5)                   # hedge finds no eligible replica
+    assert engine.hedged == 1
+    assert engine.replica_hedges == [0]    # partitioned: stale, excluded
+    assert engine.primary.served == 1      # reissued against the primary
+    faults.heal(0)
+    engine.query(q, k=5)                   # heal + catch-up: eligible again
+    assert engine.replica_hedges == [1]
+    assert replica.applied_seq == engine.seq

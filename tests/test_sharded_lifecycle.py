@@ -305,3 +305,121 @@ def test_resplit_rebalances_hot_shard():
     # identical placement policy => identical occupancy as a fresh build
     assert res["shard_live_split"] == res["shard_live_fresh"]
     assert res["search_equal"]
+
+
+# ------------------------------------------------- query-load re-split
+
+def test_query_load_counters_accumulate(corpus):
+    """search() charges each returned candidate to the partition it was
+    served from; build() resets the counters (fresh observation window)."""
+    ids, emb, gen = corpus
+    idx = ShardedGusIndex(gen.k_max, ShardedConfig(**BASE))
+    idx.build(ids, emb)
+    assert int(idx.query_load.sum()) == 0          # build queries nothing
+    idx.search(emb[:16], 6)
+    charged = int(idx.query_load.sum())
+    assert charged > 0                             # hits were accounted
+    occ = idx.occupancy()
+    assert len(occ["shard_load"]) == 1
+    assert occ["shard_load"][0] == charged
+    assert occ["load_imbalance"] == 1.0            # one shard: no skew
+    idx.build(ids[:100], emb[:100])                # rebuild resets
+    assert int(idx.query_load.sum()) == 0
+
+
+def test_resplit_rejects_unknown_metric(corpus):
+    ids, emb, gen = corpus
+    idx = ShardedGusIndex(gen.k_max, ShardedConfig(**BASE))
+    idx.build(ids[:100], emb[:100])
+    with pytest.raises(ValueError, match="resplit by"):
+        idx.resplit(1.5, by="qps")
+    with pytest.raises(ValueError, match="resplit_by"):
+        ShardedGusIndex(gen.k_max, ShardedConfig(**BASE, resplit_by="qps"))
+
+
+@pytest.mark.slow
+def test_resplit_by_query_load_moves_hot_read_shard():
+    """Regression for the load-blind trigger: a 2-shard mesh whose
+    *occupancy* is balanced but whose read traffic all lands on shard 0.
+    The occupancy trigger must see nothing; the query-load trigger must
+    move the hot shard's rows, reset the counters, and keep every answer
+    identical (re-split is placement-only)."""
+    code = textwrap.dedent("""
+        import dataclasses, json
+        import numpy as np
+        import jax.numpy as jnp
+        from repro.ann.sharded_index import ShardedConfig, ShardedGusIndex
+        from repro.core import BucketConfig, hashing
+        from repro.core.embedding import EmbeddingGenerator
+        from repro.data.synthetic import OGB_ARXIV_LIKE, make_dataset
+
+        data = dataclasses.replace(OGB_ARXIV_LIKE, n_points=400,
+                                   n_clusters=2)
+        _, feats, cluster = make_dataset(data)
+        gen = EmbeddingGenerator.create(
+            data.spec, BucketConfig(dense_tables=8, dense_bits=10,
+                                    scalar_widths=(2.0,)))
+        emb = gen(feats)
+        # occupancy-balanced, read-skewed placement: cluster-0 points get
+        # ids hashing to shard 0 under salt 3, cluster-1 points ids
+        # hashing to shard 1 -- equal counts per shard, but queries drawn
+        # from cluster 0 only ever hit shard 0's rows
+        cand = np.arange(1, 200_000, dtype=np.int64)
+        h = np.asarray(hashing.uhash(3, jnp.asarray(cand, jnp.uint32)))
+        to0 = cand[(h % np.uint32(2)) == 0]
+        to1 = cand[(h % np.uint32(2)) == 1]
+        m = min(len(np.flatnonzero(cluster == 0)),
+                len(np.flatnonzero(cluster == 1)), 150)
+        assert m >= 60, m
+        rows0 = np.flatnonzero(cluster == 0)[:m]
+        rows1 = np.flatnonzero(cluster == 1)[:m]
+        ids = np.concatenate([to0[:m], to1[:m]])
+        order = np.concatenate([rows0, rows1])
+
+        cfg = ShardedConfig(n_shards=2, d_proj=32, n_partitions=8,
+                            nprobe_local=0, reorder=4096, pq_m=4,
+                            kmeans_iters=4, pq_iters=2)
+        idx = ShardedGusIndex(gen.k_max, cfg)
+        idx.build(ids, emb[order])
+        occ0 = idx.occupancy()
+
+        q = emb[rows0[:min(32, m)]]               # cluster-0 reads only
+        _, d_before = idx.search(q, 6)
+        occ1 = idx.occupancy()
+        by_occupancy = idx.resplit(1.5, by="occupancy")
+        by_load = idx.resplit(1.5, by="load")
+        _, d_after = idx.search(q, 6)
+        occ2 = idx.occupancy()
+        print(json.dumps({
+            "shard_live": occ0["shard_live"],
+            "occ_imbalance": occ0["shard_imbalance"],
+            "load_imbalance": occ1["load_imbalance"],
+            "by_occupancy": by_occupancy,
+            "by_load": by_load,
+            "salt": idx.salt,
+            "aged_out": occ2["aged_out"],
+            "load_after_reset": occ2["shard_load"],
+            "search_equal": bool(np.allclose(
+                np.sort(d_before, -1), np.sort(d_after, -1), atol=1e-4)),
+        }))
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    # the trap this test pins: occupancy is balanced, so the old trigger
+    # sees nothing to do...
+    assert res["occ_imbalance"] < 1.5
+    assert res["by_occupancy"] == 0
+    # ...while the read traffic is almost entirely on shard 0
+    assert res["load_imbalance"] > 1.5
+    assert res["by_load"] > 0                     # load trigger moved it
+    assert res["salt"] == 4
+    assert res["aged_out"] == 0
+    assert res["search_equal"]                    # placement-only change
+    # counters reset after a load-driven move: the search after the split
+    # is the only charge left
+    assert sum(res["load_after_reset"]) > 0

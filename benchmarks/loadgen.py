@@ -33,9 +33,9 @@ from __future__ import annotations
 import dataclasses
 import time
 
-import numpy as np
-
+from repro.obs import latency_breakdown
 from repro.serve.frontend import Frontend, Response
+from repro.utils.timing import percentiles
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,14 +66,14 @@ class LoadgenReport:
     query_p95_ms: float
     query_p99_ms: float
     frontend: dict               # Frontend.stats() at the end of the run
+    # per-stage latency split reconstructed from the traces the run
+    # collected (obs.latency_breakdown): queue_wait / service / hedge_wait
+    # percentiles. None when tracing was off for the whole run.
+    breakdown: dict | None = None
 
     def row(self) -> dict:
         return {k: v for k, v in dataclasses.asdict(self).items()
-                if k != "frontend"}
-
-
-def _percentile(samples: list, q: float) -> float:
-    return float(np.percentile(np.asarray(samples), q)) if samples else 0.0
+                if k not in ("frontend", "breakdown")}
 
 
 def run_loadgen(frontend: Frontend, stream, cfg: LoadgenConfig,
@@ -107,6 +107,9 @@ def run_loadgen(frontend: Frontend, stream, cfg: LoadgenConfig,
             accepted_rids.add(resp.rid)
         return resp
 
+    # traces finished before the run started are someone else's (warmup):
+    # the breakdown covers only traces this run collects
+    traces_before = set(map(id, frontend.obs.tracer.finished))
     t0 = clock()
     steps = 0
     if cfg.mode == "open":
@@ -151,12 +154,16 @@ def run_loadgen(frontend: Frontend, stream, cfg: LoadgenConfig,
     n_shed = sum(1 for r in terminal if r.shed)
     n_err = sum(1 for r in terminal if r.status == "error")
     n_done = len(done_rids)
+    q_pct = percentiles(q_lat)
+    traces = [t for t in frontend.obs.tracer.finished
+              if id(t) not in traces_before]
     return LoadgenReport(
         issued=issued, accepted=len(accepted_rids), shed=n_shed,
         completed=n_done - n_err, errors=n_err, lost=lost,
         duration_s=duration, achieved_qps=n_done / duration,
         shed_rate=n_shed / max(issued, 1),
-        query_p50_ms=_percentile(q_lat, 50),
-        query_p95_ms=_percentile(q_lat, 95),
-        query_p99_ms=_percentile(q_lat, 99),
-        frontend=frontend.stats())
+        query_p50_ms=q_pct.get("p50_ms", 0.0),   # {} when no query was ok
+        query_p95_ms=q_pct.get("p95_ms", 0.0),
+        query_p99_ms=q_pct.get("p99_ms", 0.0),
+        frontend=frontend.stats(),
+        breakdown=latency_breakdown(traces) if traces else None)

@@ -141,8 +141,8 @@ def run_pipeline(dataset: str = "arxiv", n: int = 2400, batches: int = 24,
         q_pipe += q
 
     ratio = best["sync"] / best["pipe"]
-    p50_sync = float(np.percentile(q_sync, 50))
-    p50_pipe = float(np.percentile(q_pipe, 50))
+    p50_sync = percentiles(q_sync)["p50_ms"]
+    p50_pipe = percentiles(q_pipe)["p50_ms"]
     interference = p50_pipe / p50_sync
     out = {
         "dataset": dataset, "backend": backend, "batch_size": batch_size,

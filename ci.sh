@@ -55,6 +55,10 @@ fi
 BENCH_TARGET="${BENCH_JSON:-BENCH_pr.json}"
 export BENCH_JSON="$BENCH_TARGET.tmp"
 rm -f "$BENCH_JSON"
+# exporter output vs. the docs/OBSERVABILITY.md instrument catalog: every
+# documented metric registered, no undocumented metrics (covers f-string
+# names the static OBS1 lint rule can't see)
+python tools/check_metrics.py
 python -m benchmarks.latency --smoke
 python -m benchmarks.graph_maintenance --smoke
 python -m benchmarks.mutations --pipeline --smoke

@@ -77,6 +77,7 @@ from repro.ann.sparse import count_sketch
 from repro.core import hashing
 from repro.core.types import PAD_INDEX, SparseBatch
 from repro.launch.mesh import make_gus_mesh, mesh_context
+from repro.obs import Telemetry
 from repro.utils import pow2_pad
 
 _PAD_ID = 0xFFFFFFFF  # reserved: mutation-batch padding, never a point id
@@ -177,6 +178,45 @@ class ShardedGusIndex:
         self.compact_s = 0.0                 # wall-clock spent compacting
         self.aged_out = 0                    # ids lost to ring wrap (0 when
         #                                      auto_compact is on)
+        # standalone indexes get a private telemetry plane; an engine
+        # rebinds its primary's index into the shared one (bind_telemetry)
+        self.obs = Telemetry()
+        self._bind_instruments()
+
+    def _bind_instruments(self) -> None:
+        reg = self.obs.registry
+        self._c_compactions = reg.counter(
+            "index_compactions_total", "slab compactions run")
+        self._c_reclaimed = reg.counter(
+            "index_reclaimed_slots_total", "dead slots squeezed out")
+        self._c_compacted_rows = reg.counter(
+            "index_compacted_rows_total", "live rows moved by compactions")
+        self._c_slab_grows = reg.counter(
+            "index_slab_grows_total", "slab doublings")
+        self._c_resplits = reg.counter(
+            "index_resplits_total", "skew re-splits")
+        self._c_moved_points = reg.counter(
+            "index_moved_points_total", "points re-hashed by re-splits")
+        self._c_aged_out = reg.counter(
+            "index_aged_out_total", "ids lost to ring wrap")
+        self._h_compact = reg.histogram(
+            "index_compact_ms", "wall-clock per compaction")
+        self._h_search = reg.histogram(
+            "index_search_ms", "device fan-out/merge time per search call")
+        # carry lifetime counts already accumulated into the new registry
+        self._c_compactions.inc(self.compactions)
+        self._c_reclaimed.inc(self.reclaimed)
+        self._c_compacted_rows.inc(self.compacted_rows)
+        self._c_slab_grows.inc(self.slab_grows)
+        self._c_resplits.inc(self.resplits)
+        self._c_aged_out.inc(self.aged_out)
+
+    def bind_telemetry(self, telemetry: Telemetry) -> None:
+        """Join a shared telemetry plane (the engine binds its primary's
+        index so slab-lifecycle instruments export through the plane's
+        registry; lifetime counts so far transfer over)."""
+        self.obs = telemetry
+        self._bind_instruments()
 
     def __len__(self) -> int:
         return len(self.row_of)
@@ -445,6 +485,7 @@ class ShardedGusIndex:
                     old = int(self.id_of_row[row])
                     if old >= 0 and old != pid:
                         self.aged_out += 1             # ring buffer wrapped
+                        self._c_aged_out.inc()
                         for other in self.row_of.pop(old, ()):
                             if other != row:
                                 self.id_of_row[other] = -1
@@ -545,10 +586,17 @@ class ShardedGusIndex:
         self._cursor = live.astype(np.int64)
         n_live = int(live.sum())
         reclaimed = max(occupied - n_live, 0)
+        dt = time.perf_counter() - t0
         self.compactions += 1
         self.compacted_rows += n_live
         self.reclaimed += reclaimed
-        self.compact_s += time.perf_counter() - t0
+        self.compact_s += dt
+        self._c_compactions.inc()
+        self._c_compacted_rows.inc(n_live)
+        self._c_reclaimed.inc(reclaimed)
+        self._h_compact.observe(dt * 1e3)
+        self.obs.events.emit("compaction", live_rows=n_live,
+                             reclaimed=reclaimed)
         return {"live_rows": n_live, "reclaimed": reclaimed}
 
     def _grow_slab(self) -> None:
@@ -591,6 +639,8 @@ class ShardedGusIndex:
         self._tombstone = jax.jit(make_delete_step(self.mesh, cell))
         self._compact_step = jax.jit(make_compact_step(self.mesh, cell))
         self.slab_grows += 1
+        self._c_slab_grows.inc()
+        self.obs.events.emit("slab_grow", slab=int(self.slab))
 
     def resplit(self, imbalance: float | None = None,
                 by: str | None = None) -> int:
@@ -662,6 +712,9 @@ class ShardedGusIndex:
         self.delete(move)
         self.upsert(np.asarray(move, np.int64), emb)
         self.resplits += 1
+        self._c_resplits.inc()
+        self._c_moved_points.inc(len(move))
+        self.obs.events.emit("resplit", moved=len(move), salt=self.salt)
         return len(move)
 
     def maintenance_pressure(self, n_rows: int) -> bool:
@@ -714,6 +767,13 @@ class ShardedGusIndex:
     def search(self, emb: SparseBatch, k: int):
         """Top-k (ids [B,k], dists [B,k]); padding id=-1, dist=+inf."""
         assert self.trained, "build() the index before searching it"
+        t_search = time.perf_counter()
+        with self.obs.tracer.span("shard_search", batch=emb.batch, k=k):
+            out = self._search(emb, k)
+        self._h_search.observe((time.perf_counter() - t_search) * 1e3)
+        return out
+
+    def _search(self, emb: SparseBatch, k: int):
         cfg = self.cfg
         b = emb.batch
         cell = self._cell()

@@ -3,6 +3,11 @@ workload through the engine, and report paper-style latency percentiles.
 
     PYTHONPATH=src python -m repro.launch.serve --dataset arxiv \
         --points 5000 --mutations 50 --queries 200
+
+``--metrics {json,prom,full}`` dumps the telemetry plane at the end
+(registry snapshot / Prometheus text / full ``GusEngine.telemetry()``
+with lifecycle events and trace stats); ``--trace-every N`` sets the
+request-trace sampling rate. Catalog: docs/OBSERVABILITY.md.
 """
 from __future__ import annotations
 
@@ -91,6 +96,16 @@ def main():
     ap.add_argument("--pipeline", action="store_true",
                     help="async double-buffered write path "
                          "(serve.pipeline.MutationPipeline)")
+    ap.add_argument("--metrics", choices=("json", "prom", "full"),
+                    default=None,
+                    help="dump the telemetry plane after the run: 'json' "
+                         "(registry snapshot), 'prom' (Prometheus text "
+                         "exposition), 'full' (GusEngine.telemetry(): "
+                         "metrics + lifecycle events + trace stats)")
+    ap.add_argument("--trace-every", type=int, default=None,
+                    help="trace sampling rate (0 = off, 1 = every "
+                         "request, N = every Nth; default: obs package "
+                         "default)")
     args = ap.parse_args()
 
     if args.shards > len(jax.devices()):
@@ -102,6 +117,8 @@ def main():
         idf_size=args.idf_size, filter_percent=args.filter_percent,
         backend=args.backend, shards=args.shards, replicas=args.replicas,
         engine_cfg=EngineConfig(pipeline=args.pipeline))
+    if args.trace_every is not None:
+        engine.obs.tracer.sample_every = args.trace_every
     print(f"[serve] bootstrapped {len(engine.gus.index)} points")
 
     for i, batch in zip(range(args.mutations), stream):
@@ -117,6 +134,12 @@ def main():
                   f"same-cluster={np.mean(same):.2f}")
     engine.flush()
     print(json.dumps(engine.stats(), indent=1, default=str))
+    if args.metrics == "prom":
+        print(engine.obs.registry.to_prometheus())
+    elif args.metrics == "json":
+        print(engine.obs.registry.to_json(indent=1))
+    elif args.metrics == "full":
+        print(json.dumps(engine.telemetry(), indent=1, default=str))
 
 
 if __name__ == "__main__":

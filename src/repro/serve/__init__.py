@@ -15,7 +15,13 @@
                 points, bit-identical to the synchronous path — the
                 module doc lists the window-closing rules);
   serve_step.py — jitted prefill/decode steps for the LM scorer path.
+
+Every component reports through one ``repro.obs.Telemetry`` plane per
+engine (metrics registry + sampled request traces + lifecycle events);
+``GusEngine.telemetry()`` snapshots it and ``launch/serve.py --metrics``
+prints it. The instrument catalog lives in docs/OBSERVABILITY.md.
 """
+from repro.obs import Telemetry
 from repro.serve.serve_step import make_decode_step, make_prefill_step
 from repro.serve.engine import (GusEngine, EngineConfig,
                                 ServingUnavailableError)

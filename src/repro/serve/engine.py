@@ -44,6 +44,7 @@ path and catches lagging members up first).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Sequence
@@ -52,11 +53,12 @@ import numpy as np
 
 from repro.core.gus import DynamicGUS
 from repro.core.types import MutationBatch, NeighborResult
+from repro.obs import Telemetry
 from repro.serve.faults import FaultInjector
 from repro.serve.pipeline import MutationPipeline, PipelineConfig
 from repro.serve.replica import Replica, ReplicaSet
 from repro.utils import pow2_pad
-from repro.utils.timing import Timer, percentiles
+from repro.utils.timing import percentiles
 
 
 class ServingUnavailableError(RuntimeError):
@@ -82,10 +84,43 @@ class EngineConfig:
 class GusEngine:
     def __init__(self, gus: DynamicGUS, cfg: EngineConfig = EngineConfig(),
                  replicas: Sequence[DynamicGUS] = (),
-                 faults: FaultInjector | None = None):
+                 faults: FaultInjector | None = None,
+                 telemetry: Telemetry | None = None):
         self.gus = gus
         self.cfg = cfg
         self.faults = faults or FaultInjector()
+        # one telemetry plane per engine, shared with the front-end, the
+        # mutation pipelines, and the primary's sharded index so every
+        # instrument exports through a single registry
+        self.obs = telemetry if telemetry is not None else Telemetry()
+        reg = self.obs.registry
+        self._c_queries = reg.counter(
+            "engine_queries_total", "queries answered by the engine")
+        self._c_hedges = reg.counter(
+            "engine_hedges_total", "queries reissued past the hedge deadline")
+        self._c_failovers = reg.counter(
+            "engine_failovers_total", "queries failed over off the primary")
+        self._c_unavailable = reg.counter(
+            "engine_unavailable_total", "queries no eligible member could serve")
+        self._c_batches = reg.counter(
+            "engine_mutation_batches_total", "mutation batches committed")
+        self._c_snapshots = reg.counter(
+            "engine_snapshots_total", "snapshots taken")
+        self._c_catchups = reg.counter(
+            "engine_catchups_total", "freshness catch-ups completed")
+        self._c_catchup_batches = reg.counter(
+            "engine_catchup_batches_total", "log batches replayed in catch-up")
+        self._g_seq = reg.gauge(
+            "engine_seq", "committed mutation-batch sequence")
+        # per-request effective latency (hedges + injected straggler ms)
+        self.serving = reg.histogram(
+            "engine_serving_ms", "per-request effective serving latency")
+        self.freshness = reg.histogram(
+            "engine_freshness_ms", "mutation submit-to-visible latency")
+        self.service = reg.histogram(
+            "engine_service_ms", "first eligible member's answer time")
+        self.hedge_wait = reg.histogram(
+            "engine_hedge_wait_ms", "extra wait on hedged reissues")
         self.primary = Replica("primary", gus, key=FaultInjector.PRIMARY)
         self.replica_set = ReplicaSet(
             [Replica(f"replica:{i}", g, key=i)
@@ -94,18 +129,34 @@ class GusEngine:
         self.pipelines: list[MutationPipeline] = []
         if cfg.pipeline:
             pcfg = PipelineConfig(repair_per_tick=cfg.repair_per_tick)
-            self.pipelines = [MutationPipeline(g, pcfg)
+            self.pipelines = [MutationPipeline(g, pcfg, telemetry=self.obs)
                               for g in (gus, *replicas)]
+        bind = getattr(gus.index, "bind_telemetry", None)
+        if callable(bind):
+            bind(self.obs)           # sharded backend joins the registry
         self.mutation_log: list[MutationBatch] = []
         self.log_since_snapshot = 0
         self.snapshot_state: dict | None = None
         self.seq = 0                 # committed mutation-batch sequence
         self.seq_base = 0            # sequence at the log's first entry
-        self.freshness = Timer("freshness")
-        self.serving = Timer("serving")   # per-request effective latency
-        self.hedged = 0
-        self.failovers = 0
-        self.queries = 0
+        # health transitions observed so far (name -> (alive, partitioned));
+        # _sync_health emits replica_down/up/partitioned/healed on change
+        self._known_health = {m.name: (True, False)
+                              for m, _ in self._members()}
+
+    # read-only views over the registry counters: the attribute API the
+    # tests and benchmarks pin (engine.hedged etc.) stays intact
+    @property
+    def queries(self) -> int:
+        return self._c_queries.value
+
+    @property
+    def hedged(self) -> int:
+        return self._c_hedges.value
+
+    @property
+    def failovers(self) -> int:
+        return self._c_failovers.value
 
     # ----------------------------------------------------- replica plumbing
 
@@ -129,10 +180,25 @@ class GusEngine:
 
     def _sync_health(self) -> None:
         """Mirror the fault injector's scripted state into the members'
-        health flags (the injector is the script; Replica is the record)."""
+        health flags (the injector is the script; Replica is the record).
+        Transitions emit structured events (``replica_down`` / ``_up`` /
+        ``_partitioned`` / ``_healed``) so chaos tests can assert why."""
         for member, _ in self._members():
-            member.alive = not self.faults.killed(member.key)
-            member.partitioned = self.faults.partitioned(member.key)
+            alive = not self.faults.killed(member.key)
+            part = self.faults.partitioned(member.key)
+            prev_alive, prev_part = self._known_health.get(
+                member.name, (True, False))
+            if alive != prev_alive:
+                self.obs.events.emit(
+                    "replica_up" if alive else "replica_down",
+                    member=member.name, seq=self.seq)
+            if part != prev_part:
+                self.obs.events.emit(
+                    "replica_partitioned" if part else "replica_healed",
+                    member=member.name, seq=self.seq)
+            self._known_health[member.name] = (alive, part)
+            member.alive = alive
+            member.partitioned = part
 
     def _eligible(self, member: Replica) -> bool:
         return self.replica_set.eligible(member, self.seq)
@@ -146,6 +212,8 @@ class GusEngine:
         self._sync_health()
         t0 = time.perf_counter()
         self.seq += 1
+        self._c_batches.inc()
+        self._g_seq.set(self.seq)
         for member, pipe in self._members():
             if not member.alive or member.partitioned:
                 continue                      # falls behind; catch_up later
@@ -197,12 +265,19 @@ class GusEngine:
                 start = 0
             else:
                 start = member.applied_seq - self.seq_base
+            rebootstrapped = start == 0 and member.applied_seq < self.seq_base
             for mb in self.mutation_log[start:]:
                 member.gus.mutate(mb)
                 replayed += 1
             member.caught_up_batches += len(self.mutation_log) - start
             member.applied_seq = self.seq
             member.catchups += 1
+            self._c_catchups.inc()
+            self._c_catchup_batches.inc(len(self.mutation_log) - start)
+            self.obs.events.emit(
+                "catch_up", member=member.name, seq=self.seq,
+                batches=len(self.mutation_log) - start,
+                rebootstrapped=rebootstrapped)
         return replayed
 
     # -------------------------------------------------------------- queries
@@ -213,57 +288,93 @@ class GusEngine:
         the deadline; fail-over when the primary cannot serve; explicit
         ``ServingUnavailableError`` when nobody can. Injected straggler
         latency is added to measured time (never slept) so hedging and
-        the recorded serving latency respond to faults deterministically."""
-        self.queries += 1
-        self._sync_health()
-        self.flush()              # read-your-writes across the async path
-        self.catch_up()           # lagging members rejoin before serving
-        n = next(iter(features.values())).shape[0]
-        padded = pow2_pad(n, self.cfg.query_batch)
-        feats = {key: np.concatenate(
-            [v, np.repeat(v[-1:], padded - n, axis=0)], axis=0)
-            if padded > n else v for key, v in features.items()}
-        res, total_ms = self._route(feats, k)
-        self.serving.record(total_ms / 1e3)
-        return NeighborResult(ids=res.ids[:n], weights=res.weights[:n],
-                              distances=res.distances[:n])
+        the recorded serving latency respond to faults deterministically.
 
-    def _timed_answer(self, member: Replica, feats, k):
+        Tracing: when a caller (the front-end) has already activated a
+        trace, the engine's spans attach to it; when called directly the
+        engine owns a trace of its own for the sampled request."""
+        self._c_queries.inc()
+        tracer = self.obs.tracer
+        owned = None
+        if tracer.active is None:
+            owned = tracer.trace("engine")
+        ctx = (tracer.activate(owned) if owned is not None
+               else contextlib.nullcontext())
+        try:
+            with ctx, tracer.span("engine_query"):
+                with tracer.span("flush"):
+                    self._sync_health()
+                    self.flush()  # read-your-writes across the async path
+                with tracer.span("catch_up"):
+                    self.catch_up()   # lagging members rejoin first
+                n = next(iter(features.values())).shape[0]
+                padded = pow2_pad(n, self.cfg.query_batch)
+                feats = {key: np.concatenate(
+                    [v, np.repeat(v[-1:], padded - n, axis=0)], axis=0)
+                    if padded > n else v for key, v in features.items()}
+                with tracer.span("route"):
+                    res, total_ms = self._route(feats, k)
+                self.serving.observe(total_ms)
+                return NeighborResult(
+                    ids=res.ids[:n], weights=res.weights[:n],
+                    distances=res.distances[:n])
+        finally:
+            if owned is not None:
+                tracer.collect(owned)
+
+    def _timed_answer(self, member: Replica, feats, k,
+                      span: str = "answer_primary"):
         """One member's answer + its effective latency (measured plus any
-        injected straggler ms)."""
+        injected straggler ms; the injected part lands in the span's
+        ``extra_ms`` meta, never in its wall-clock bounds)."""
         t0 = time.perf_counter()
         res = member.gus.neighbors(feats, k)
-        elapsed_ms = (time.perf_counter() - t0) * 1e3
-        return res, elapsed_ms + self.faults.extra_ms(member.key)
+        t1 = time.perf_counter()
+        extra_ms = self.faults.extra_ms(member.key)
+        self.obs.tracer.add_span(span, t0, t1, member=member.name,
+                                 extra_ms=extra_ms)
+        return res, (t1 - t0) * 1e3 + extra_ms
 
     def _route(self, feats, k):
         if self._eligible(self.primary):
-            res, elapsed_ms = self._timed_answer(self.primary, feats, k)
+            res, elapsed_ms = self._timed_answer(
+                self.primary, feats, k, "answer_primary")
+            self.service.observe(elapsed_ms)
             if elapsed_ms <= self.cfg.hedge_ms:
                 self.primary.served += 1
                 return res, elapsed_ms
-            self.hedged += 1
+            self._c_hedges.inc()
+            self.obs.events.emit("hedge", primary_ms=elapsed_ms,
+                                 seq=self.seq)
             replica = self.replica_set.pick(self.seq)
             if replica is not None:
-                res, r_ms = self._timed_answer(replica, feats, k)
+                res, r_ms = self._timed_answer(
+                    replica, feats, k, "answer_hedge")
+                self.hedge_wait.observe(r_ms)
                 replica.hedges += 1
                 replica.served += 1
                 return res, elapsed_ms + r_ms
             # no eligible replica fleet: reissue against the primary
-            res, r_ms = self._timed_answer(self.primary, feats, k)
+            res, r_ms = self._timed_answer(
+                self.primary, feats, k, "answer_hedge")
+            self.hedge_wait.observe(r_ms)
             self.primary.served += 1
             return res, elapsed_ms + r_ms
         # primary down/stale: fail over to the replica group
         replica = self.replica_set.pick(self.seq)
         if replica is None:
+            self._c_unavailable.inc()
+            self.obs.events.emit("unavailable", seq=self.seq)
             raise ServingUnavailableError(
                 "no eligible member: primary "
                 f"{self.primary.stats()}, replicas "
                 f"{self.replica_set.stats()}")
-        res, r_ms = self._timed_answer(replica, feats, k)
+        res, r_ms = self._timed_answer(replica, feats, k, "answer_failover")
+        self.service.observe(r_ms)
         replica.failovers += 1
         replica.served += 1
-        self.failovers += 1
+        self._c_failovers.inc()
+        self.obs.events.emit("failover", member=replica.name, seq=self.seq)
         return res, r_ms
 
     # ------------------------------------------------------ fault tolerance
@@ -292,6 +403,9 @@ class GusEngine:
         self.mutation_log.clear()
         self.seq_base = self.seq
         self.log_since_snapshot = 0
+        self._c_snapshots.inc()
+        self.obs.events.emit("snapshot", seq=self.seq,
+                             rows=len(ids))
 
     @staticmethod
     def _restore_gus(gus: DynamicGUS, snapshot_state: dict) -> None:
@@ -339,6 +453,12 @@ class GusEngine:
         return eng
 
     # --------------------------------------------------------------- stats
+
+    def telemetry(self) -> dict:
+        """One self-describing snapshot of the plane: every registry
+        instrument, the retained lifecycle events, and trace-sampling
+        stats (``launch/serve.py --metrics`` prints this)."""
+        return self.obs.snapshot()
 
     def stats(self) -> dict:
         out = {

@@ -55,9 +55,36 @@ from collections import deque
 import numpy as np
 
 from repro.core.types import MutationBatch, NeighborResult
+from repro.obs import Telemetry
 from repro.serve.engine import GusEngine, ServingUnavailableError
 from repro.serve.faults import FaultInjector
-from repro.utils.timing import Timer
+
+
+class _ClassCounts:
+    """Mapping view over per-class registry counters: reads and ``dict()``
+    behave like the plain ``{"query": n, "mutate": n}`` dicts the tests
+    pin, while every increment lands in the shared registry."""
+
+    def __init__(self, counters: dict):
+        self._counters = counters
+
+    def __getitem__(self, kind: str) -> int:
+        return self._counters[kind].value
+
+    def inc(self, kind: str, n: int = 1) -> None:
+        self._counters[kind].inc(n)
+
+    def keys(self):
+        return self._counters.keys()
+
+    def __iter__(self):
+        return iter(self._counters)
+
+    def values(self):
+        return [c.value for c in self._counters.values()]
+
+    def items(self):
+        return [(k, c.value) for k, c in self._counters.items()]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,24 +137,69 @@ class Frontend:
     def __init__(self, engine: GusEngine,
                  cfg: FrontendConfig = FrontendConfig(),
                  faults: FaultInjector | None = None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter,
+                 telemetry: Telemetry | None = None):
         self.engine = engine
         self.cfg = cfg
         # share the engine's injector unless the caller scripts another
         self.faults = faults or engine.faults
         self.clock = clock
+        # join the engine's telemetry plane: one registry per plane
+        self.obs = telemetry if telemetry is not None else engine.obs
+        reg = self.obs.registry
+        self.accepted = _ClassCounts({
+            k: reg.counter(f"frontend_accepted_{k}_total",
+                           f"{k} requests admitted")
+            for k in ("query", "mutate")})
+        self.shed = _ClassCounts({
+            k: reg.counter(f"frontend_shed_{k}_total",
+                           f"{k} requests shed at admission")
+            for k in ("query", "mutate")})
+        self.completed = _ClassCounts({
+            k: reg.counter(f"frontend_completed_{k}_total",
+                           f"{k} requests answered ok")
+            for k in ("query", "mutate")})
+        self._c_shed_capacity = reg.counter(
+            "frontend_shed_capacity_total", "sheds from a full queue")
+        self._c_shed_backpressure = reg.counter(
+            "frontend_shed_backpressure_total",
+            "mutate sheds from unflushed-write backpressure")
+        self._c_errors = reg.counter(
+            "frontend_errors_total", "accepted requests answered error")
+        self._c_steps = reg.counter(
+            "frontend_steps_total", "scheduling rounds run")
+        self._g_depth = {
+            k: reg.gauge(f"frontend_queue_depth_{k}",
+                         f"current {k} queue depth")
+            for k in ("query", "mutate")}
+        self._g_high_water = {
+            k: reg.gauge(f"frontend_queue_high_water_{k}",
+                         f"max {k} queue depth observed")
+            for k in ("query", "mutate")}
+        self.query_latency = reg.histogram(
+            "frontend_query_latency_ms", "admission-to-answer, query class")
+        self.mutate_latency = reg.histogram(
+            "frontend_mutate_latency_ms", "admission-to-ack, mutate class")
+        self._queue_wait = {
+            k: reg.histogram(f"frontend_queue_wait_{k}_ms",
+                             f"admission-to-dispatch wait, {k} class")
+            for k in ("query", "mutate")}
         self._queues: dict[str, deque] = {"query": deque(),
                                           "mutate": deque()}
         self._rid = 0
         self._unflushed_rows = 0      # mutate rows dispatched, not flushed
-        self.steps = 0
-        self.accepted = {"query": 0, "mutate": 0}
-        self.shed = {"query": 0, "mutate": 0}
-        self.completed = {"query": 0, "mutate": 0}
-        self.errors = 0
-        self.queue_high_water = {"query": 0, "mutate": 0}
-        self.query_latency = Timer("frontend_query")
-        self.mutate_latency = Timer("frontend_mutate")
+
+    @property
+    def steps(self) -> int:
+        return self._c_steps.value
+
+    @property
+    def errors(self) -> int:
+        return self._c_errors.value
+
+    @property
+    def queue_high_water(self) -> dict:
+        return {k: int(g.value) for k, g in self._g_high_water.items()}
 
     # ------------------------------------------------------------ admission
 
@@ -138,19 +210,25 @@ class Frontend:
         limit = (self.cfg.query_queue if req.kind == "query"
                  else self.cfg.mutate_queue)
         if len(self._queues[req.kind]) >= limit:
-            self.shed[req.kind] += 1
+            self.shed.inc(req.kind)
+            self._c_shed_capacity.inc()
+            self.obs.events.emit("admission_shed", request=req.kind,
+                                 reason="capacity", rid=req.rid)
             return Response(req.rid, req.kind, "shed_capacity",
                             detail=f"queue at bound {limit}")
         if req.kind == "mutate" and self._backlog() > self.cfg.max_unflushed:
-            self.shed[req.kind] += 1
+            self.shed.inc(req.kind)
+            self._c_shed_backpressure.inc()
+            self.obs.events.emit("admission_shed", request=req.kind,
+                                 reason="backpressure", rid=req.rid)
             return Response(req.rid, req.kind, "shed_backpressure",
                             detail=f"unflushed backlog {self._backlog()} > "
                                    f"{self.cfg.max_unflushed}")
         q = self._queues[req.kind]
         q.append(req)
-        self.accepted[req.kind] += 1
-        self.queue_high_water[req.kind] = max(
-            self.queue_high_water[req.kind], len(q))
+        self.accepted.inc(req.kind)
+        self._g_depth[req.kind].set(len(q))
+        self._g_high_water[req.kind].max(len(q))
         return Response(req.rid, req.kind, "accepted")
 
     def _backlog(self) -> int:
@@ -189,12 +267,14 @@ class Frontend:
         visible to this round's queries via the engine's flush), then a
         fused query batch. Returns the terminal responses completed this
         round, in dispatch (= admission) order per class."""
-        self.steps += 1
+        self._c_steps.inc()
         out: list[Response] = []
         if not self.faults.consume_hold("mutate"):
             out += self._dispatch_mutations()
         if not self.faults.consume_hold("query"):
             out += self._dispatch_queries()
+        for kind, q in self._queues.items():
+            self._g_depth[kind].set(len(q))
         return out
 
     def drain(self, max_steps: int = 100_000) -> list[Response]:
@@ -212,11 +292,13 @@ class Frontend:
         q = self._queues["mutate"]
         for _ in range(min(self.cfg.mutate_dispatch, len(q))):
             req = q.popleft()
+            wait_ms = max(self.clock() - req.arrival_s, 0.0) * 1e3
+            self._queue_wait["mutate"].observe(wait_ms)
             self.engine.submit_mutations(req.payload)
             self._unflushed_rows += req.rows
             lat = (self.clock() - req.arrival_s) * 1e3
-            self.mutate_latency.samples_ms.append(lat)
-            self.completed["mutate"] += 1
+            self.mutate_latency.observe(lat)
+            self.completed.inc("mutate")
             out.append(Response(req.rid, "mutate", "ok",
                                 result={"rows": req.rows}, latency_ms=lat))
         return out
@@ -240,16 +322,36 @@ class Frontend:
         feats = {key: np.concatenate(
             [np.asarray(r.payload[key]) for r in group], axis=0)
             for key in group[0].payload}
+        # one trace per fused dispatch group: queue_wait children are
+        # backdated per request (durations from the front-end's clock,
+        # anchored to the tracer clock — the clocks may differ), then the
+        # engine's spans nest under the same root
+        tracer = self.obs.tracer
+        trace = tracer.trace("request")
+        t_dispatch = self.clock()
+        waits_ms = [max(t_dispatch - r.arrival_s, 0.0) * 1e3 for r in group]
+        for w in waits_ms:
+            self._queue_wait["query"].observe(w)
+        if trace.sampled:
+            anchor = tracer.clock()
+            for req, w in zip(group, waits_ms):
+                trace.add_span("queue_wait", anchor - w / 1e3, anchor,
+                               rid=req.rid)
+            trace.annotate(n_requests=len(group), k=group[0].k)
         try:
-            res = self.engine.query(feats, group[0].k)
+            with tracer.activate(trace):
+                res = self.engine.query(feats, group[0].k)
         except ServingUnavailableError as exc:
             # explicit rejection for every request in the fused batch —
             # an unavailable plane must never silently drop a ticket
-            self.errors += len(group)
+            trace.annotate(error=str(exc))
+            tracer.collect(trace)
+            self._c_errors.inc(len(group))
             now = self.clock()
             return [Response(r.rid, "query", "error", detail=str(exc),
                              latency_ms=(now - r.arrival_s) * 1e3)
                     for r in group]
+        tracer.collect(trace)
         # any engine query flushes the async write path: backlog drains
         self._unflushed_rows = 0
         now = self.clock()
@@ -259,8 +361,8 @@ class Frontend:
             sl = slice(lo, lo + n)
             lo += n
             lat = (now - req.arrival_s) * 1e3
-            self.query_latency.samples_ms.append(lat)
-            self.completed["query"] += 1
+            self.query_latency.observe(lat)
+            self.completed.inc("query")
             out.append(Response(
                 req.rid, "query", "ok", latency_ms=lat,
                 result=NeighborResult(ids=res.ids[sl],

@@ -85,6 +85,7 @@ import numpy as np
 
 from repro.core.gus import DynamicGUS, StagedMutation
 from repro.core.types import MutationBatch, MUTATION_DELETE
+from repro.obs import Telemetry
 from repro.utils.timing import Timer
 
 
@@ -116,9 +117,27 @@ class MutationPipeline:
     """Double-buffered write path over a ``DynamicGUS`` (see module doc)."""
 
     def __init__(self, gus: DynamicGUS,
-                 cfg: PipelineConfig = PipelineConfig()):
+                 cfg: PipelineConfig = PipelineConfig(),
+                 telemetry: Telemetry | None = None):
         self.gus = gus
         self.cfg = cfg
+        # plane-wide instruments (the engine shares one Telemetry across
+        # its per-member pipelines, so these aggregate the whole write
+        # path; the per-pipeline stats() view keeps its own counts)
+        self.obs = telemetry if telemetry is not None else Telemetry()
+        reg = self.obs.registry
+        self._c_submitted = reg.counter(
+            "pipeline_submitted_total", "mutation points acknowledged")
+        self._c_windows = reg.counter(
+            "pipeline_windows_total", "fused windows encoded")
+        self._c_ticks = reg.counter(
+            "pipeline_ticks_total", "completed hand-offs")
+        self._c_repaired = reg.counter(
+            "pipeline_repaired_total", "graph repair re-queries drained")
+        self._h_encode = reg.histogram(
+            "pipeline_encode_ms", "stage-A fused encode dispatch time")
+        self._h_handoff = reg.histogram(
+            "pipeline_handoff_ms", "stage-B hand-off (apply + barrier)")
         self._queue: list[MutationBatch] = []     # accumulating window
         self._queue_ids: set = set()              # upserted ids staged
         self._inflight: StagedMutation | None = None
@@ -188,13 +207,19 @@ class MutationPipeline:
         if self._queue and (has_del or updates_live or pressure
                             or len(self._queue) >= self.window_size()
                             or (up_ids & self._queue_ids)):
-            self._close_window()
+            self._close_window(
+                "delete" if has_del
+                else "updates_live" if updates_live
+                else "pressure" if pressure
+                else "window_full" if len(self._queue) >= self.window_size()
+                else "duplicate_ids")
         self._queue.append(batch)
         self._queue_ids |= up_ids
         self._queued_rows += len(up_ids)
         self.submitted += int(ids.size)
+        self._c_submitted.inc(int(ids.size))
         if has_del or pressure:       # deletes / wrap risk apply alone
-            self._close_window()
+            self._close_window("delete" if has_del else "pressure")
         return int(ids.size)
 
     def flush(self) -> None:
@@ -205,12 +230,16 @@ class MutationPipeline:
         self._close_window()
         self._handoff()
 
-    def _close_window(self) -> None:
+    def _close_window(self, reason: str = "flush") -> None:
         """Stage A for the accumulated window: fuse, encode (dispatch
         only), then hand off the previous window and park this one as
-        in-flight."""
+        in-flight. ``reason`` names the window-closing rule that fired
+        (the ``window_close`` structured event)."""
         if not self._queue:
             return
+        self.obs.events.emit("window_close", reason=reason,
+                             batches=len(self._queue),
+                             rows=self._queued_rows)
         if self._maintain is not None:
             # synchronous-schedule re-split: apply the previous window,
             # then let the policy fire before this window's encode
@@ -222,14 +251,17 @@ class MutationPipeline:
         self._queue = []
         self._queue_ids = set()
         self._queued_rows = 0
-        t0 = time.perf_counter()
-        staged = self.gus.encode_mutation(fused)
-        t_encode = time.perf_counter() - t0
+        with self.obs.tracer.span("encode", batches=len(fused.ids)):
+            t0 = time.perf_counter()
+            staged = self.gus.encode_mutation(fused)
+            t_encode = time.perf_counter() - t0
         self.encode_timer.record(t_encode)
+        self._h_encode.record(t_encode)
         # mutation latency in pipelined mode = the stage-A dispatch; the
         # window's apply/barrier overlaps later submits (handoff timer)
         self.gus.mutation_timer.record(t_encode)
         self.windows += 1
+        self._c_windows.inc()
         self._handoff()
         self._inflight = staged
         self._inflight_ids = queue_ids
@@ -242,7 +274,8 @@ class MutationPipeline:
         self._inflight = None
         self._inflight_ids = set()
         self._inflight_rows = 0
-        with self.handoff_timer:
+        with self.obs.tracer.span("handoff"), self.handoff_timer, \
+                self._h_handoff:
             # stage B: the encode results dispatched at window close have
             # had the whole in-flight window to compute — materializing
             # them (inside apply) no longer waits on the device
@@ -251,9 +284,12 @@ class MutationPipeline:
             if self.gus.graph is not None:
                 with self.gus.graph_timer:
                     self.gus.graph_apply(staged, reuse_emb=True)
-                    self.repaired += self.gus.flush_graph_repair(
+                    repaired = self.gus.flush_graph_repair(
                         self.cfg.repair_per_tick)
+                    self.repaired += repaired
+                    self._c_repaired.inc(repaired)
         self.ticks += 1
+        self._c_ticks.inc()
 
     def stats(self) -> dict:
         out = {

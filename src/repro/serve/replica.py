@@ -23,6 +23,16 @@ freshness). A revived or healed replica becomes eligible again only
 after the engine's catch-up replays the mutation-log suffix it missed
 (``GusEngine.catch_up``), which restores ``applied_seq`` to the
 committed sequence.
+
+Telemetry split (``repro.obs``): the registry carries **plane-level**
+aggregates only (``engine_failovers_total`` etc. — no per-member label
+cardinality by design); the per-member counts here are routing state and
+stay on the dataclass, surfaced through ``stats()``. Member-attributed
+history lives in the structured event log instead: health transitions
+(``replica_down`` / ``replica_up`` / ``replica_partitioned`` /
+``replica_healed``), ``failover``, and ``catch_up`` events all name the
+member, so chaos tests can assert *which* replica carried a request and
+why without per-member metric series.
 """
 from __future__ import annotations
 

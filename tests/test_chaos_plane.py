@@ -87,31 +87,56 @@ def test_chaos_closed_loop_single_device(world):
         return rep
 
     r0, r1 = engine.replica_set.members
+    events = engine.obs.events                     # lifecycle event log
     phase("healthy")
+    assert events.events("replica_down") == []     # healthy plane: no churn
 
     # -- replica 0 dies: it must not answer anything while down
     faults.kill(0)
     served_dead = r0.served
     faults.slow(FaultInjector.PRIMARY, 200.0)      # force hedging traffic
+    mark, hedged_before = events.seq, engine.hedged
     phase("replica-dead+straggler")
     assert r0.served == served_dead                # zero answers while dead
     assert engine.hedged > 0 and r1.hedges > 0     # survivors carried it
+    # the death was observed and attributed, and hedges left a record
+    downs = events.events("replica_down", since=mark)
+    assert [e["member"] for e in downs] == ["replica:0"]
+    assert len(events.events("hedge", since=mark)) \
+        == engine.hedged - hedged_before
 
     # -- partition replica 1: up, but stale -> excluded from hedging
     faults.partition(1)
     hedges_part = r1.hedges
+    mark = events.seq
     phase("partitioned")
     assert r1.hedges == hedges_part                # stale: never eligible
     assert engine.primary.served > 0               # primary reissues
+    parts = events.events("replica_partitioned", since=mark)
+    assert [e["member"] for e in parts] == ["replica:1"]
 
     # -- heal + revive: both rejoin through freshness catch-up
     faults.heal(1)
     faults.revive(0)
     faults.clear_slow(FaultInjector.PRIMARY)
+    mark = events.seq
     phase("recovered")
     assert r0.applied_seq == engine.seq            # caught up before serving
     assert r1.applied_seq == engine.seq
     assert r0.catchups >= 1 and r1.catchups >= 1
+    # rejoin causality: up/healed transitions, then catch-up replays that
+    # name the member and account for every missed batch
+    assert [e["member"] for e in events.events("replica_up", since=mark)] \
+        == ["replica:0"]
+    assert [e["member"]
+            for e in events.events("replica_healed", since=mark)] \
+        == ["replica:1"]
+    catch_ups = {e["member"]: e for e in events.events("catch_up",
+                                                       since=mark)}
+    assert {"replica:0", "replica:1"} <= set(catch_ups)
+    assert all(e["batches"] >= 1 and e["seq"] <= engine.seq
+               for e in catch_ups.values())
+    assert not catch_ups["replica:1"]["rebootstrapped"]   # log reached back
 
     # -- post-recovery: revived replicas serve hedged traffic again
     faults.slow(FaultInjector.PRIMARY, 200.0)

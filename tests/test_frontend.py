@@ -207,6 +207,58 @@ def test_pipelined_frontend_equals_sync_path(world):
                                       results[True][rid].distances)
 
 
+# -------------------------------------------------- telemetry reconciliation
+
+def test_registry_counters_reconcile_with_admission_accounting(world):
+    """The registry-backed instruments (docs/OBSERVABILITY.md) are the
+    same counts the admission contract pins: after randomized traffic,
+    accepted == completed + errors per class, the shed-reason split sums
+    to the shed totals, every shed emitted an ``admission_shed`` event,
+    and the engine counted exactly the dispatched query groups."""
+    fe = _frontend(world, FrontendConfig(query_queue=6, mutate_queue=3,
+                                         query_dispatch=2,
+                                         mutate_dispatch=1))
+    stream = _stream(seed=3)
+    rng = np.random.default_rng(7)
+    issued = {"query": 0, "mutate": 0}
+    for _ in range(180):
+        op = rng.integers(3)
+        if op == 0:
+            fe.submit_query(stream.query_features(1), k=4)
+            issued["query"] += 1
+        elif op == 1:
+            fe.submit_mutation(next(stream))
+            issued["mutate"] += 1
+        else:
+            fe.step()
+    fe.drain()
+
+    reg = fe.obs.registry
+    val = lambda name: reg.get(name).value                  # noqa: E731
+    for kind in ("query", "mutate"):
+        assert fe.accepted[kind] + fe.shed[kind] == issued[kind]
+        assert val(f"frontend_accepted_{kind}_total") == fe.accepted[kind]
+        assert val(f"frontend_shed_{kind}_total") == fe.shed[kind]
+        # drained: every accepted request reached a terminal response
+        assert (val(f"frontend_completed_{kind}_total")
+                + (val("frontend_errors_total") if kind == "query" else 0)
+                == fe.accepted[kind])
+        assert reg.get(f"frontend_queue_wait_{kind}_ms").count \
+            == fe.completed[kind]
+        assert reg.get("frontend_queue_depth_" + kind).value == 0
+    # the shed-reason split covers every shed, 1:1 with emitted events
+    total_shed = fe.shed["query"] + fe.shed["mutate"]
+    assert val("frontend_shed_capacity_total") \
+        + val("frontend_shed_backpressure_total") == total_shed
+    assert len(fe.obs.events.events("admission_shed")) == total_shed
+    # the engine shares the plane: one engine_queries count per group,
+    # bounded by [completed/dispatch, completed]
+    assert fe.obs is fe.engine.obs
+    assert val("engine_queries_total") == fe.engine.queries
+    assert 0 < fe.engine.queries <= fe.completed["query"]
+    assert reg.get("frontend_query_latency_ms").count == fe.completed["query"]
+
+
 # ------------------------------------------------------------ fault hooks
 
 def test_delay_batch_holds_dispatch_rounds(world):

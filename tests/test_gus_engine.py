@@ -189,6 +189,78 @@ def test_engine_on_sharded_backend(world):
     assert engine.stats()["freshness"]["n"] == 1
 
 
+# ------------------------------------------------------- span-tree tracing
+
+def _trace_names(trace):
+    return [s.name for s in trace.spans]
+
+
+def test_query_trace_well_formed_under_hedge(world):
+    """With always-on sampling, a hedged query leaves one well-formed
+    span tree: engine-owned root, flush/catch_up/route stages, the
+    primary answer carrying the injected straggler ms in metadata (not
+    the bounds), and the hedged reissue."""
+    ids, feats, cluster, scorer = world
+    primary, replica = _gus(scorer), _gus(scorer)
+    for g in (primary, replica):
+        _boot(g, ids, feats)
+    faults = FaultInjector()
+    engine = GusEngine(primary, EngineConfig(hedge_ms=50.0),
+                       replicas=[replica], faults=faults)
+    engine.obs.tracer.sample_every = 1
+    faults.slow(FaultInjector.PRIMARY, 500.0)
+    engine.query({k: v[:1] for k, v in feats.items()}, k=5)
+    tr = engine.obs.tracer.finished[-1]
+    assert tr.problems() == []
+    names = _trace_names(tr)
+    assert names[0] == "engine"                       # engine owned the root
+    for stage in ("engine_query", "flush", "catch_up", "route"):
+        assert stage in names
+    primary_span = tr.find("answer_primary")[0]
+    assert primary_span.meta["member"] == "primary"
+    assert primary_span.meta["extra_ms"] == 500.0     # injected, not slept
+    assert primary_span.effective_ms >= 500.0
+    hedge_span = tr.find("answer_hedge")[0]
+    assert hedge_span.meta["member"] == "replica:0"
+    # stage spans nest under the query span, answers under route
+    route_idx = names.index("route")
+    assert tr.spans[route_idx].parent == names.index("engine_query")
+    assert tr.spans[names.index("answer_hedge")].parent == route_idx
+
+
+def test_query_trace_well_formed_under_failover(world):
+    ids, feats, cluster, scorer = world
+    primary, replica = _gus(scorer), _gus(scorer)
+    for g in (primary, replica):
+        _boot(g, ids, feats)
+    faults = FaultInjector()
+    engine = GusEngine(primary, EngineConfig(), replicas=[replica],
+                       faults=faults)
+    engine.obs.tracer.sample_every = 1
+    faults.kill(FaultInjector.PRIMARY)
+    engine.query({k: v[:1] for k, v in feats.items()}, k=5)
+    tr = engine.obs.tracer.finished[-1]
+    assert tr.problems() == []
+    assert tr.find("answer_primary") == []            # primary never answered
+    fo = tr.find("answer_failover")[0]
+    assert fo.meta["member"] == "replica:0"
+    ev = engine.obs.events.last("failover")
+    assert ev["member"] == "replica:0" and ev["seq"] == engine.seq
+
+
+def test_unsampled_queries_leave_no_traces(world):
+    ids, feats, cluster, scorer = world
+    gus = _gus(scorer)
+    _boot(gus, ids, feats)
+    engine = GusEngine(gus)
+    engine.obs.tracer.sample_every = 0
+    for _ in range(3):
+        engine.query({k: v[:1] for k, v in feats.items()}, k=5)
+    assert len(engine.obs.tracer.finished) == 0
+    assert engine.obs.tracer.started == 3             # decisions still taken
+    assert engine.queries == 3                        # counters always on
+
+
 # ---------------------------------------- _drop_self / neighbors_of_ids
 
 def test_drop_self_with_duplicate_candidate_ids():

@@ -1,0 +1,118 @@
+"""Validate the exported instrument set against docs/OBSERVABILITY.md.
+
+Registration is eager (at component construction), so building one full
+serving plane — sharded primary index, pipelined engine, front-end —
+materialises every instrument the plane can ever export, without traffic.
+This check (run by ci.sh alongside the smokes) asserts the catalog tables
+in docs/OBSERVABILITY.md and ``MetricsRegistry.names()`` are the SAME
+set, both directions:
+
+  * every documented metric is registered (the doc can't go stale), and
+  * every registered metric is documented (no drive-by instruments —
+    including f-string-built names that tools/lint.py rule OBS1 can't
+    see statically).
+
+It then round-trips both exporters: every name appears as a Prometheus
+metric family with # HELP / # TYPE lines, and the JSON snapshot parses
+back to the same keys.
+
+    PYTHONPATH=src python tools/check_metrics.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+import sys
+from pathlib import Path
+
+CATALOG = Path(__file__).resolve().parent.parent / "docs" / "OBSERVABILITY.md"
+# a backticked instrument name in a catalog table row: `engine_seq` etc.
+ROW_RE = re.compile(r"^\|\s*`([a-z][a-z0-9_]*)`\s*\|\s*(counter|gauge|histogram)\s*\|")
+
+
+def documented() -> dict[str, str]:
+    """name -> kind from the '## Instrument catalog' tables."""
+    text = CATALOG.read_text()
+    try:
+        section = text.split("## Instrument catalog", 1)[1]
+    except IndexError:
+        sys.exit(f"{CATALOG}: no '## Instrument catalog' section")
+    # the catalog runs until the next top-level section (## Tracing)
+    section = re.split(r"\n## ", section, 1)[0]
+    out = {}
+    for line in section.splitlines():
+        m = ROW_RE.match(line.strip())
+        if m:
+            out[m.group(1)] = m.group(2)
+    return out
+
+
+def registered():
+    """Build one full serving plane; return its engine (registry bound)."""
+    import jax
+
+    from repro.ann.sharded_index import ShardedConfig
+    from repro.core import BucketConfig, DynamicGUS, GusConfig
+    from repro.core.scorer import train_scorer
+    from repro.data.synthetic import OGB_ARXIV_LIKE, labeled_pairs, make_dataset
+    from repro.serve.engine import EngineConfig, GusEngine
+    from repro.serve.frontend import Frontend
+
+    data = dataclasses.replace(OGB_ARXIV_LIKE, n_points=120, n_clusters=4)
+    ids, feats, cluster = make_dataset(data)
+    pf, lbl = labeled_pairs(feats, cluster, 200, data.spec, seed=1)
+    scorer, _ = train_scorer(jax.random.PRNGKey(0), data.spec, pf, lbl,
+                             steps=5)
+    bcfg = BucketConfig(dense_tables=8, dense_bits=10, scalar_widths=(2.0,))
+    gus = DynamicGUS(data.spec, bcfg, scorer, GusConfig(
+        scann_nn=10, backend="sharded",
+        sharded=ShardedConfig(n_shards=1, n_partitions=16, d_proj=32,
+                              pq_m=8)))
+    engine = GusEngine(gus, EngineConfig(pipeline=True))
+    Frontend(engine)                  # registers the frontend_* instruments
+    return engine
+
+
+def main() -> int:
+    doc = documented()
+    if not doc:
+        sys.exit(f"{CATALOG}: instrument catalog parsed empty")
+    engine = registered()
+    reg = engine.obs.registry
+    live = set(reg.names())
+
+    undocumented = sorted(live - set(doc))
+    stale = sorted(set(doc) - live)
+    problems = []
+    if undocumented:
+        problems.append("registered but missing from the catalog: "
+                        + ", ".join(undocumented))
+    if stale:
+        problems.append("documented but never registered: "
+                        + ", ".join(stale))
+    for name, kind in doc.items():
+        inst = reg.get(name)
+        if inst is not None and type(inst).__name__.lower() != kind:
+            problems.append(f"{name}: catalog says {kind}, registry has "
+                            f"{type(inst).__name__.lower()}")
+
+    prom = reg.to_prometheus()
+    for name in sorted(live):
+        if f"# TYPE {name} " not in prom or f"# HELP {name} " not in prom:
+            problems.append(f"{name}: missing HELP/TYPE in Prometheus output")
+    snap = json.loads(reg.to_json())
+    if set(snap) != live:
+        problems.append("JSON snapshot keys differ from registry names")
+
+    if problems:
+        print("\n".join(problems), file=sys.stderr)
+        print(f"\ncheck_metrics: {len(problems)} problem(s)", file=sys.stderr)
+        return 1
+    print(f"check_metrics: {len(live)} instruments match the catalog "
+          "(both directions, prom + json round-trip)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

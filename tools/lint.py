@@ -11,9 +11,17 @@ AST walk can check without third-party packages:
   F401  module-level import never used (skipped in __init__.py re-exports)
   W291/W293  trailing whitespace
   D100  missing module docstring — enforced for the serving-core packages
-        (src/repro/ann, src/repro/serve, src/repro/graph), where the
-        module docs carry the maintainer-facing invariants (fuse-window
-        closing rules, slab lifecycle, graph symmetry)
+        (src/repro/ann, src/repro/serve, src/repro/graph,
+        src/repro/obs), where the module docs carry the maintainer-facing
+        invariants (fuse-window closing rules, slab lifecycle, graph
+        symmetry, instrument naming)
+  OBS1  instrument name outside the documented namespace — literal names
+        passed to ``.counter()`` / ``.gauge()`` / ``.histogram()`` in the
+        telemetry-instrumented packages must be snake_case under a
+        component prefix (``frontend_`` / ``engine_`` / ``pipeline_`` /
+        ``index_`` / ``obs_``), with ``_total`` on counters and ``_ms``
+        on histograms (docs/OBSERVABILITY.md; f-string names are covered
+        at runtime by tools/check_metrics.py instead)
 
 When ruff itself is installed (the GitHub Actions lane installs it),
 ci.sh prefers it for the style subset but still runs this module with
@@ -24,6 +32,7 @@ off the table.
 from __future__ import annotations
 
 import ast
+import re
 import sys
 from pathlib import Path
 
@@ -31,7 +40,14 @@ LINE_LIMIT = 100
 SKIP_DIRS = {".git", "__pycache__", ".ruff_cache", ".pytest_cache"}
 # packages whose modules must carry a docstring (D100): the serving core,
 # where module docs are the canonical home of cross-file invariants
-DOCSTRING_DIRS = ("src/repro/ann", "src/repro/serve", "src/repro/graph")
+DOCSTRING_DIRS = ("src/repro/ann", "src/repro/serve", "src/repro/graph",
+                  "src/repro/obs")
+# packages whose registry instruments must stay in the documented
+# namespace (OBS1); sharded_index.py registers index_* from ann
+INSTRUMENT_DIRS = ("src/repro/obs", "src/repro/serve", "src/repro/ann")
+INSTRUMENT_RE = re.compile(
+    r"^(frontend|engine|pipeline|index|obs)_[a-z][a-z0-9_]*$")
+INSTRUMENT_SUFFIX = {"counter": "_total", "histogram": "_ms"}
 
 
 def _module_imports(tree: ast.Module) -> dict[str, ast.stmt]:
@@ -81,6 +97,38 @@ def _needs_docstring(path: Path, root: Path) -> bool:
     return any(rel == d or rel.startswith(d + "/") for d in DOCSTRING_DIRS)
 
 
+def _in_dirs(path: Path, root: Path, dirs) -> bool:
+    rel = path.relative_to(root).as_posix()
+    return any(rel == d or rel.startswith(d + "/") for d in dirs)
+
+
+def instrument_problems(tree: ast.Module, path: Path) -> list[str]:
+    """OBS1: literal instrument names registered via ``.counter()`` /
+    ``.gauge()`` / ``.histogram()`` must follow the documented namespace
+    (component prefix, snake_case, kind suffix)."""
+    problems = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("counter", "gauge", "histogram")
+                and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[0].value, str)):
+            continue
+        name = node.args[0].value
+        kind = node.func.attr
+        if not INSTRUMENT_RE.match(name):
+            problems.append(
+                f"{path}:{node.lineno}: OBS1 instrument {name!r} outside "
+                "the documented namespace (component-prefixed snake_case)")
+        suffix = INSTRUMENT_SUFFIX.get(kind)
+        if suffix and not name.endswith(suffix):
+            problems.append(
+                f"{path}:{node.lineno}: OBS1 {kind} {name!r} must end "
+                f"with {suffix!r}")
+    return problems
+
+
 def docstring_problems(path: Path) -> list[str]:
     """D100 for one file: a module (or package __init__) docstring."""
     try:
@@ -123,6 +171,8 @@ def lint_file(path: Path, root: Path | None = None) -> list[str]:
                                         "comparison to bool (use `is`)")
         elif isinstance(node, ast.ExceptHandler) and node.type is None:
             problems.append(f"{path}:{node.lineno}: E722 bare except")
+    if root is not None and _in_dirs(path, root, INSTRUMENT_DIRS):
+        problems.extend(instrument_problems(tree, path))
     if path.name != "__init__.py":          # re-export surface is exempt
         imports = _module_imports(tree)
         used = _used_names(tree)

@@ -63,7 +63,7 @@ def run(dataset: str = "arxiv", n: int = 1500, batches: int = 12,
     gus.bootstrap(bids, bfeats)
     boot_s = time.perf_counter() - t0
     emit(f"graph_bootstrap_{dataset}_n{len(bids)}", boot_s * 1e6,
-         f"edges={gus.graph.stats()['edges']}")
+         f"edges={gus.graph.describe()['edges']}")
 
     recalls, cc_exact, cc_iters = [], [], []
     for i, batch in zip(range(batches), stream):

@@ -65,7 +65,7 @@ class LoadgenReport:
     query_p50_ms: float
     query_p95_ms: float
     query_p99_ms: float
-    frontend: dict               # Frontend.stats() at the end of the run
+    frontend: dict               # Frontend.describe() at the end of the run
     # per-stage latency split reconstructed from the traces the run
     # collected (obs.latency_breakdown): queue_wait / service / hedge_wait
     # percentiles. None when tracing was off for the whole run.
@@ -165,5 +165,5 @@ def run_loadgen(frontend: Frontend, stream, cfg: LoadgenConfig,
         query_p50_ms=q_pct.get("p50_ms", 0.0),   # {} when no query was ok
         query_p95_ms=q_pct.get("p95_ms", 0.0),
         query_p99_ms=q_pct.get("p99_ms", 0.0),
-        frontend=frontend.stats(),
+        frontend=frontend.describe(),
         breakdown=latency_breakdown(traces) if traces else None)

@@ -19,6 +19,7 @@ import numpy as np
 from benchmarks.common import BUCKET_CFG, DATASETS, corpus, emit, record_metric
 from repro.ann.scann import ScannConfig
 from repro.ann.sharded_index import ShardedConfig
+from repro.core.maintenance import MaintenanceConfig
 from repro.core import (DynamicGUS, GusConfig, MutationBatch,
                         MUTATION_DELETE, MUTATION_INSERT, MUTATION_UPDATE)
 from repro.utils.timing import percentiles
@@ -168,6 +169,94 @@ def run_pipeline(dataset: str = "arxiv", n: int = 2400, batches: int = 24,
     return out
 
 
+# ------------------------------- concurrent maintenance plane (PR 8)
+
+def run_pipeline_with_graph(dataset: str = "arxiv", n: int = 2400,
+                            batches: int = 24, batch_size: int = 64,
+                            backend: str = "scann", bound: int = 8,
+                            trials: int = 2) -> dict:
+    """Pipelined vs. synchronous write path with the maintained graph ON.
+
+    The synchronous pass pays the inline per-batch graph tick the
+    ``staleness_bound == 0`` schedule demands; the pipelined pass runs
+    the concurrent maintenance plane (``staleness_bound = bound``),
+    which unpins the fuse window and defers graph ticks to the
+    ``MaintenanceWorker`` in fused windows. The flush barrier is inside
+    the pipelined clock, so the ratio reflects equal total work — the
+    win is window fusion, not dropped maintenance. Records the gated
+    ``pipeline_ratio_with_graph`` and the report-only
+    ``maintenance_offpath_ms`` (wall-clock of graph maintenance kept
+    off the serving path, from ``MaintenanceWorker.offpath_s``)."""
+    import dataclasses as _dc
+
+    from repro.data.stream import MutationStream, StreamConfig
+    from repro.graph.store import GraphConfig
+    from repro.serve.pipeline import MutationPipeline
+
+    ids, feats, cluster, spec, scorer, _ = corpus(dataset)
+    data_cfg = _dc.replace(DATASETS[dataset], n_points=n)
+    n_boot = n // 2
+    scfg = StreamConfig(batch_size=batch_size, seed=7,
+                        insert_frac=1.0, update_frac=0.0)
+    stream_batches = [b for _, b in zip(
+        range(batches), MutationStream(data_cfg, scfg,
+                                       bootstrap_fraction=0.5))]
+
+    def make(b):
+        cfg = _dc.replace(
+            _make_gus(backend), graph=GraphConfig(k=6, capacity=4096),
+            maintenance=MaintenanceConfig(staleness_bound=b))
+        gus = DynamicGUS(spec, BUCKET_CFG, scorer, cfg)
+        gus.bootstrap(ids[:n_boot], {k: v[:n_boot]
+                                     for k, v in feats.items()})
+        return gus
+
+    def sync_pass():
+        gus = make(0)
+        t0 = time.perf_counter()
+        for b in stream_batches:
+            gus.mutate(b)
+        return time.perf_counter() - t0
+
+    def pipe_pass():
+        gus = make(bound)
+        pipe = MutationPipeline(gus)
+        t0 = time.perf_counter()
+        for b in stream_batches:
+            pipe.submit(b)
+        pipe.flush()                     # equal total work: drain inside
+        return time.perf_counter() - t0, pipe
+
+    sync_pass()                          # warm-up: compile both paths
+    pipe_pass()
+    n_ops = sum(b.ids.size for b in stream_batches)
+    best = {"sync": float("inf"), "pipe": float("inf")}
+    pipe = None
+    for _ in range(trials):
+        best["sync"] = min(best["sync"], sync_pass())
+        t, pipe = pipe_pass()
+        best["pipe"] = min(best["pipe"], t)
+    ratio = best["sync"] / best["pipe"]
+    offpath_ms = pipe.worker.offpath_s * 1e3
+    out = {
+        "dataset": dataset, "backend": backend, "bound": bound,
+        "sync_ops_s": n_ops / best["sync"],
+        "pipe_ops_s": n_ops / best["pipe"],
+        "ratio_with_graph": ratio,
+        "maintenance_offpath_ms": offpath_ms,
+        "windows": pipe.windows, "ticks": pipe.worker.ticks,
+        "window_size": pipe.window_size(),
+    }
+    emit(f"mutations_pipeline_graph_{dataset}_{backend}_b{bound}",
+         best["pipe"] / len(stream_batches) * 1e6,
+         f"ratio={ratio:.2f};offpath_ms={offpath_ms:.1f};"
+         f"window={out['window_size']}")
+    record_metric("pipeline_ratio_with_graph", ratio, better="higher")
+    record_metric("maintenance_offpath_ms", offpath_ms, better="higher",
+                  portable=False)
+    return out
+
+
 # ------------------------------------------- slab lifecycle churn (PR 5)
 
 def run_churn(dataset: str = "arxiv", n_boot: int = 128, rounds: int = 16,
@@ -184,8 +273,9 @@ def run_churn(dataset: str = "arxiv", n_boot: int = 128, rounds: int = 16,
     ids, feats, cluster, spec, scorer, gen = corpus(dataset)
     emb = gen(feats)
     cfg = ShardedConfig(n_shards=1, d_proj=64, n_partitions=8, slab=64,
-                        slab_headroom=2.0, nprobe_local=0, reorder=2048,
-                        pq_m=8, kmeans_iters=6, pq_iters=3)
+                        nprobe_local=0, reorder=2048, pq_m=8,
+                        kmeans_iters=6, pq_iters=3,
+                        maintenance=MaintenanceConfig(headroom=2.0))
     idx = ShardedGusIndex(gen.k_max, cfg)
     idx.build(ids[:n_boot], emb[:n_boot])
     live = list(ids[:n_boot].tolist())
@@ -239,11 +329,14 @@ if __name__ == "__main__":
             print(run_pipeline("arxiv", n=1600, batches=12,
                                backend=args.backend, queries_every=1,
                                trials=2))
+            print(run_pipeline_with_graph("arxiv", n=1600, batches=12,
+                                          backend=args.backend, trials=2))
             print(run_churn("arxiv"))
         else:
             for backend in ("brute", "scann", "sharded"):
                 print(run_pipeline("arxiv", queries_every=2,
                                    backend=backend))
+            print(run_pipeline_with_graph("arxiv"))
             print(run_churn("arxiv", rounds=32))
     elif args.smoke:
         print(run("arxiv", n=1000, ops=60))

@@ -40,7 +40,7 @@ def main():
     bids, bfeats = stream.bootstrap()
     gus.bootstrap(bids, bfeats)
     engine = GusEngine(gus, EngineConfig(snapshot_every=5))
-    g = gus.graph.stats()
+    g = gus.graph.describe()
     print(f"bootstrapped: {g['nodes']} nodes, {g['edges']} edges, "
           f"{len(set(gus.graph.components().values()))} components")
 
@@ -48,7 +48,7 @@ def main():
         engine.submit_mutations(batch)
         if i % 5 == 4:
             comps = gus.graph.components()
-            g = gus.graph.stats()
+            g = gus.graph.describe()
             print(f"batch {i:3d}: nodes={g['nodes']:5d} edges={g['edges']:6d} "
                   f"components={len(set(comps.values())):3d} "
                   f"cc_rounds={g['cc_iters']}")
@@ -77,7 +77,7 @@ def main():
     same = {tuple(p) for p in p_old.tolist()} == \
         {tuple(p) for p in p_new.tolist()}
     print(f"recovered: {len(fresh.graph)} nodes, edge set identical: {same}")
-    print(json.dumps(engine.stats().get("graph", {}), indent=1,
+    print(json.dumps(engine.describe().get("graph", {}), indent=1,
                      default=str))
 
 

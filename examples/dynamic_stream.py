@@ -56,7 +56,7 @@ def main():
     engine2 = engine.recover(fresh)
     print(f"recovered engine: live={len(fresh.index)} "
           f"(was {len(engine.gus.index)})")
-    print(json.dumps(engine.stats(), indent=1, default=str))
+    print(json.dumps(engine.describe(), indent=1, default=str))
 
 
 if __name__ == "__main__":

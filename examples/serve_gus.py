@@ -48,7 +48,7 @@ def drive(engine, stream, cluster, requests: int, batch: int):
                     for r, q in enumerate(qids)
                     for n in res.ids[r] if n >= 0]
             quality.append(np.mean(same))
-    stats = engine.stats()
+    stats = engine.describe()
     stats["mean_same_cluster"] = float(np.mean(quality))
     return stats
 

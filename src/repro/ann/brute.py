@@ -145,6 +145,16 @@ class BruteIndex:
         self.valid = self.valid.at[sl].set(False)
         return len(slots)
 
+    # ------------------------------------------ persistence (SnapshotStateful)
+
+    def snapshot_state(self) -> dict:
+        """Nothing beyond the corpus: the exact index rebuilds from the
+        feature store on recovery with no routing state to carry."""
+        return {}
+
+    def restore_state(self, state: dict) -> None:
+        pass
+
     # -------------------------------------------------------------- queries
 
     def search(self, emb: SparseBatch, k: int):

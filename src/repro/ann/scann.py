@@ -369,6 +369,16 @@ class ScannIndex:
                 jnp.zeros((len(rows),), bool))
         return n_del
 
+    # ------------------------------------------ persistence (SnapshotStateful)
+
+    def snapshot_state(self) -> dict:
+        """Nothing beyond the corpus: partitions/codebooks retrain from
+        the feature store on recovery with no routing state to carry."""
+        return {}
+
+    def restore_state(self, state: dict) -> None:
+        pass
+
     # ------------------------------------------------------------- queries
 
     def search(self, emb: SparseBatch, k: int):

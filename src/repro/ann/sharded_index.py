@@ -33,7 +33,8 @@ Slab lifecycle (capacity is *maintained*, not silently recycled):
             the live count, and the host id -> rows map is remapped from
             the device-reported old-slot -> new-slot map. Stability makes
             search results **bit-identical** before/after compaction.
-            With ``auto_compact`` (default), ``begin_upsert`` compacts any
+            With ``maintenance.compact`` (default), ``begin_upsert``
+            compacts any
             slab an incoming chunk would wrap — and if live occupancy
             alone would still overflow, doubles the slab — so live rows
             never silently age out (``aged_out`` counts the rows the old
@@ -50,18 +51,29 @@ Slab lifecycle (capacity is *maintained*, not silently recycled):
 
 Fuse-window rule (the compaction boundary — see serve/pipeline.py): both
 compaction and slab growth move or re-home slots, so they must never land
-mid-fused-window. They only ever run inside ``begin_upsert`` — after the
-pending landing sites of the current call are materialized — and
-``maintenance_pressure()`` tells the pipeline when a wrap (hence a
-compaction) is possible so it can pin the fuse window to one batch; under
-pressure the pipelined schedule degenerates to exactly the synchronous
-per-batch schedule, keeping the two bit-identical
-(tests/test_pipeline.py::test_pipeline_compaction_boundary).
+with another window's landing sites still un-materialized. They only ever
+run inside ``begin_upsert`` — after the pending landing sites of the
+current call are materialized — which is safe at any fuse width. What
+``maintenance_pressure()`` buys depends on the maintenance plane
+(``MaintenanceConfig.staleness_bound``):
+
+  * bound == 0 (default): the pipeline closes its fuse window while
+    pressure holds, so the pipelined schedule degenerates to exactly the
+    synchronous per-batch schedule and stays bit-identical
+    (tests/test_pipeline.py::test_pipeline_compaction_boundary).
+  * bound > 0: windows stay fused under pressure; compaction triggers
+    inside ``begin_upsert`` mid-stream (correct, but on a different —
+    amortized — schedule than the sync path) and re-splits run off-path
+    at worker-drain boundaries. Every lifecycle step builds its
+    successor state fully before one atomic reference swap and bumps
+    ``version``; ``publish()`` names the current state as an immutable
+    `IndexVersion` so a holder never observes a half-built layout.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -75,12 +87,32 @@ from repro.ann.sharded import (GusCellConfig, index_specs, make_compact_step,
                                make_query_step)
 from repro.ann.sparse import count_sketch
 from repro.core import hashing
+from repro.core.maintenance import MaintenanceConfig, resolve_legacy
 from repro.core.types import PAD_INDEX, SparseBatch
 from repro.launch.mesh import make_gus_mesh, mesh_context
 from repro.obs import Telemetry
 from repro.utils import pow2_pad
 
 _PAD_ID = 0xFFFFFFFF  # reserved: mutation-batch padding, never a point id
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexVersion:
+    """An immutable published version of the slabs (the RCU read side).
+
+    ``state`` is captured by reference (the jnp arrays are immutable and
+    every lifecycle step rebinds a fresh dict rather than editing one);
+    ``id_of_row`` is copied because ``_materialize`` writes it in place.
+    A holder of an IndexVersion therefore keeps a self-consistent
+    translated view across later compactions / grows / re-splits."""
+
+    version: int
+    seq: int                      # last applied mutation batch reflected
+    state: dict
+    id_of_row: np.ndarray
+    salt: int
+    slab: int
+    points: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,29 +134,38 @@ class ShardedConfig:
     seed: int = 13
     merge: str = "flat"         # cross-shard candidate merge: "flat" | "hier"
     # ---- slab lifecycle -------------------------------------------------
-    # SOAR secondary-copy weight (< 0 disables; also disabled when a shard
-    # owns a single partition — no distinct secondary exists)
-    soar_lambda: float = 1.0
-    # compact (and, if live rows alone would overflow, double) a slab an
-    # incoming chunk would wrap, instead of silently overwriting old rows
-    auto_compact: bool = True
-    # build() sizes slabs to hold headroom * n_copies * corpus rows
-    slab_headroom: float = 8.0
-    # > 0: upsert() auto-triggers resplit() when max/mean per-shard skew
-    # exceeds this (0 = manual / engine-driven re-split only)
-    resplit_imbalance: float = 0.0
-    # skew metric the re-split trigger watches: "occupancy" (live rows
-    # per shard) or "load" (queries served per shard since the last
-    # load-driven re-split — catches hot shards that occupancy misses:
-    # balanced row counts, skewed read traffic)
-    resplit_by: str = "occupancy"
+    # Lifecycle knobs (SOAR weight, auto-compaction, slab headroom, skew
+    # re-splits) live on MaintenanceConfig; the fields below are one-release
+    # deprecation shims folded into ``maintenance`` by __post_init__.
+    soar_lambda: float | None = None           # legacy-ok
+    auto_compact: bool | None = None           # legacy-ok
+    slab_headroom: float | None = None         # legacy-ok
+    resplit_imbalance: float | None = None     # legacy-ok
+    resplit_by: str | None = None              # legacy-ok
     # replica group this index belongs to: its mesh is carved from the
     # pod'th disjoint device slice (launch.mesh.make_gus_mesh)
     pod: int = 0
+    maintenance: MaintenanceConfig | None = None
+
+    def __post_init__(self):
+        m = resolve_legacy(self.maintenance, {
+            "soar": ("ShardedConfig.soar_lambda", self.soar_lambda),         # legacy-ok
+            "compact": ("ShardedConfig.auto_compact", self.auto_compact),    # legacy-ok
+            "headroom": ("ShardedConfig.slab_headroom", self.slab_headroom),  # legacy-ok
+            "resplit":
+                ("ShardedConfig.resplit_imbalance", self.resplit_imbalance),  # legacy-ok
+            "resplit_metric": ("ShardedConfig.resplit_by", self.resplit_by),  # legacy-ok
+        })
+        object.__setattr__(self, "maintenance", m)
+        for old in ("soar_lambda", "auto_compact", "slab_headroom",
+                    "resplit_imbalance", "resplit_by"):
+            object.__setattr__(self, old, None)
 
     @property
     def use_soar(self) -> bool:
-        return (self.soar_lambda >= 0
+        # SOAR disabled when a shard owns a single partition — no distinct
+        # secondary exists
+        return (self.maintenance.soar >= 0
                 and self.n_partitions // max(self.n_shards, 1) > 1)
 
     @property
@@ -144,10 +185,6 @@ class ShardedGusIndex:
             raise ValueError(
                 f"d_proj={cfg.d_proj} must split into pq_m={cfg.pq_m} "
                 "subspaces")
-        if cfg.resplit_by not in ("occupancy", "load"):
-            raise ValueError(
-                f"resplit_by={cfg.resplit_by!r} must be 'occupancy' or "
-                "'load'")
         self.k_dims = k_dims
         self.cfg = cfg
         self.mesh = make_gus_mesh(cfg.n_shards,
@@ -169,6 +206,12 @@ class ShardedGusIndex:
         self._tombstone = None
         self._compact_step = None
         self._in_maintenance = False
+        # versioned publishing: every lifecycle step that re-homes slots
+        # (compaction, slab grow, re-split) builds its successor state
+        # fully before the atomic reference swap, then bumps `version`;
+        # publish() names the current state as an immutable IndexVersion
+        self.version = 0
+        self._published: IndexVersion | None = None
         # lifecycle counters (occupancy()/stats() surface them)
         self.compactions = 0
         self.slab_grows = 0
@@ -177,7 +220,7 @@ class ShardedGusIndex:
         self.compacted_rows = 0              # live rows moved by compactions
         self.compact_s = 0.0                 # wall-clock spent compacting
         self.aged_out = 0                    # ids lost to ring wrap (0 when
-        #                                      auto_compact is on)
+        #                                      maintenance.compact is on)
         # standalone indexes get a private telemetry plane; an engine
         # rebinds its primary's index into the shared one (bind_telemetry)
         self.obs = Telemetry()
@@ -236,7 +279,7 @@ class ShardedGusIndex:
             query_batch=query_batch or cfg.query_batch,
             mutate_batch=cfg.mutate_batch, top_k=top_k or 10,
             reorder=cfg.reorder, merge=cfg.merge,
-            soar_lambda=cfg.soar_lambda if cfg.use_soar else -1.0)
+            soar_lambda=cfg.maintenance.soar if cfg.use_soar else -1.0)
 
     def _sketch(self, emb: SparseBatch) -> jax.Array:
         return count_sketch(emb, self.cfg.d_proj, self.cfg.seed)
@@ -259,7 +302,7 @@ class ShardedGusIndex:
             jnp.asarray(self._centroids_np, jnp.float32),
             jnp.asarray(owners, jnp.int32),
             c_loc=cfg.n_partitions // cfg.n_shards,
-            soar_lambda=cfg.soar_lambda if cfg.use_soar else -1.0)
+            soar_lambda=cfg.maintenance.soar if cfg.use_soar else -1.0)
         return np.asarray(p1), (np.asarray(p2) if cfg.use_soar else None)
 
     def _query_step(self, padded: int, k: int):
@@ -294,7 +337,7 @@ class ShardedGusIndex:
         # n_copies times) with slab_headroom slack for churn
         slab = 64
         while slab * cfg.n_partitions < \
-                cfg.slab_headroom * cfg.n_copies * max(n, 1):
+                cfg.maintenance.headroom * cfg.n_copies * max(n, 1):
             slab *= 2
         self.slab = max(cfg.slab, slab)
         self._alloc(centroids, books)
@@ -342,7 +385,7 @@ class ShardedGusIndex:
         """Whether the skew re-split policy is armed. The async pipeline
         pins its fuse window to 1 while this holds and calls
         ``auto_resplit`` on the synchronous per-batch schedule."""
-        return self.cfg.resplit_imbalance > 0
+        return self.cfg.maintenance.resplit > 0
 
     def auto_resplit(self) -> int:
         """Policy trigger: re-split when the configured per-shard
@@ -351,7 +394,7 @@ class ShardedGusIndex:
         between a batch's encode and its append (``serve.pipeline`` calls
         it only at window boundaries, after the previous hand-off)."""
         if self.auto_resplit_on and self.trained:
-            return self.resplit(self.cfg.resplit_imbalance)
+            return self.resplit(self.cfg.maintenance.resplit)
         return 0
 
     # Two-phase mutate entry points (serve.pipeline double-buffers these).
@@ -438,7 +481,7 @@ class ShardedGusIndex:
             inc = np.bincount(p1[sel], minlength=cfg.n_partitions)
             if p2 is not None:
                 inc += np.bincount(p2[sel], minlength=cfg.n_partitions)
-            if cfg.auto_compact and np.any(self._cursor + inc > self.slab):
+            if cfg.maintenance.compact and np.any(self._cursor + inc > self.slab):
                 self._materialize(pending)
                 self.compact()
                 while np.any(self._live_per_partition() + inc > self.slab):
@@ -463,7 +506,7 @@ class ShardedGusIndex:
     def _materialize(self, pending) -> None:
         """Fold device-reported landing sites into the host id -> rows map,
         consuming ``pending`` in place. A ring overwrite (only possible
-        with ``auto_compact`` off) ages the overwritten id out: its
+        with ``maintenance.compact`` off) ages the overwritten id out: its
         surviving copies are tombstoned so no stale slot can serve."""
         if not pending:
             return
@@ -561,7 +604,7 @@ class ShardedGusIndex:
         assert self.trained, "build() the index before compacting it"
         t0 = time.perf_counter()
         with mesh_context(self.mesh):
-            self.state, new_pos = self._compact_step(self.state)
+            new_state, new_pos = self._compact_step(self.state)
         new_pos = np.asarray(new_pos)
         occupied = int(np.minimum(self._cursor, self.slab).sum())
         s = self.slab
@@ -574,16 +617,23 @@ class ShardedGusIndex:
             old_rows = np.asarray(list(self.row_of.values()), np.int64)
             parts, poss = np.divmod(old_rows, s)
             new_rows = parts * s + new_pos[parts, poss]
-            self.row_of = {int(p): tuple(r) for p, r in
-                           zip(pids.tolist(), new_rows.tolist())}
+            new_row_of = {int(p): tuple(r) for p, r in
+                          zip(pids.tolist(), new_rows.tolist())}
             new_id_of_row[new_rows.reshape(-1)] = np.repeat(
                 pids, new_rows.shape[1])
             live = np.bincount(new_rows.reshape(-1) // s,
                                minlength=self.cfg.n_partitions)
         else:
+            new_row_of = {}
             live = np.zeros((self.cfg.n_partitions,), np.int64)
+        # the successor version is fully built — swap every piece at once
+        # (a published IndexVersion captured before this point stays
+        # self-consistent; nothing half-built is ever observable)
+        self.state = new_state
+        self.row_of = new_row_of
         self.id_of_row = new_id_of_row
         self._cursor = live.astype(np.int64)
+        self.version += 1
         n_live = int(live.sum())
         reclaimed = max(occupied - n_live, 0)
         dt = time.perf_counter() - t0
@@ -625,15 +675,18 @@ class ShardedGusIndex:
                 st[key] = jax.device_put(
                     np.concatenate([np.asarray(st[key]), pad], axis=1),
                     NamedSharding(self.mesh, specs[key]))
-        self.state = st
         new_id_of_row = np.full((c * self.slab,), -1, np.int64)
+        new_row_of = {}
         for pid, rowvec in self.row_of.items():
             moved = tuple((r // old_s) * self.slab + (r % old_s)
                           for r in rowvec)
-            self.row_of[pid] = moved
+            new_row_of[pid] = moved
             for row in moved:
                 new_id_of_row[row] = pid
+        self.state = st
+        self.row_of = new_row_of
         self.id_of_row = new_id_of_row
+        self.version += 1
         self._query_steps = {}
         self._mutate = jax.jit(make_mutate_step(self.mesh, cell, self.salt))
         self._tombstone = jax.jit(make_delete_step(self.mesh, cell))
@@ -647,7 +700,7 @@ class ShardedGusIndex:
         """Skew re-split: re-hash the hottest shard's rows across the mesh.
 
         When per-shard skew (``max / mean``) exceeds ``imbalance``
-        (default ``cfg.resplit_imbalance`` or 2.0), the hottest shard's
+        (default ``maintenance.resplit`` or 2.0), the hottest shard's
         rows are read back from the slabs, the owner-hash salt is bumped
         (re-jitting the mutate program — the salt is a compile-time
         constant), and the rows re-insert through the ordinary
@@ -655,7 +708,7 @@ class ShardedGusIndex:
         never consult the owner hash, so rows placed under old salts
         remain exactly servable. Returns the number of points moved.
 
-        ``by`` picks the skew metric (default ``cfg.resplit_by``):
+        ``by`` picks the skew metric (default ``maintenance.resplit_metric``):
         ``"occupancy"`` watches live rows per shard; ``"load"`` watches
         queries served per shard since the last load-driven re-split —
         a shard can be occupancy-balanced yet serve most of the read
@@ -665,7 +718,7 @@ class ShardedGusIndex:
         path must flush it first (the engine does)."""
         assert self.trained, "build() the index before re-splitting it"
         cfg = self.cfg
-        by = by if by is not None else cfg.resplit_by
+        by = by if by is not None else cfg.maintenance.resplit_metric
         if by not in ("occupancy", "load"):
             raise ValueError(f"resplit by={by!r} must be 'occupancy' or "
                              "'load'")
@@ -674,7 +727,7 @@ class ShardedGusIndex:
         if cfg.n_shards < 2 or not self.row_of:
             return 0
         fac = imbalance if imbalance is not None \
-            else (cfg.resplit_imbalance or 2.0)
+            else (cfg.maintenance.resplit or 2.0)
         c_loc = cfg.n_partitions // cfg.n_shards
         metric = (self.query_load if by == "load"
                   else self._live_per_partition())
@@ -712,6 +765,7 @@ class ShardedGusIndex:
         self.delete(move)
         self.upsert(np.asarray(move, np.int64), emb)
         self.resplits += 1
+        self.version += 1
         self._c_resplits.inc()
         self._c_moved_points.inc(len(move))
         self.obs.events.emit("resplit", moved=len(move), salt=self.salt)
@@ -724,10 +778,50 @@ class ShardedGusIndex:
         this holds, so the pipelined schedule degenerates to the
         synchronous per-batch schedule exactly when slot movement is
         possible (the compaction-boundary rule)."""
-        if not self.trained or not self.cfg.auto_compact:
+        if not self.trained or not self.cfg.maintenance.compact:
             return False
         return bool(int(self._cursor.max())
                     + n_rows * self.cfg.n_copies > self.slab)
+
+    # ------------------------------------------------- versioned publishing
+
+    def publish(self, seq: int = -1) -> IndexVersion:
+        """Publish the current slabs as an immutable `IndexVersion`.
+
+        Device arrays are captured by reference (free), the host
+        ``id_of_row`` by copy; installing the version is one reference
+        assignment, so it can never be observed half-built. The
+        maintenance worker publishes after every off-path lifecycle step
+        (``snapshot_swap`` events carry the version)."""
+        self.version += 1
+        self._published = IndexVersion(
+            version=self.version, seq=seq, state=self.state,
+            id_of_row=(self.id_of_row.copy()
+                       if self.id_of_row is not None else None),
+            salt=self.salt, slab=int(self.slab), points=len(self.row_of))
+        return self._published
+
+    def published(self) -> IndexVersion | None:
+        """The latest published version (None before the first publish)."""
+        return self._published
+
+    # --------------------------------------------------------- persistence
+
+    def snapshot_state(self) -> dict:
+        """The host-side state the engine persists (`SnapshotStateful`).
+
+        The slabs themselves rebuild from the feature store on recovery;
+        what must survive is the owner-hash salt — mixed-salt placements
+        re-route identically only if recovery bumps to the same salt."""
+        return {"salt": self.salt}
+
+    def restore_state(self, state: dict) -> None:
+        salt = state.get("salt")
+        if salt is not None and salt != self.salt:
+            self.salt = int(salt)
+            if self.trained:
+                self._mutate = jax.jit(
+                    make_mutate_step(self.mesh, self._cell(), self.salt))
 
     def occupancy(self) -> dict:
         """Slab / shard occupancy and lifecycle counters (engine stats)."""
@@ -758,9 +852,17 @@ class ShardedGusIndex:
             "slab_grows": self.slab_grows,
             "resplits": self.resplits,
             "aged_out": self.aged_out,
+            "version": self.version,
         }
 
-    stats = occupancy
+    describe = occupancy
+
+    def stats(self) -> dict:  # legacy-ok
+        """Deprecated alias of ``occupancy()`` / ``describe()``."""
+        warnings.warn("ShardedGusIndex.stats() is deprecated; use "
+                      "occupancy()/describe() or the Telemetry views",
+                      DeprecationWarning, stacklevel=2)
+        return self.occupancy()
 
     # ------------------------------------------------------------- queries
 

@@ -35,6 +35,7 @@ from repro.ann.sharded_index import ShardedConfig, ShardedGusIndex
 from repro.core import idf as idf_mod
 from repro.core.buckets import BucketConfig
 from repro.core.embedding import EmbeddingGenerator
+from repro.core.maintenance import MaintenanceConfig
 from repro.core.scorer import pair_features, scorer_apply
 from repro.core.types import (FeatureSpec, MutationBatch, NeighborResult,
                               MUTATION_DELETE)
@@ -67,6 +68,10 @@ class GusConfig:
     sharded: ShardedConfig = ShardedConfig()
     # maintained-graph layer (repro.graph): None disables maintenance
     graph: GraphConfig | None = None
+    # canonical home of the maintenance knobs (core.maintenance): when
+    # set, it overrides the per-subsystem configs' own `maintenance`;
+    # `staleness_bound > 0` activates the concurrent maintenance plane
+    maintenance: MaintenanceConfig | None = None
 
 
 def make_index(k_dims: int, cfg: GusConfig):
@@ -123,6 +128,17 @@ class FeatureStore:
     def __contains__(self, pid) -> bool:
         return int(pid) in self._rows
 
+    # ------------------------------------------ persistence (SnapshotStateful)
+
+    def snapshot_state(self) -> dict:
+        ids = self.ids()
+        return {"ids": ids, "features": self.gather(ids)}
+
+    def restore_state(self, state: dict) -> None:
+        self.clear()
+        if len(state["ids"]):
+            self.put(state["ids"], state["features"])
+
 
 class DynamicGUS:
     """The Dynamic Grale Using ScaNN engine."""
@@ -130,12 +146,29 @@ class DynamicGUS:
     def __init__(self, spec: FeatureSpec, bucket_cfg: BucketConfig,
                  scorer_params: dict, cfg: GusConfig = GusConfig()):
         self.spec = spec
+        # GusConfig.maintenance is canonical: push it down into the
+        # per-subsystem configs so every layer sees one set of knobs
+        if cfg.maintenance is not None:
+            sub = {"sharded": dataclasses.replace(
+                cfg.sharded, maintenance=cfg.maintenance)}
+            if cfg.graph is not None:
+                sub["graph"] = dataclasses.replace(
+                    cfg.graph, maintenance=cfg.maintenance)
+            cfg = dataclasses.replace(cfg, **sub)
         self.cfg = cfg
+        self.maintenance = (
+            cfg.maintenance
+            or (cfg.graph.maintenance if cfg.graph is not None else None)
+            or (cfg.sharded.maintenance if cfg.backend == "sharded" else None)
+            or MaintenanceConfig())
         self.embedder = EmbeddingGenerator.create(spec, bucket_cfg)
         self.scorer_params = scorer_params
         self.store = FeatureStore(spec)
         self.index = make_index(self.embedder.k_max, cfg)
         self.graph = DynamicGraphStore(cfg.graph) if cfg.graph else None
+        # applied mutation batches — the staleness ledger the concurrent
+        # maintenance plane stamps published snapshot versions against
+        self.seq_applied = 0
         self.mutation_timer = Timer("mutation")
         self.query_timer = Timer("neighbors")
         self.graph_timer = Timer("graph")
@@ -168,6 +201,8 @@ class DynamicGUS:
                         self.graph.upsert(chunk, self._index_neighbors_of_ids(
                             chunk, self.graph.cfg.probe_k(), timed=False))
                     self.flush_graph_repair(limit=len(ids))
+            if self.maintenance.staleness_bound > 0:
+                self.graph.publish(seq=self.seq_applied)
 
     def periodic_reload(self) -> None:
         """Recompute IDF/filter from the live corpus and retrain the index
@@ -204,10 +239,15 @@ class DynamicGUS:
             staged = self.encode_mutation(batch)
             self.apply_mutation(staged)
             self.finish_mutation(staged)
+        self.seq_applied += 1
         if self.graph is not None:
             with self.graph_timer:
                 self.graph_apply(staged)
                 self.flush_graph_repair()
+            if self.maintenance.staleness_bound > 0:
+                # the synchronous path keeps the published view fresh, so
+                # mixed sync/plane serving still honors the bound
+                self.graph.publish(seq=self.seq_applied)
         return staged.n
 
     # ---------------------------------------- staged mutation (write path)
@@ -282,7 +322,7 @@ class DynamicGUS:
         or evictions get a fresh neighborhood merged in (no purge — the
         repaired points' embeddings did not change). One batched
         ``_index_neighbors_of_ids`` call per drain, capped at ``limit``
-        (default ``GraphConfig.repair_per_batch``)."""
+        (default ``MaintenanceConfig.repair_per_tick``)."""
         if self.graph is None:
             return 0
         rep = self.graph.take_repair_ids(limit)
@@ -329,13 +369,23 @@ class DynamicGUS:
 
         With a maintained graph, requests at k <= the maintenance k are
         served straight from the graph rows — no re-embedding, no ANN
-        search (the paper's "graph building" product surface)."""
+        search (the paper's "graph building" product surface). With the
+        concurrent maintenance plane active (``staleness_bound > 0``)
+        the read goes through the *published* `GraphView` version, which
+        may lag the applied stream by at most ``staleness_bound``
+        batches; ids the view does not know yet fall back to the
+        embed -> search -> score path."""
         ids = np.asarray(ids)
         k = k or self.cfg.scann_nn
-        if (self.graph is not None and k <= self.graph.cfg.k
-                and self.graph.has_ids(ids)):
-            with self.query_timer:
-                return self.graph.neighbors_of_ids(ids, k)
+        if self.graph is not None and k <= self.graph.cfg.k:
+            if self.maintenance.staleness_bound > 0:
+                view = self.graph.view()
+                if view.has_ids(ids):
+                    with self.query_timer:
+                        return view.neighbors_of_ids(ids, k)
+            elif self.graph.has_ids(ids):
+                with self.query_timer:
+                    return self.graph.neighbors_of_ids(ids, k)
         return self._index_neighbors_of_ids(ids, k)
 
     def _index_neighbors_of_ids(self, ids: np.ndarray, k: int | None = None,
@@ -350,6 +400,34 @@ class DynamicGUS:
         if timed:
             return self.neighbors(feats, k, exclude_ids=ids)
         return self._neighbors_impl(feats, k, exclude_ids=ids)
+
+    # ------------------------------------------ persistence (SnapshotStateful)
+
+    def snapshot_state(self) -> dict:
+        """Composed snapshot: the feature store (corpus of record), the
+        index's minimal routing state, and the full graph state. Each
+        piece comes from the subsystem's own `SnapshotStateful`
+        implementation — the engine just persists the dict."""
+        return {
+            "store": self.store.snapshot_state(),
+            "index": self.index.snapshot_state(),
+            "graph": (self.graph.snapshot_state()
+                      if self.graph is not None else None),
+        }
+
+    def restore_state(self, state: dict) -> None:
+        """Inverse composition. Order matters: the index's routing state
+        (owner-hash salt) must be installed before ``bootstrap`` rebuilds
+        the slabs, and the graph restores after the corpus exists (a
+        snapshotted graph skips the bootstrap re-seed entirely)."""
+        self.store.clear()
+        self.index.restore_state(state.get("index") or {})
+        graph_state = state.get("graph")
+        st = state["store"]
+        self.bootstrap(st["ids"], st["features"],
+                       build_graph=graph_state is None)
+        if self.graph is not None and graph_state is not None:
+            self.graph.restore_state(graph_state)
 
 
 def _drop_self(ids, dists, self_ids, k):

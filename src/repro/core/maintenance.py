@@ -1,0 +1,114 @@
+"""Maintenance-plane contracts: `MaintenanceConfig` and `SnapshotStateful`.
+
+This module formalizes two APIs that grew informally across subsystems:
+
+* **`MaintenanceConfig`** — every knob that shapes *background* index and
+  graph upkeep (slab compaction, slab sizing headroom, SOAR copies, skew
+  re-splits, graph repair drains, and the bounded-staleness budget of the
+  concurrent maintenance plane) in one frozen config carried by
+  ``GusConfig.maintenance``. The per-subsystem homes these knobs used to
+  live in (``ShardedConfig.auto_compact`` / ``slab_headroom`` /
+  ``soar_lambda`` / ``resplit_imbalance`` / ``resplit_by`` and
+  ``GraphConfig.repair_per_batch``) survive one release as deprecation
+  shims: passing them still works (folded in here with a
+  ``DeprecationWarning``) but in-repo use fails ``tools/lint.py`` (MNT1).
+
+* **`SnapshotStateful`** — the snapshot/recover contract. Every stateful
+  subsystem (feature store, ANN backends, graph store, ``DynamicGUS``)
+  exposes ``snapshot_state() -> dict`` / ``restore_state(state)`` and the
+  engine *composes* them instead of hand-assembling pieces; the versioned
+  maintenance-plane snapshots reuse the same mechanism.
+
+``staleness_bound`` is the heart of the concurrent maintenance plane
+(see serve/maintenance.py): it is measured in **applied mutation
+batches** and bounds how far the *published* graph snapshot that serving
+reads may lag the freshest applied state. ``0`` (the default) disables
+the plane entirely and reproduces the synchronous, bitwise-identical
+behavior: the pipeline pins its fuse window to 1 under a configured
+graph and closes windows under ``maintenance_pressure``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Protocol, runtime_checkable
+
+
+@dataclasses.dataclass(frozen=True)
+class MaintenanceConfig:
+    """Knobs for index/graph upkeep and the concurrent maintenance plane.
+
+    staleness_bound: max batches the published graph snapshot serving
+        reads may lag the freshest applied state. 0 = synchronous plane
+        off (bitwise-identical legacy behavior); > 0 unpins the pipeline
+        fuse window and defers graph ticks to the MaintenanceWorker.
+    compact: auto-compact a sharded slab before a wrapping append
+        (was ``ShardedConfig.auto_compact``).
+    headroom: slab sizing slack multiplier at build time
+        (was ``ShardedConfig.slab_headroom``).
+    soar: SOAR secondary-copy weight; negative disables the second copy
+        (was ``ShardedConfig.soar_lambda``).
+    resplit: imbalance ratio that arms automatic owner-salt re-splits;
+        0 = manual only (was ``ShardedConfig.resplit_imbalance``).
+    resplit_metric: skew signal for re-splits, "occupancy" or "load"
+        (was ``ShardedConfig.resplit_by``).
+    repair_per_tick: graph repair re-queries drained per maintenance
+        tick (was ``GraphConfig.repair_per_batch``).
+    """
+
+    staleness_bound: int = 0
+    compact: bool = True
+    headroom: float = 8.0
+    soar: float = 1.0
+    resplit: float = 0.0
+    resplit_metric: str = "occupancy"
+    repair_per_tick: int = 256
+
+    def __post_init__(self):
+        if self.staleness_bound < 0:
+            raise ValueError(
+                f"staleness_bound={self.staleness_bound} must be >= 0")
+        if self.resplit_metric not in ("occupancy", "load"):
+            raise ValueError(
+                f"resplit_metric={self.resplit_metric!r} must be "
+                "'occupancy' or 'load' (by-occupancy slab fill vs. "
+                "accumulated per-shard query load)")
+
+
+def resolve_legacy(maintenance: MaintenanceConfig | None,
+                   legacy: dict[str, tuple[str, object]]) -> MaintenanceConfig:
+    """Fold deprecated per-subsystem knob values into a MaintenanceConfig.
+
+    ``legacy`` maps a MaintenanceConfig field name to ``(old_name,
+    value_or_None)``; a non-None value means the caller passed the old
+    knob and gets a ``DeprecationWarning`` plus the value folded into the
+    resolved config (old knobs win over ``maintenance`` so that external
+    one-release callers keep their behavior).
+    """
+    overrides = {new: val for new, (_, val) in legacy.items()
+                 if val is not None}
+    if overrides:
+        olds = ", ".join(sorted(old for _, (old, val) in legacy.items()
+                                if val is not None))
+        warnings.warn(
+            f"{olds}: deprecated since PR 8 — pass "
+            "MaintenanceConfig(...) instead (see core/maintenance.py)",
+            DeprecationWarning, stacklevel=4)
+    base = maintenance if maintenance is not None else MaintenanceConfig()
+    return dataclasses.replace(base, **overrides) if overrides else base
+
+
+@runtime_checkable
+class SnapshotStateful(Protocol):
+    """Snapshot/recover contract composed by ``GusEngine``.
+
+    ``snapshot_state()`` returns a plain dict (host arrays / scalars
+    only) that ``restore_state`` accepts on a freshly-built instance of
+    the same configuration. Implementors: ``FeatureStore``, the ANN
+    backends, ``DynamicGraphStore``, and ``DynamicGUS`` (which composes
+    the first three).
+    """
+
+    def snapshot_state(self) -> dict: ...
+
+    def restore_state(self, state: dict) -> None: ...

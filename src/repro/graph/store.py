@@ -28,31 +28,37 @@ dirty frontier (slots whose edges changed) and the labels of components
 that *lost* an edge (which must be reset before relabelling), so
 ``components()`` does work proportional to the churn, not the corpus.
 
-Async write path (the graph's window-closing rule — serve/pipeline.py
-holds the full list): a configured graph **pins the fuse window to 1**.
-The tick for mutation batch *i* re-queries the index for the upserted
-points' neighborhoods, so it must observe the index exactly as of batch
-*i* — a fused window would expose batch *i+1*'s rows to batch *i*'s
-probes and change the scored candidates. Repair rides the same cadence:
-``take_repair_ids`` drains the coalesced queue in deterministic slot
-order so the synchronous and pipelined paths pop identical batches, and
-the per-tick cap (``repair_per_batch`` / ``PipelineConfig.
-repair_per_tick``) must match across the paths being compared for the
-adjacency to stay bit-identical. Index-side slot movement (the sharded
+Async write path (serve/pipeline.py holds the window-closing rules):
+with ``MaintenanceConfig.staleness_bound == 0`` a configured graph
+**pins the fuse window to 1** — the tick for mutation batch *i*
+re-queries the index for the upserted points' neighborhoods, so
+observing the index exactly as of batch *i* keeps the pipelined path
+bit-identical to the synchronous one. With ``staleness_bound > 0`` the
+concurrent maintenance plane (serve/maintenance.py) replaces bitwise
+identity with **bounded staleness**: ticks are deferred and fused, and
+serving reads go through ``publish()``-ed immutable `GraphView`
+versions that are guaranteed to lag the applied mutation stream by at
+most ``staleness_bound`` batches (jnp arrays are immutable, so a
+published version is a free capture-by-reference plus a copy of the
+host id maps; the swap is one atomic reference assignment). Repair
+rides the tick cadence either way: ``take_repair_ids`` drains the
+coalesced queue in deterministic slot order so two drains of the same
+backlog pop identical batches. Index-side slot movement (the sharded
 backend's compaction) never involves the graph — the graph keys rows by
-its own slots, not index rows — but it shares the same boundary
-discipline: lifecycle steps only run between windows, never inside one.
+its own slots, not index rows.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import canonical_max_edges
+from repro.core.maintenance import MaintenanceConfig, resolve_legacy
 from repro.core.types import NeighborResult
 from repro.graph.cc import DEAD_LABEL, propagate_labels
 from repro.kernels import ops
@@ -76,9 +82,18 @@ class GraphConfig:
     # back-edges past k lets an insert reach points whose own top-k it
     # entered (the reverse-kNN updates of online graph building)
     probe: int = 0
-    # deletes/evictions leave rows under-full; the engine re-queries up to
-    # this many of them per mutation batch (Debatty-style online repair)
-    repair_per_batch: int = 256
+    # deprecated shim (one release): use maintenance.repair_per_tick
+    repair_per_batch: int | None = None              # legacy-ok
+    # repair/tick knobs; resolved to a concrete config in __post_init__
+    maintenance: MaintenanceConfig | None = None
+
+    def __post_init__(self):
+        m = resolve_legacy(self.maintenance, {
+            "repair_per_tick":
+                ("GraphConfig.repair_per_batch", self.repair_per_batch),  # legacy-ok
+        })
+        object.__setattr__(self, "maintenance", m)
+        object.__setattr__(self, "repair_per_batch", None)  # legacy-ok
 
     def row_width(self) -> int:
         return self.width or 8 * self.k
@@ -177,6 +192,66 @@ def _reset_components(labels, ids_dev, alive, reset_labels):
     return jnp.where(mask, ids_dev, labels), mask
 
 
+def _serve_rows(nbr_slots, nbr_w, slot_of: dict, id_of_slot: np.ndarray,
+                capacity: int, ids: np.ndarray, k: int) -> NeighborResult:
+    """Gather each requested id's k best maintained edges (shared by the
+    live store and published `GraphView` versions). The graph keeps no
+    ANN distances, so ``distances`` is 0 at hits / +inf at padding."""
+    ids = np.asarray(ids).reshape(-1)
+    slots = np.asarray([slot_of[int(p)] for p in ids.tolist()], np.int32)
+    b = pow2_pad(ids.size, None)
+    padded = np.full((b,), capacity, np.int32)
+    padded[:ids.size] = slots
+    sl, w = _gather_topk(nbr_slots, nbr_w, jnp.asarray(padded), k=k)
+    sl = np.asarray(sl)[:ids.size]
+    w = np.asarray(w)[:ids.size]
+    hit = sl >= 0
+    out_ids = np.where(hit, id_of_slot[np.where(hit, sl, 0)], -1)
+    return NeighborResult(
+        ids=out_ids.astype(np.int64),
+        weights=np.where(hit, w, -np.inf).astype(np.float32),
+        distances=np.where(hit, 0.0, np.inf).astype(np.float32))
+
+
+class GraphView:
+    """An immutable published version of the adjacency (the RCU read side).
+
+    Captures the device arrays by reference (jnp arrays are immutable —
+    in-place-looking updates on the store rebind fresh arrays) plus
+    copies of the host id maps, so a reader holding a view keeps a
+    self-consistent snapshot while the store builds the next version.
+    ``seq`` stamps the last applied mutation batch the version reflects
+    (-1 when the publisher carries no sequence, e.g. bootstrap)."""
+
+    __slots__ = ("version", "seq", "cfg", "capacity", "nbr_slots", "nbr_w",
+                 "slot_of", "id_of_slot")
+
+    def __init__(self, version: int, seq: int, cfg: GraphConfig,
+                 capacity: int, nbr_slots, nbr_w, slot_of: dict,
+                 id_of_slot: np.ndarray):
+        self.version = version
+        self.seq = seq
+        self.cfg = cfg
+        self.capacity = capacity
+        self.nbr_slots = nbr_slots
+        self.nbr_w = nbr_w
+        self.slot_of = slot_of
+        self.id_of_slot = id_of_slot
+
+    def __len__(self) -> int:
+        return len(self.slot_of)
+
+    def has_ids(self, ids) -> bool:
+        return all(int(p) in self.slot_of
+                   for p in np.asarray(ids).reshape(-1).tolist())
+
+    def neighbors_of_ids(self, ids: np.ndarray, k: int | None = None
+                         ) -> NeighborResult:
+        k = k or self.cfg.k
+        return _serve_rows(self.nbr_slots, self.nbr_w, self.slot_of,
+                           self.id_of_slot, self.capacity, ids, k)
+
+
 class DynamicGraphStore:
     """Incrementally maintained symmetric top-k graph (see module doc)."""
 
@@ -190,6 +265,9 @@ class DynamicGraphStore:
         # churn counters for the maintenance benchmark (directed entries)
         self.edges_added = 0
         self.edges_removed = 0
+        # versioned publishing (the concurrent maintenance plane)
+        self.version = 0
+        self._view: GraphView | None = None
 
     def _init_arrays(self, cap: int) -> None:
         self.capacity = cap
@@ -369,7 +447,8 @@ class DynamicGraphStore:
         and drained in slot order, so synchronous and pipelined drains of
         the same backlog pop identical batches — the equivalence the async
         pipeline's repair tick relies on."""
-        limit = limit if limit is not None else self.cfg.repair_per_batch
+        limit = (limit if limit is not None
+                 else self.cfg.maintenance.repair_per_tick)
         out = []
         for slot in sorted(self._repair):
             if len(out) >= limit:
@@ -467,27 +546,36 @@ class DynamicGraphStore:
     def neighbors_of_ids(self, ids: np.ndarray, k: int | None = None
                          ) -> NeighborResult:
         """Serve neighborhoods straight from the maintained rows — no
-        re-embedding, no ANN search. The graph keeps no ANN distances, so
-        ``distances`` is 0 at hits / +inf at padding."""
+        re-embedding, no ANN search."""
         k = k or self.cfg.k
         if k > self.width:
             raise ValueError(f"k={k} exceeds row width {self.width}")
-        ids = np.asarray(ids).reshape(-1)
-        slots = np.asarray([self.slot_of[int(p)] for p in ids.tolist()],
-                           np.int32)
-        b = pow2_pad(ids.size, None)
-        padded = np.full((b,), self.capacity, np.int32)
-        padded[:ids.size] = slots
-        sl, w = _gather_topk(self.nbr_slots, self.nbr_w, jnp.asarray(padded),
-                             k=k)
-        sl = np.asarray(sl)[:ids.size]
-        w = np.asarray(w)[:ids.size]
-        hit = sl >= 0
-        out_ids = np.where(hit, self.id_of_slot[np.where(hit, sl, 0)], -1)
-        return NeighborResult(
-            ids=out_ids.astype(np.int64),
-            weights=np.where(hit, w, -np.inf).astype(np.float32),
-            distances=np.where(hit, 0.0, np.inf).astype(np.float32))
+        return _serve_rows(self.nbr_slots, self.nbr_w, self.slot_of,
+                           self.id_of_slot, self.capacity, ids, k)
+
+    # ------------------------------------------------- versioned publishing
+
+    def publish(self, seq: int = -1) -> GraphView:
+        """Publish the current adjacency as an immutable `GraphView`.
+
+        The device arrays are captured by reference (free — they are
+        immutable), the host id maps by copy; installing the view is a
+        single reference assignment, so a publish can never be observed
+        half-built. ``seq`` stamps the last applied mutation batch this
+        version reflects (the maintenance worker's staleness ledger)."""
+        self.version += 1
+        self._view = GraphView(
+            version=self.version, seq=seq, cfg=self.cfg,
+            capacity=self.capacity, nbr_slots=self.nbr_slots,
+            nbr_w=self.nbr_w, slot_of=dict(self.slot_of),
+            id_of_slot=self.id_of_slot.copy())
+        return self._view
+
+    def view(self) -> GraphView:
+        """The latest published version (publishing one if none exists)."""
+        if self._view is None:
+            self.publish()
+        return self._view
 
     def edges(self) -> tuple:
         """Canonical undirected edge list (pairs int64 [E, 2] with
@@ -551,7 +639,7 @@ class DynamicGraphStore:
             "repair": sorted(self._repair),
         }
 
-    def restore(self, state: dict) -> None:
+    def restore_state(self, state: dict) -> None:
         self.cfg = state["cfg"]
         self.width = self.cfg.row_width()
         self.capacity = state["nbr_slots"].shape[0]
@@ -567,10 +655,17 @@ class DynamicGraphStore:
         self._reset_labels = set()
         self._repair = set(state.get("repair", ()))
         self._cc_cache = None
+        self._view = None
+
+    def restore(self, state: dict) -> None:
+        """Alias of ``restore_state`` (the `SnapshotStateful` spelling)."""
+        self.restore_state(state)
 
     # --------------------------------------------------------------- stats
 
-    def stats(self) -> dict:
+    def describe(self) -> dict:
+        """Structured summary of the maintained graph (the canonical
+        replacement for the deprecated ``stats()``)."""
         n_entries = int(np.sum(np.asarray(self.nbr_slots) >= 0))
         return {
             "nodes": len(self.slot_of),
@@ -583,4 +678,12 @@ class DynamicGraphStore:
             "cc_iters": self.cc_iters,
             "cc_components": (len(set(self._cc_cache.values()))
                               if self._cc_cache is not None else None),
+            "version": self.version,
         }
+
+    def stats(self) -> dict:  # legacy-ok
+        """Deprecated alias of ``describe()`` (kept one release)."""
+        warnings.warn("DynamicGraphStore.stats() is deprecated; use "
+                      "describe() or the Telemetry views",
+                      DeprecationWarning, stacklevel=2)
+        return self.describe()

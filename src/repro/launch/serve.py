@@ -133,7 +133,7 @@ def main():
             print(f"[serve] after batch {i}: index={len(engine.gus.index)} "
                   f"same-cluster={np.mean(same):.2f}")
     engine.flush()
-    print(json.dumps(engine.stats(), indent=1, default=str))
+    print(json.dumps(engine.describe(), indent=1, default=str))
     if args.metrics == "prom":
         print(engine.obs.registry.to_prometheus())
     elif args.metrics == "json":

@@ -57,5 +57,5 @@ class Telemetry:
             "metrics": self.registry.snapshot(),
             "events": [{"seq": e.seq, "kind": e.kind, **e.fields}
                        for e in self.events],
-            "traces": self.tracer.stats(),
+            "traces": self.tracer.describe(),
         }

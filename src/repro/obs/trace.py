@@ -226,7 +226,7 @@ class Tracer:
         if trace is not None and trace.sampled:
             self.finished.append(trace.finish())
 
-    def stats(self) -> dict:
+    def describe(self) -> dict:
         return {"sample_every": self.sample_every, "started": self.started,
                 "sampled": self.sampled, "finished": len(self.finished)}
 

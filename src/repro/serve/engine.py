@@ -32,9 +32,12 @@ needs (paper §3.1 runs at "hundreds of thousands of RPCs per second"):
   time included) for the p95/p99-under-load metrics;
 * **mutation log + snapshot restart** — every submitted batch is
   appended to a host-side log; ``recover()`` replays the suffix after a
-  crash/restart. Snapshots carry the sharded backend's owner-hash salt
-  so a recovered engine routes inserts the same way; ``stats()``
-  surfaces slab occupancy, lifecycle counters, and per-replica health.
+  crash/restart. Snapshots are the *composed* ``SnapshotStateful`` dict
+  (``DynamicGUS.snapshot_state``): the feature store's corpus, the
+  index's routing state (the sharded owner-hash salt, so a recovered
+  engine routes inserts the same way), and the maintained graph's
+  arrays. ``describe()`` surfaces slab occupancy, lifecycle counters,
+  and per-replica health.
 
 Staleness contract: a query is answered only by members whose
 ``applied_seq`` is within ``EngineConfig.staleness_batches`` of the
@@ -47,6 +50,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import time
+import warnings
 from typing import Sequence
 
 import numpy as np
@@ -367,8 +371,8 @@ class GusEngine:
             self.obs.events.emit("unavailable", seq=self.seq)
             raise ServingUnavailableError(
                 "no eligible member: primary "
-                f"{self.primary.stats()}, replicas "
-                f"{self.replica_set.stats()}")
+                f"{self.primary.describe()}, replicas "
+                f"{self.replica_set.describe()}")
         res, r_ms = self._timed_answer(replica, feats, k, "answer_failover")
         self.service.observe(r_ms)
         replica.failovers += 1
@@ -380,8 +384,12 @@ class GusEngine:
     # ------------------------------------------------------ fault tolerance
 
     def snapshot(self) -> None:
-        """Snapshot = live ids + features (the index is rebuildable state)
-        + the maintained graph arrays (rebuildable too, but restoring them
+        """Snapshot = the composed ``SnapshotStateful`` dict from
+        ``DynamicGUS.snapshot_state()``: the store's live corpus (the
+        index is rebuildable state), the index's minimal routing state
+        (the sharded owner-hash salt — placement policy bumped by
+        re-splits, so recovery must re-route the same way), and the
+        maintained graph arrays (rebuildable too, but restoring them
         skips the full-corpus re-query on recovery). Flushes the async
         write path first so the snapshot observes every submitted batch.
         Deferred while the primary cannot serve (dead/partitioned/stale):
@@ -390,41 +398,24 @@ class GusEngine:
         if not self._eligible(self.primary):
             return                      # retried after the next batch
         self.flush()
-        ids = self.gus.store.ids()
-        self.snapshot_state = {
-            "ids": ids,
-            "features": self.gus.store.gather(ids),
-            "graph": (self.gus.graph.snapshot_state()
-                      if self.gus.graph is not None else None),
-            # sharded backend: the owner-hash salt is placement policy
-            # (bumped by re-splits); recovery must re-route the same way
-            "index_salt": getattr(self.gus.index, "salt", None),
-        }
+        self.snapshot_state = self.gus.snapshot_state()
         self.mutation_log.clear()
         self.seq_base = self.seq
         self.log_since_snapshot = 0
         self._c_snapshots.inc()
         self.obs.events.emit("snapshot", seq=self.seq,
-                             rows=len(ids))
+                             rows=len(self.snapshot_state["store"]["ids"]))
 
     @staticmethod
     def _restore_gus(gus: DynamicGUS, snapshot_state: dict) -> None:
-        """Load one GUS from a snapshot: salt before build (routing),
-        graph arrays restored rather than recomputed where both sides
-        have one. Clears the store first — a stale member may hold rows
-        the snapshot has already dropped."""
-        if not len(snapshot_state["ids"]):
+        """Load one GUS from a composed snapshot: each subsystem restores
+        its own piece through ``restore_state`` (store cleared first — a
+        stale member may hold rows the snapshot has already dropped; the
+        index's salt installs before the slab rebuild; graph arrays
+        restore instead of recomputing where both sides have one)."""
+        if not len(snapshot_state["store"]["ids"]):
             return
-        gus.store.clear()
-        salt = snapshot_state.get("index_salt")
-        if salt is not None and hasattr(gus.index, "salt"):
-            gus.index.salt = salt
-        graph_state = snapshot_state.get("graph")
-        restorable = graph_state is not None and gus.graph is not None
-        gus.bootstrap(snapshot_state["ids"], snapshot_state["features"],
-                      build_graph=not restorable)
-        if restorable:
-            gus.graph.restore(graph_state)
+        gus.restore_state(snapshot_state)
 
     def recover(self, fresh_gus: DynamicGUS,
                 replicas: Sequence[DynamicGUS] = ()) -> "GusEngine":
@@ -436,7 +427,8 @@ class GusEngine:
         the dead engine's device state."""
         eng = GusEngine(fresh_gus, self.cfg, replicas)
         targets = [fresh_gus, *eng.replicas]
-        if self.snapshot_state is not None and len(self.snapshot_state["ids"]):
+        if (self.snapshot_state is not None
+                and len(self.snapshot_state["store"]["ids"])):
             for gus in targets:
                 self._restore_gus(gus, self.snapshot_state)
         # carry the snapshot forward: if the recovered engine crashes again
@@ -460,29 +452,35 @@ class GusEngine:
         stats (``launch/serve.py --metrics`` prints this)."""
         return self.obs.snapshot()
 
-    def stats(self) -> dict:
+    def describe(self) -> dict:
         out = {
             "queries": self.queries,
             "hedged": self.hedged,
             "failovers": self.failovers,
             "seq": self.seq,
             "replica_hedges": list(self.replica_hedges),
-            "primary": self.primary.stats(),
-            "replicas": self.replica_set.stats(),
+            "primary": self.primary.describe(),
+            "replicas": self.replica_set.describe(),
             "freshness": percentiles(self.freshness.samples_ms),
             "serving": self.serving.summary(),
             "query_latency": self.gus.query_timer.summary(),
             "mutation_latency": self.gus.mutation_timer.summary(),
         }
         if self.pipelines:
-            out["pipeline"] = self.pipelines[0].stats()
-        index_stats = getattr(self.gus.index, "stats", None)
-        if callable(index_stats):
+            out["pipeline"] = self.pipelines[0].describe()
+        index_describe = getattr(self.gus.index, "describe", None)
+        if callable(index_describe):
             # slab occupancy + lifecycle counters (sharded backend)
-            out["index"] = index_stats()
+            out["index"] = index_describe()
         if self.gus.graph is not None:
             out["graph"] = {
-                **self.gus.graph.stats(),
+                **self.gus.graph.describe(),
                 "maintenance_latency": self.gus.graph_timer.summary(),
             }
         return out
+
+    def stats(self) -> dict:  # legacy-ok
+        """Deprecated alias for :meth:`describe` (one release)."""
+        warnings.warn("GusEngine.stats() is deprecated; use describe()",
+                      DeprecationWarning, stacklevel=2)
+        return self.describe()

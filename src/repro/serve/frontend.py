@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
 
 import numpy as np
@@ -372,7 +373,7 @@ class Frontend:
 
     # ---------------------------------------------------------------- stats
 
-    def stats(self) -> dict:
+    def describe(self) -> dict:
         return {
             "steps": self.steps,
             "accepted": dict(self.accepted),
@@ -385,6 +386,12 @@ class Frontend:
             "query_latency": self.query_latency.summary(),
             "mutate_latency": self.mutate_latency.summary(),
         }
+
+    def stats(self) -> dict:  # legacy-ok
+        """Deprecated alias for :meth:`describe` (one release)."""
+        warnings.warn("Frontend.stats() is deprecated; use describe()",
+                      DeprecationWarning, stacklevel=2)
+        return self.describe()
 
     def shed_rate(self) -> float:
         total = sum(self.accepted.values()) + sum(self.shed.values())

@@ -20,18 +20,18 @@ batch pays the full fixed dispatch cost of the encode + append programs.
 window closes (``PipelineConfig.window`` batches, a delete, an id staged
 twice, or ``flush``), the fused window is encoded (stage A) and the
 previous window's hand-off runs: ``jax.block_until_ready`` lives only
-inside that hand-off, followed by the maintained-graph tick for exactly
-that window. Fusing amortizes the per-dispatch overhead that dominates
-small-batch mutation streams — the RPC batch size is unchanged; only the
-device-side program sees the fused rows.
+inside that hand-off. Fusing amortizes the per-dispatch overhead that
+dominates small-batch mutation streams — the RPC batch size is
+unchanged; only the device-side program sees the fused rows.
 
 **Exactness — the window-closing rules.** A fused window is restricted
 to upsert-only batches with pairwise-disjoint ids (every operation in
 the write path — hashing, IDF lookup, CountSketch, partition argmin, PQ
 encode, slab scatter — is row-independent, and free-list pops happen in
 the same order), so fused execution is *bit-identical* to applying the
-batches one at a time. Each rule below closes the window because it
-names a regime where that stops holding:
+batches one at a time. The first three rules hold at every staleness
+bound, because they name regimes where fused *application* itself stops
+being exact:
 
 * **deletes** close the window and apply alone, preserving order;
 * **duplicate ids** (an id staged or in flight twice) close it — fused
@@ -39,64 +39,95 @@ names a regime where that stops holding:
 * **updates of live ids on scann** close it
   (``ScannIndex.FUSED_UPDATES_EXACT = False``): its update path
   re-routes free-list slots, which shifts slab layout and breaks
-  PQ-score *ties* at the shortlist cut;
+  PQ-score *ties* at the shortlist cut.
+
+**The fuse-window pins — bound == 0 (the default, bitwise-identical
+contract).** Three more rules exist only to reproduce the synchronous
+*maintenance schedule* exactly, and they are what historically capped
+pipelined throughput:
+
 * **a maintained graph pins the window to 1**: the graph tick for batch
   *i* must observe the index exactly as of batch *i*, the same state the
   synchronous path sees;
-* **compaction boundary (sharded)**: the sharded backend's slab
-  lifecycle may compact or grow a slab inside ``begin_upsert`` when an
-  append could wrap a ring buffer — compaction moves slots, so it must
-  never land mid-fused-window. While the backend reports
-  ``maintenance_pressure`` (a wrap is possible given the staged +
-  in-flight rows), the window is pinned to 1, which makes the pipelined
-  schedule — and therefore every compaction trigger — exactly the
-  synchronous per-batch schedule. With no pressure, no slab can wrap, so
-  no compaction can fire in either schedule and fusion is safe;
-* **armed auto-resplit (sharded)** likewise pins the window to 1: the
-  skew trigger must evaluate once per batch with every prior batch
-  applied, and the salt it may bump is baked into staged routing — so
-  the pipeline hands off the previous window and runs
-  ``auto_resplit()`` before each window's encode, reproducing the
-  synchronous order ``trigger -> encode -> append`` exactly.
+* **compaction boundary (sharded)**: while the backend reports
+  ``maintenance_pressure`` (an append could wrap a slab ring given the
+  staged + in-flight rows), the window pins to 1 so auto-compaction
+  fires on exactly the synchronous per-batch schedule;
+* **armed auto-resplit (sharded)** pins the window to 1: the skew
+  trigger must evaluate once per batch with every prior batch applied,
+  and the salt it may bump is baked into staged routing — so the
+  pipeline hands off the previous window and runs ``auto_resplit()``
+  before each window's encode.
 
-Graph repair rides the hand-off cadence: rows left under-full by purges
-or evictions accumulate in ``DynamicGraphStore``'s coalesced, deduped
+**The concurrent maintenance plane — bound > 0.** With
+``MaintenanceConfig.staleness_bound = B > 0`` the contract relaxes from
+bitwise identity to *bounded staleness* and all three pins lift:
+
+* windows fuse up to ``min(window, B)`` batches even with a maintained
+  graph. The hand-off applies the fused window to the index and store,
+  then **defers** the graph tick — the fused merge-and-re-top-k probe,
+  back-edge purges, and the batched repair drain — to the cooperative
+  ``serve.maintenance.MaintenanceWorker``, which builds the successor
+  graph state and publishes it as an immutable versioned snapshot
+  (``GraphView``) with one atomic swap. Queries read the last published
+  view, which lags the applied mutation stream by **at most B batches**
+  (``worker.settle()`` runs after every hand-off to re-establish the
+  invariant);
+* compaction no longer closes windows: it stays inside ``begin_upsert``,
+  where it is safe at any fuse width (window *w-1* is always fully
+  finished before window *w*'s apply) — it is simply no longer required
+  to land on the per-batch schedule;
+* auto-resplit runs only at **drain boundaries** (``flush``), when
+  nothing is staged or in flight — the salt it bumps is baked into
+  staged encode routing, so it must never land between a window's
+  encode and its apply.
+
+Graph repair rides the tick cadence: rows left under-full by purges or
+evictions accumulate in ``DynamicGraphStore``'s coalesced, deduped
 repair queue and are re-queried as **one batched**
 ``_index_neighbors_of_ids`` call per tick, capped at
 ``repair_per_tick`` — never as per-mutation one-offs. The forward probe
 for the upserted points reuses the staged embeddings
-(``graph_apply(reuse_emb=True)``), bit-identical to the synchronous
-re-gather + re-embed because the store holds the same feature values.
+(``graph_apply(reuse_emb=True)``).
 
-Equivalence contract: with the default configuration, a ``submit`` per
-batch plus a final ``flush()`` produces **bit-identical** index rows,
-graph adjacency, and CC labels to calling ``DynamicGUS.mutate`` per
-batch — the pipeline only moves work in time and fuses device dispatches,
-never changes per-row results. ``flush()`` is the explicit barrier: call
-it before snapshots, recovery, rebuilds, or any read that must observe
-every submitted batch (``GusEngine`` does).
+Equivalence contract: with ``staleness_bound == 0`` (the default), a
+``submit`` per batch plus a final ``flush()`` produces **bit-identical**
+index rows, graph adjacency, and CC labels to calling
+``DynamicGUS.mutate`` per batch — the pipeline only moves work in time
+and fuses device dispatches, never changes per-row results. With
+``staleness_bound = B > 0`` the guarantee is: reads are answered from a
+published snapshot at most ``B`` applied batches stale, and ``flush()``
+drains the plane so the published views equal the synchronous end state
+(connected components are exact at quiescence). ``flush()`` is the
+explicit barrier either way: call it before snapshots, recovery,
+rebuilds, or any read that must observe every submitted batch
+(``GusEngine`` does).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 
 import numpy as np
 
 from repro.core.gus import DynamicGUS, StagedMutation
 from repro.core.types import MutationBatch, MUTATION_DELETE
 from repro.obs import Telemetry
+from repro.serve.maintenance import MaintenanceWorker
 from repro.utils.timing import Timer
 
 
 @dataclasses.dataclass(frozen=True)
 class PipelineConfig:
     # max upsert-only batches fused per window (1 = strict per-batch
-    # double buffering; forced to 1 while a maintained graph is on)
+    # double buffering; forced to 1 while a maintained graph is on and
+    # the staleness bound is 0)
     window: int = 8
     # repair re-queries drained per tick; None = the graph's
-    # repair_per_batch, which keeps the pipeline bit-identical to the
-    # synchronous path (the equivalence tests pin this)
+    # ``MaintenanceConfig.repair_per_tick``, which keeps the pipeline
+    # bit-identical to the synchronous path (the equivalence tests pin
+    # this)
     repair_per_tick: int | None = None
 
 
@@ -123,7 +154,7 @@ class MutationPipeline:
         self.cfg = cfg
         # plane-wide instruments (the engine shares one Telemetry across
         # its per-member pipelines, so these aggregate the whole write
-        # path; the per-pipeline stats() view keeps its own counts)
+        # path; the per-pipeline describe() view keeps its own counts)
         self.obs = telemetry if telemetry is not None else Telemetry()
         reg = self.obs.registry
         self._c_submitted = reg.counter(
@@ -138,6 +169,14 @@ class MutationPipeline:
             "pipeline_encode_ms", "stage-A fused encode dispatch time")
         self._h_handoff = reg.histogram(
             "pipeline_handoff_ms", "stage-B hand-off (apply + barrier)")
+        # staleness_bound == 0 keeps the bitwise-identical contract and
+        # its fuse-window pins; > 0 activates the maintenance plane
+        self.bound = gus.maintenance.staleness_bound
+        # the worker is constructed unconditionally (its instruments
+        # must register eagerly for the metrics catalog) but only holds
+        # deferred work when the bound is positive
+        self.worker = MaintenanceWorker(
+            gus, telemetry=self.obs, repair_per_tick=cfg.repair_per_tick)
         self._queue: list[MutationBatch] = []     # accumulating window
         self._queue_ids: set = set()              # upserted ids staged
         self._inflight: StagedMutation | None = None
@@ -148,17 +187,21 @@ class MutationPipeline:
         self._fused_updates_exact = getattr(
             gus.index, "FUSED_UPDATES_EXACT", True)
         # backends with a slab lifecycle (sharded) report wrap pressure;
-        # the window closes while it holds (the compaction boundary)
-        self._pressure = getattr(gus.index, "maintenance_pressure", None)
-        # an armed auto-resplit policy pins the window to 1 and runs on
-        # the synchronous schedule: previous hand-off first (the trigger
-        # must see every prior batch applied), then the trigger, then
-        # this batch's encode (the salt it may bump is baked into staged
-        # routing, so it can never fire between an encode and its append)
+        # under the bitwise contract the window closes while it holds
+        # (the compaction boundary); under the plane, compaction inside
+        # begin_upsert is safe at any fuse width
+        self._pressure = (getattr(gus.index, "maintenance_pressure", None)
+                          if self.bound == 0 else None)
+        # bitwise contract only: an armed auto-resplit policy pins the
+        # window to 1 and runs on the synchronous schedule (previous
+        # hand-off, then the trigger, then this window's encode). Under
+        # the plane the worker re-splits at drain boundaries instead.
         self._maintain = gus.index \
-            if getattr(gus.index, "auto_resplit_on", False) else None
+            if (self.bound == 0
+                and getattr(gus.index, "auto_resplit_on", False)) else None
         self._queued_rows = 0         # upsert rows staged in the window
         self._inflight_rows = 0       # upsert rows in the in-flight window
+        self._inflight_batches = 0    # batches fused into the in-flight window
         self.submitted = 0            # points acknowledged
         self.windows = 0              # fused windows encoded
         self.ticks = 0                # completed hand-offs
@@ -176,10 +219,16 @@ class MutationPipeline:
         return len(self._queue) + (self._inflight is not None)
 
     def window_size(self) -> int:
-        """Effective fuse window: a maintained graph pins it to 1 so the
-        per-batch graph tick sees exactly the synchronous index states;
-        an armed auto-resplit policy pins it too (the trigger must
-        evaluate per batch, as the synchronous path does)."""
+        """Effective fuse window. Bitwise contract (bound 0): a
+        maintained graph pins it to 1 so the per-batch graph tick sees
+        exactly the synchronous index states, and an armed auto-resplit
+        policy pins it too. Under the plane (bound > 0) a maintained
+        graph fuses up to ``min(window, bound)`` batches — each window
+        is one unit of published staleness."""
+        if self.bound > 0:
+            if self.gus.graph is not None:
+                return max(1, min(self.cfg.window, self.bound))
+            return max(1, self.cfg.window)
         if self.gus.graph is not None or self._maintain is not None:
             return 1
         return max(1, self.cfg.window)
@@ -195,10 +244,10 @@ class MutationPipeline:
         updates_live = (not self._fused_updates_exact) and any(
             pid in self.gus.store or pid in self._inflight_ids
             for pid in up_ids)
-        # compaction boundary: while an append could wrap a slab (counting
-        # staged + in-flight + incoming rows), windows pin to 1 so the
-        # backend's auto-compaction fires on exactly the per-batch
-        # schedule the synchronous path runs
+        # compaction boundary (bitwise contract only): while an append
+        # could wrap a slab (counting staged + in-flight + incoming
+        # rows), windows pin to 1 so the backend's auto-compaction fires
+        # on exactly the per-batch schedule the synchronous path runs
         pressure = self._pressure is not None and self._pressure(
             self._queued_rows + self._inflight_rows + len(up_ids))
         # window boundaries keep fused windows upsert-only with disjoint
@@ -223,12 +272,15 @@ class MutationPipeline:
         return int(ids.size)
 
     def flush(self) -> None:
-        """Barrier: encode + apply everything staged and complete the
-        in-flight window (device append, host maps, graph tick, repair
-        drain). After ``flush`` the engine state is exactly what the
-        synchronous path would have produced."""
+        """Barrier: encode + apply everything staged, complete the
+        in-flight window, and drain the maintenance plane (deferred
+        graph ticks, drain-boundary re-splits, snapshot publication).
+        After ``flush`` the engine state — and every published view —
+        is exactly what the synchronous path would have produced."""
         self._close_window()
         self._handoff()
+        if self.bound > 0:
+            self.worker.drain()
 
     def _close_window(self, reason: str = "flush") -> None:
         """Stage A for the accumulated window: fuse, encode (dispatch
@@ -248,6 +300,7 @@ class MutationPipeline:
         fused = fuse_batches(self._queue)
         queue_ids = self._queue_ids
         queue_rows = self._queued_rows
+        queue_batches = len(self._queue)
         self._queue = []
         self._queue_ids = set()
         self._queued_rows = 0
@@ -266,14 +319,17 @@ class MutationPipeline:
         self._inflight = staged
         self._inflight_ids = queue_ids
         self._inflight_rows = queue_rows
+        self._inflight_batches = queue_batches
 
     def _handoff(self) -> None:
         staged = self._inflight
         if staged is None:
             return
+        n_batches = self._inflight_batches
         self._inflight = None
         self._inflight_ids = set()
         self._inflight_rows = 0
+        self._inflight_batches = 0
         with self.obs.tracer.span("handoff"), self.handoff_timer, \
                 self._h_handoff:
             # stage B: the encode results dispatched at window close have
@@ -281,17 +337,29 @@ class MutationPipeline:
             # them (inside apply) no longer waits on the device
             self.gus.apply_mutation(staged)
             self.gus.finish_mutation(staged)          # block_until_ready
+            self.gus.seq_applied += n_batches
             if self.gus.graph is not None:
-                with self.gus.graph_timer:
-                    self.gus.graph_apply(staged, reuse_emb=True)
-                    repaired = self.gus.flush_graph_repair(
-                        self.cfg.repair_per_tick)
-                    self.repaired += repaired
-                    self._c_repaired.inc(repaired)
+                if self.bound > 0:
+                    # plane: the graph tick and repair drain come off
+                    # the hand-off path; settle() below re-establishes
+                    # the staleness invariant
+                    self.worker.defer(staged, self.gus.seq_applied,
+                                      n_batches)
+                else:
+                    with self.gus.graph_timer:
+                        self.gus.graph_apply(staged, reuse_emb=True)
+                        repaired = self.gus.flush_graph_repair(
+                            self.cfg.repair_per_tick)
+                        self.repaired += repaired
+                        self._c_repaired.inc(repaired)
         self.ticks += 1
         self._c_ticks.inc()
+        if self.bound > 0:
+            self.worker.settle()
 
-    def stats(self) -> dict:
+    def describe(self) -> dict:
+        """Structured pipeline state (counters, timer summaries, and the
+        maintenance plane's ledger)."""
         out = {
             "submitted": self.submitted,
             "windows": self.windows,
@@ -301,7 +369,14 @@ class MutationPipeline:
             "repaired": self.repaired,
             "encode": self.encode_timer.summary(),
             "handoff": self.handoff_timer.summary(),
+            "maintenance": self.worker.describe(),
         }
         if self.gus.graph is not None:
             out["repair_backlog"] = self.gus.graph.repair_backlog()
         return out
+
+    def stats(self) -> dict:  # legacy-ok
+        """Deprecated alias for :meth:`describe` (one release)."""
+        warnings.warn("MutationPipeline.stats() is deprecated; use "
+                      "describe()", DeprecationWarning, stacklevel=2)
+        return self.describe()

@@ -27,7 +27,7 @@ committed sequence.
 Telemetry split (``repro.obs``): the registry carries **plane-level**
 aggregates only (``engine_failovers_total`` etc. — no per-member label
 cardinality by design); the per-member counts here are routing state and
-stay on the dataclass, surfaced through ``stats()``. Member-attributed
+stay on the dataclass, surfaced through ``describe()``. Member-attributed
 history lives in the structured event log instead: health transitions
 (``replica_down`` / ``replica_up`` / ``replica_partitioned`` /
 ``replica_healed``), ``failover``, and ``catch_up`` events all name the
@@ -37,6 +37,7 @@ why without per-member metric series.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Sequence
 
 from repro.core.gus import DynamicGUS
@@ -57,13 +58,19 @@ class Replica:
     catchups: int = 0            # freshness catch-ups after rejoin
     caught_up_batches: int = 0   # log-suffix batches replayed by catch-ups
 
-    def stats(self) -> dict:
+    def describe(self) -> dict:
         return {"name": self.name, "alive": self.alive,
                 "partitioned": self.partitioned,
                 "applied_seq": self.applied_seq, "served": self.served,
                 "hedges": self.hedges, "failovers": self.failovers,
                 "catchups": self.catchups,
                 "caught_up_batches": self.caught_up_batches}
+
+    def stats(self) -> dict:  # legacy-ok
+        """Deprecated alias for :meth:`describe` (one release)."""
+        warnings.warn("Replica.stats() is deprecated; use describe()",
+                      DeprecationWarning, stacklevel=2)
+        return self.describe()
 
 
 class ReplicaSet:
@@ -104,5 +111,11 @@ class ReplicaSet:
                 return r
         return None
 
-    def stats(self) -> list[dict]:
-        return [r.stats() for r in self.members]
+    def describe(self) -> list[dict]:
+        return [r.describe() for r in self.members]
+
+    def stats(self) -> list[dict]:  # legacy-ok
+        """Deprecated alias for :meth:`describe` (one release)."""
+        warnings.warn("ReplicaSet.stats() is deprecated; use describe()",
+                      DeprecationWarning, stacklevel=2)
+        return self.describe()

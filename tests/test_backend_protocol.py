@@ -1,0 +1,115 @@
+"""Backend contract conformance (ann.MutableAnnBackend and friends).
+
+The serving stack programs against three typed ``Protocol``s instead of
+duck-typing: ``MutableAnnBackend`` (build / upsert / delete / search +
+the ``SnapshotStateful`` persistence pair), ``StagedAnnBackend`` (the
+three-phase mutate split the async pipeline double-buffers), and
+``core.maintenance.SnapshotStateful`` itself. These tests pin both the
+structural contract (``isinstance`` over the runtime-checkable
+protocols) and the behavioral one — identically for all three backends,
+so a new backend that passes here can be dropped behind ``DynamicGUS``
+unchanged.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.ann import (BruteIndex, MutableAnnBackend, ScannConfig,
+                       ScannIndex, ShardedConfig, ShardedGusIndex,
+                       StagedAnnBackend)
+from repro.core import BucketConfig
+from repro.core.embedding import EmbeddingGenerator
+from repro.core.maintenance import SnapshotStateful
+from repro.data.synthetic import OGB_ARXIV_LIKE, make_dataset
+
+BACKENDS = ["brute", "scann", "sharded"]
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    data = dataclasses.replace(OGB_ARXIV_LIKE, n_points=400, n_clusters=8)
+    ids, feats, _ = make_dataset(data)
+    gen = EmbeddingGenerator.create(
+        data.spec, BucketConfig(dense_tables=8, dense_bits=10,
+                                scalar_widths=(2.0,)))
+    return ids, gen(feats)
+
+
+def make_backend(name: str, k: int):
+    if name == "brute":
+        return BruteIndex(k)
+    if name == "scann":
+        return ScannIndex(k, ScannConfig(d_proj=32, n_partitions=8,
+                                         nprobe=4, reorder=64))
+    return ShardedGusIndex(k, ShardedConfig(
+        n_shards=1, d_proj=32, n_partitions=8, nprobe_local=0, reorder=512,
+        pq_m=4, kmeans_iters=4, pq_iters=2))
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_structural_conformance(corpus, name):
+    """Every backend satisfies all three runtime-checkable protocols."""
+    _, emb = corpus
+    idx = make_backend(name, emb.k)
+    assert isinstance(idx, MutableAnnBackend)
+    assert isinstance(idx, StagedAnnBackend)
+    assert isinstance(idx, SnapshotStateful)
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_mutable_backend_contract(corpus, name):
+    """build -> upsert -> search -> delete behaves identically (up to
+    approximation) across backends: inserted points become their own
+    nearest neighbor, deletes are idempotent and make rows invisible."""
+    ids, emb = corpus
+    idx = make_backend(name, emb.k)
+    idx.build(ids[:200], emb[:200])
+    assert len(idx) == 200
+    idx.upsert(ids[200:220], emb[200:220])
+    assert len(idx) == 220
+    got, dists = idx.search(emb[200:201], 3)
+    assert got.shape == (1, 3) and dists.shape == (1, 3)
+    assert got[0, 0] == ids[200]
+    assert dists[0, 0] < 0                       # negative-dot distance
+    assert idx.delete(ids[200:205]) == 5
+    assert idx.delete(ids[200:205]) == 0         # idempotent
+    assert len(idx) == 215
+    got, _ = idx.search(emb[200:201], 5)
+    assert int(ids[200]) not in set(got[got >= 0].tolist())
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_staged_backend_composition(corpus, name):
+    """The three-phase split composes to exactly ``upsert`` (the invariant
+    the async pipeline's correctness rests on)."""
+    ids, emb = corpus
+    idx = make_backend(name, emb.k)
+    idx.build(ids[:200], emb[:200])
+    staged = idx.encode_upsert(ids[220:230], emb[220:230])
+    pending = idx.begin_upsert(ids[220:230], emb[220:230], staged)
+    idx.finish_upsert(pending)
+    assert len(idx) == 210
+    got, _ = idx.search(emb[221:222], 1)
+    assert got[0, 0] == ids[221]
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_snapshot_state_round_trip(corpus, name):
+    """snapshot_state() -> restore_state() onto a fresh instance carries
+    the routing policy (the sharded owner-hash salt) so a rebuild from
+    the same corpus routes — and therefore searches — the same way."""
+    ids, emb = corpus
+    idx = make_backend(name, emb.k)
+    idx.build(ids[:200], emb[:200])
+    state = idx.snapshot_state()
+    assert isinstance(state, dict)
+    fresh = make_backend(name, emb.k)
+    fresh.restore_state(state)               # install policy BEFORE build
+    if hasattr(idx, "salt"):
+        assert fresh.salt == idx.salt
+    fresh.build(ids[:200], emb[:200])
+    i1, d1 = idx.search(emb[:16], 5)
+    i2, d2 = fresh.search(emb[:16], 5)
+    np.testing.assert_array_equal(i1, i2)
+    np.testing.assert_array_equal(d1, d2)

@@ -25,13 +25,17 @@ import sys
 import textwrap
 
 import jax
+import numpy as np
 import pytest
 
 from benchmarks.loadgen import LoadgenConfig, run_loadgen
 from repro.core import BucketConfig, DynamicGUS, GusConfig
+from repro.core.maintenance import MaintenanceConfig
 from repro.core.scorer import train_scorer
 from repro.data.stream import MutationStream, StreamConfig
 from repro.data.synthetic import OGB_ARXIV_LIKE, labeled_pairs, make_dataset
+from repro.graph.cc import offline_components
+from repro.graph.store import GraphConfig
 from repro.serve import (EngineConfig, FaultInjector, Frontend,
                          FrontendConfig, GusEngine)
 
@@ -147,8 +151,74 @@ def test_chaos_closed_loop_single_device(world):
     total_accepted = sum(r.accepted for _, r in reports)
     total_done = sum(r.completed + r.errors for _, r in reports)
     assert total_accepted == total_done
-    st = fe.stats()
+    st = fe.describe()
     assert st["queued"] == {"query": 0, "mutate": 0}
+
+
+@pytest.mark.chaos
+def test_chaos_maintenance_plane_during_faults(world):
+    """The concurrent maintenance plane rides through the fault script:
+    the primary serves from versioned graph snapshots (staleness_bound=3)
+    while a replica dies, the primary straggles, and the member rejoins.
+    Invariants: zero lost accepted requests in every phase, the published
+    view never lags the applied stream by more than the bound at any
+    phase boundary, versions only move forward (no half-built snapshot
+    is ever observable), and quiescence is exact."""
+    ids, feats, scorer = world
+
+    def mk(bound):
+        gus = DynamicGUS(DATA.spec, BUCKETS, scorer, GusConfig(
+            scann_nn=10, backend="brute",
+            graph=GraphConfig(k=4, capacity=512),
+            maintenance=MaintenanceConfig(staleness_bound=bound)))
+        gus.bootstrap(ids[:150], {k: v[:150] for k, v in feats.items()})
+        return gus
+
+    faults = FaultInjector()
+    engine = GusEngine(mk(3), EngineConfig(snapshot_every=1000,
+                                           pipeline=True),
+                       replicas=[mk(0), mk(0)], faults=faults)
+    fe = Frontend(engine, FrontendConfig(query_queue=64, mutate_queue=64,
+                                         query_dispatch=4,
+                                         mutate_dispatch=2))
+    stream = MutationStream(DATA, StreamConfig(batch_size=8, seed=23),
+                            bootstrap_fraction=0.5)
+    cfg = LoadgenConfig(mode="closed", requests=20, users=4,
+                        mutate_every=4, k=5)
+    pipe = engine.pipelines[0]
+    assert pipe.bound == 3 and pipe.window_size() == 3   # pin is gone
+    reports, versions = [], []
+
+    def phase(tag):
+        rep = run_loadgen(fe, stream, cfg)
+        assert rep.lost == 0 and rep.shed == 0 and rep.errors == 0, \
+            (tag, rep.row())
+        view = engine.gus.graph.view()
+        lag = engine.gus.seq_applied - view.seq
+        assert 0 <= lag <= pipe.bound, (tag, lag)
+        versions.append(view.version)
+        reports.append((tag, rep))
+
+    phase("healthy")
+    faults.kill(0)                                 # replica dies mid-plane
+    faults.slow(FaultInjector.PRIMARY, 200.0)      # and the primary lags
+    phase("replica-dead+straggler")
+    faults.revive(0)
+    faults.clear_slow(FaultInjector.PRIMARY)
+    phase("recovered")
+    assert versions == sorted(versions)            # forward-only publishes
+    assert pipe.worker.ticks > 0                   # the plane actually ran
+
+    engine.flush()                                 # quiescence: exact again
+    assert pipe.worker.lag() == 0 and pipe.worker.pending() == 0
+    g = engine.gus.graph
+    assert g.view().seq == engine.gus.seq_applied
+    assert g.components() == offline_components(
+        g.edges()[0], np.asarray(sorted(g.slot_of)))
+    r0 = engine.replica_set.members[0]
+    assert r0.applied_seq == engine.seq            # rejoined at freshness
+    total_accepted = sum(r.accepted for _, r in reports)
+    assert total_accepted == sum(r.completed + r.errors for _, r in reports)
 
 
 @pytest.mark.chaos

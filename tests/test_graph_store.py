@@ -290,7 +290,7 @@ def test_engine_snapshot_recovers_graph(gus_setup):
     engine = GusEngine(gus, EngineConfig(snapshot_every=2))
     for _, batch in zip(range(4), stream):
         engine.submit_mutations(batch)
-    stats = engine.stats()
+    stats = engine.describe()
     assert stats["graph"]["nodes"] == len(gus.graph)
     assert stats["graph"]["edges"] > 0
 

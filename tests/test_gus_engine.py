@@ -112,7 +112,7 @@ def test_freshness_counts_every_mutation_batch(world):
             ids=ids[lo:lo + 16],
             features={k: v[lo:lo + 16] for k, v in feats.items()})
         engine.submit_mutations(mb)
-    stats = engine.stats()
+    stats = engine.describe()
     assert stats["freshness"]["n"] == 3
     assert stats["freshness"]["p99_ms"] >= stats["freshness"]["p50_ms"]
     assert len(gus.index) == 200 + 48
@@ -135,7 +135,7 @@ def test_hedge_uses_replicas_round_robin(world):
     assert engine.replica_hedges == [1, 1]          # round robin
     # replicas saw the same corpus -> identical exact answers
     np.testing.assert_array_equal(r1.ids, r2.ids)
-    stats = engine.stats()
+    stats = engine.describe()
     assert stats["replica_hedges"] == [1, 1]
 
 
@@ -186,7 +186,7 @@ def test_engine_on_sharded_backend(world):
     assert len(gus.index) == 216
     res = engine.query({k: v[200:201] for k, v in feats.items()}, k=3)
     assert res.ids[0, 0] == ids[200]                # finds itself
-    assert engine.stats()["freshness"]["n"] == 1
+    assert engine.describe()["freshness"]["n"] == 1
 
 
 # ------------------------------------------------------- span-tree tracing
@@ -333,7 +333,7 @@ def test_dead_primary_fails_over_to_survivors(world):
     assert survivor.failovers == 1 and survivor.served == 1
     assert dead.served == 0                # never answered from a dead replica
     assert engine.primary.served == 0
-    st = engine.stats()
+    st = engine.describe()
     assert st["failovers"] == 1
     assert st["replicas"][0]["alive"] is False
 
@@ -355,13 +355,13 @@ def test_slow_primary_hedges_and_p95_reflects_interference(world):
     for _ in range(8):                     # baseline: fast, no hedges
         engine.query(q, k=5)
     assert engine.hedged == 0
-    base_p95 = engine.stats()["serving"]["p95_ms"]
+    base_p95 = engine.describe()["serving"]["p95_ms"]
     faults.slow(FaultInjector.PRIMARY, 500.0)   # straggler: +500ms, no sleep
     for _ in range(2):
         engine.query(q, k=5)
     assert engine.hedged == 2              # deadline blown deterministically
     assert engine.replica_hedges == [2]    # both answers from the replica
-    s = engine.stats()["serving"]
+    s = engine.describe()["serving"]
     assert s["max_ms"] >= 500.0            # interference visible in the tail
     assert s["p95_ms"] > base_p95
     faults.clear_slow(FaultInjector.PRIMARY)

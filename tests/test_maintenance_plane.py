@@ -1,0 +1,206 @@
+"""Concurrent maintenance plane: bounded staleness as a property.
+
+``MaintenanceConfig.staleness_bound`` is a *contract*, not a hint: at
+every serve point (after every submit and every query) the published
+``GraphView`` that serving reads may lag the applied mutation stream by
+at most ``staleness_bound`` batches, and the view sequence/version are
+monotone. At quiescence (``flush()``) the plane must have fully caught
+up and connected components must match the offline union-find oracle
+exactly. With ``staleness_bound == 0`` the plane is inert and the
+pipeline reproduces the synchronous path bitwise — graph adjacency,
+CC labels, and index neighborhoods — on all three backends.
+
+Also pins the one-release deprecation surface introduced alongside the
+plane: legacy per-subsystem maintenance knobs fold into
+``MaintenanceConfig`` with a ``DeprecationWarning``, and the ``stats()``
+compatibility wrappers warn and delegate to ``describe()``.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.ann.scann import ScannConfig
+from repro.ann.sharded_index import ShardedConfig, ShardedGusIndex
+from repro.core import BucketConfig, DynamicGUS, GusConfig
+from repro.core.maintenance import MaintenanceConfig
+from repro.core.scorer import train_scorer
+from repro.data.stream import MutationStream, StreamConfig
+from repro.data.synthetic import OGB_ARXIV_LIKE, labeled_pairs, make_dataset
+from repro.graph.cc import offline_components
+from repro.graph.store import GraphConfig
+from repro.serve.pipeline import MutationPipeline, PipelineConfig
+
+DATA = dataclasses.replace(OGB_ARXIV_LIKE, n_points=300, n_clusters=6)
+BUCKETS = BucketConfig(dense_tables=8, dense_bits=10, scalar_widths=(2.0,))
+
+BACKENDS = {
+    "brute": {},
+    "scann": {"scann": ScannConfig(d_proj=32, n_partitions=16, nprobe=4,
+                                   reorder=64)},
+    "sharded": {"sharded": ShardedConfig(
+        n_shards=1, d_proj=32, n_partitions=8, nprobe_local=0, reorder=512,
+        pq_m=4, kmeans_iters=4, pq_iters=2)},
+}
+
+
+@pytest.fixture(scope="module")
+def world():
+    ids, feats, cluster = make_dataset(DATA)
+    pf, lbl = labeled_pairs(feats, cluster, 600, DATA.spec, seed=1)
+    scorer, _ = train_scorer(jax.random.PRNGKey(0), DATA.spec, pf, lbl,
+                             steps=40)
+    return ids, feats, scorer
+
+
+def _gus(world, backend, bound=0):
+    ids, feats, scorer = world
+    gus = DynamicGUS(DATA.spec, BUCKETS, scorer, GusConfig(
+        scann_nn=5, backend=backend,
+        graph=GraphConfig(k=4, capacity=512),
+        maintenance=MaintenanceConfig(staleness_bound=bound),
+        **BACKENDS[backend]))
+    gus.bootstrap(ids[:150], {k: v[:150] for k, v in feats.items()})
+    return gus
+
+
+def _stream(seed, **kw):
+    return MutationStream(DATA, StreamConfig(batch_size=16, seed=seed, **kw),
+                          bootstrap_fraction=0.5)
+
+
+def _cc_matches_oracle(gus):
+    comps = gus.graph.components()
+    oracle = offline_components(gus.graph.edges()[0],
+                                np.asarray(sorted(gus.graph.slot_of)))
+    return comps == oracle
+
+
+# ------------------------------------------- the bounded-staleness property
+
+@pytest.mark.parametrize("backend,bound", [
+    ("brute", 1), ("brute", 3), ("scann", 2), ("sharded", 4)])
+def test_bounded_staleness_property(world, backend, bound):
+    """Randomized mutate/query interleavings: the serving view never lags
+    the applied stream by more than ``staleness_bound`` batches at any
+    serve point, versions are monotone, and quiescence is exact."""
+    ids, _, _ = world
+    gus = _gus(world, backend, bound=bound)
+    pipe = MutationPipeline(gus, PipelineConfig(window=8))
+    assert pipe.window_size() == min(8, bound)    # the pin is gone
+    rng = np.random.default_rng(101 * bound + len(backend))
+    boot_ids = np.asarray(ids[:150])
+    observed = []                                 # (version, lag) per point
+
+    def serve_point():
+        view = gus.graph.view()
+        lag = gus.seq_applied - view.seq
+        assert 0 <= lag <= bound, (
+            f"staleness bound violated: lag={lag} > bound={bound}")
+        observed.append((view.version, lag))
+
+    for batch in (b for _, b in zip(range(10), _stream(7 + bound))):
+        pipe.submit(batch)
+        serve_point()
+        if rng.random() < 0.7:
+            q = rng.choice(boot_ids, size=4, replace=False)
+            res = gus.neighbors_of_ids(q, k=4)
+            assert res.ids.shape == (4, 4)
+            serve_point()
+
+    assert max(lag for _, lag in observed) > 0    # the plane actually ran
+    versions = [v for v, _ in observed]
+    assert versions == sorted(versions)           # monotone publishes
+
+    pipe.flush()                                  # quiescence barrier
+    assert pipe.worker.pending() == 0
+    assert pipe.worker.lag() == 0
+    assert gus.graph.view().seq == gus.seq_applied
+    assert _cc_matches_oracle(gus)
+
+
+def test_view_is_immutable_under_lagging_writes(world):
+    """A view captured at a serve point answers identically after more
+    batches are applied — queries read an atomic snapshot, never a
+    half-maintained store."""
+    ids, _, _ = world
+    gus = _gus(world, "brute", bound=3)
+    pipe = MutationPipeline(gus)
+    stream = _stream(31)
+    pipe.submit(next(iter(stream)))
+    view = gus.graph.view()
+    q = np.asarray(ids[:8])
+    before = view.neighbors_of_ids(q, 4)
+    for batch in (b for _, b in zip(range(6), stream)):
+        pipe.submit(batch)
+    after = view.neighbors_of_ids(q, 4)           # same captured version
+    np.testing.assert_array_equal(before.ids, after.ids)
+    np.testing.assert_array_equal(before.weights, after.weights)
+    pipe.flush()
+    assert gus.graph.view().version > view.version
+
+
+# ------------------------------------------------ bound == 0 stays bitwise
+
+@pytest.mark.parametrize("backend", ["brute", "scann", "sharded"])
+def test_bound_zero_is_bitwise_sync(world, backend):
+    """An explicit ``staleness_bound=0`` reproduces the synchronous path
+    exactly: strict fuse window, identical adjacency, identical CC."""
+    sync_g = _gus(world, backend, bound=0)
+    pipe_g = _gus(world, backend, bound=0)
+    pipe = MutationPipeline(pipe_g)
+    assert pipe.window_size() == 1                # graph pin is back
+    for a, b in ((a, b) for _, (a, b) in zip(range(4), zip(
+            _stream(13), _stream(13)))):
+        sync_g.mutate(a)
+        pipe.submit(b)
+    pipe.flush()
+    assert pipe.worker.pending() == 0             # nothing ever deferred
+    assert pipe.worker.ticks == 0
+    np.testing.assert_array_equal(np.asarray(sync_g.graph.nbr_slots),
+                                  np.asarray(pipe_g.graph.nbr_slots))
+    np.testing.assert_array_equal(np.asarray(sync_g.graph.nbr_w),
+                                  np.asarray(pipe_g.graph.nbr_w))
+    assert sync_g.graph.slot_of == pipe_g.graph.slot_of
+    assert sync_g.graph.components() == pipe_g.graph.components()
+    assert _cc_matches_oracle(pipe_g)
+    qids = np.asarray(sorted(sync_g.store._rows))[:16]
+    r1 = sync_g._index_neighbors_of_ids(qids, 5)
+    r2 = pipe_g._index_neighbors_of_ids(qids, 5)
+    np.testing.assert_array_equal(r1.ids, r2.ids)
+    np.testing.assert_array_equal(r1.distances, r2.distances)
+
+
+# ----------------------------------------------- one-release deprecations
+
+def test_legacy_sharded_knobs_warn_and_fold():
+    with pytest.warns(DeprecationWarning, match="slab_headroom"):
+        cfg = ShardedConfig(slab_headroom=3.0, auto_compact=False)  # legacy-ok
+    assert cfg.maintenance.headroom == 3.0
+    assert cfg.maintenance.compact is False
+    assert cfg.slab_headroom is None          # folded, single source  # legacy-ok
+    with pytest.warns(DeprecationWarning, match="soar_lambda"):
+        cfg = ShardedConfig(soar_lambda=-1.0)  # legacy-ok
+    assert cfg.maintenance.soar == -1.0
+
+
+def test_legacy_graph_knob_warns_and_folds():
+    with pytest.warns(DeprecationWarning, match="repair_per_batch"):
+        cfg = GraphConfig(k=4, capacity=64, repair_per_batch=7)  # legacy-ok
+    assert cfg.maintenance.repair_per_tick == 7
+
+
+def test_stats_wrappers_warn_and_delegate(world):
+    gus = _gus(world, "brute")
+    pipe = MutationPipeline(gus)
+    with pytest.warns(DeprecationWarning, match="describe"):
+        legacy = pipe.stats()  # legacy-ok
+    assert legacy == pipe.describe()
+    with pytest.warns(DeprecationWarning, match="describe"):
+        legacy = gus.graph.stats()  # legacy-ok
+    assert legacy == gus.graph.describe()
+    idx = ShardedGusIndex(4, BACKENDS["sharded"]["sharded"])
+    with pytest.warns(DeprecationWarning, match="describe"):
+        legacy = idx.stats()  # legacy-ok
+    assert legacy == idx.describe()

@@ -23,6 +23,7 @@ from repro.ann.scann import ScannConfig
 from repro.ann.sharded_index import ShardedConfig
 from repro.core import (BucketConfig, DynamicGUS, GusConfig, MutationBatch,
                         MUTATION_DELETE, MUTATION_INSERT)
+from repro.core.maintenance import MaintenanceConfig
 from repro.core.scorer import train_scorer
 from repro.data.stream import MutationStream, StreamConfig
 from repro.data.synthetic import OGB_ARXIV_LIKE, labeled_pairs, make_dataset
@@ -162,8 +163,9 @@ def test_pipeline_compaction_boundary(world):
     per-batch schedule — raw index state stays bit-identical."""
     ids, feats, scorer = world
     tight = ShardedConfig(
-        n_shards=1, d_proj=32, n_partitions=4, slab=64, slab_headroom=1.5,
-        nprobe_local=0, reorder=2048, pq_m=4, kmeans_iters=4, pq_iters=2)
+        n_shards=1, d_proj=32, n_partitions=4, slab=64, nprobe_local=0,
+        reorder=2048, pq_m=4, kmeans_iters=4, pq_iters=2,
+        maintenance=MaintenanceConfig(headroom=1.5))
 
     def make():
         gus = DynamicGUS(DATA.spec, BUCKETS, scorer, GusConfig(
@@ -195,7 +197,8 @@ def test_pipeline_armed_resplit_pins_window(world):
     ids, feats, scorer = world
     armed = ShardedConfig(
         n_shards=1, d_proj=32, n_partitions=8, nprobe_local=0, reorder=512,
-        pq_m=4, kmeans_iters=4, pq_iters=2, resplit_imbalance=1.5)
+        pq_m=4, kmeans_iters=4, pq_iters=2,
+        maintenance=MaintenanceConfig(resplit=1.5))
 
     def make():
         gus = DynamicGUS(DATA.spec, BUCKETS, scorer, GusConfig(
@@ -260,7 +263,7 @@ def test_engine_pipeline_query_reads_writes(world):
     res = engine.query({k: v[200:201] for k, v in feats.items()}, k=3)
     assert not engine.pipelines[0].in_flight      # flushed
     assert res.ids[0, 0] == ids[200]
-    stats = engine.stats()
+    stats = engine.describe()
     assert stats["pipeline"]["submitted"] == 8
     assert stats["pipeline"]["ticks"] >= 1
 

@@ -28,6 +28,7 @@ from repro.ann.brute import BruteIndex
 from repro.ann.sharded_index import ShardedConfig, ShardedGusIndex
 from repro.core import BucketConfig
 from repro.core.embedding import EmbeddingGenerator
+from repro.core.maintenance import MaintenanceConfig
 from repro.data.synthetic import OGB_ARXIV_LIKE, make_dataset
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -63,8 +64,8 @@ def test_soar_writes_two_copies(corpus):
         r1, r2 = idx.row_of[pid]
         assert r1 // idx.slab != r2 // idx.slab      # distinct partitions
         assert row_ids[r1] == pid and row_ids[r2] == pid
-    one = ShardedGusIndex(gen.k_max,
-                          ShardedConfig(**BASE, soar_lambda=-1.0))
+    one = ShardedGusIndex(gen.k_max, ShardedConfig(
+        **BASE, maintenance=MaintenanceConfig(soar=-1.0)))
     one.build(ids, emb)
     assert int(np.asarray(one.state["valid"]).sum()) == len(one)
     assert all(len(v) == 1 for v in one.row_of.values())
@@ -97,7 +98,8 @@ def test_soar_recall_at_least_single_copy(corpus):
     for name, lam in (("soar", 1.0), ("single", -1.0)):
         cfg = ShardedConfig(n_shards=1, d_proj=32, n_partitions=16,
                             nprobe_local=2, reorder=64, pq_m=4,
-                            kmeans_iters=6, pq_iters=3, soar_lambda=lam)
+                            kmeans_iters=6, pq_iters=3,
+                            maintenance=MaintenanceConfig(soar=lam))
         idx = ShardedGusIndex(gen.k_max, cfg)
         idx.build(ids[:300], emb[:300])
         for lo in range(300, 600, 64):               # the live stream
@@ -155,9 +157,10 @@ def _churn(gen, ids, emb, rounds, *, auto, delete_per=16, insert_per=32):
     """Delete/insert churn sized to wrap the (deliberately small) slabs.
     Returns (index, live id set, emb row per live id, appended copies)."""
     cfg = ShardedConfig(n_shards=1, d_proj=32, n_partitions=4, slab=64,
-                        slab_headroom=2.0, nprobe_local=0, reorder=4096,
+                        nprobe_local=0, reorder=4096,
                         pq_m=4, kmeans_iters=4, pq_iters=2,
-                        auto_compact=auto)
+                        maintenance=MaintenanceConfig(headroom=2.0,
+                                                      compact=auto))
     idx = ShardedGusIndex(gen.k_max, cfg)
     n0 = 96
     idx.build(ids[:n0], emb[:n0])
@@ -242,6 +245,7 @@ def test_resplit_rebalances_hot_shard():
         import numpy as np
         import jax.numpy as jnp
         from repro.ann.sharded_index import ShardedConfig, ShardedGusIndex
+        from repro.core.maintenance import MaintenanceConfig
         from repro.core import BucketConfig, hashing
         from repro.core.embedding import EmbeddingGenerator
         from repro.data.synthetic import OGB_ARXIV_LIKE, make_dataset
@@ -265,7 +269,7 @@ def test_resplit_rebalances_hot_shard():
         cfg = ShardedConfig(n_shards=4, d_proj=32, n_partitions=8,
                             nprobe_local=0, reorder=4096, pq_m=4,
                             kmeans_iters=4, pq_iters=2,
-                            resplit_imbalance=1.5)
+                            maintenance=MaintenanceConfig(resplit=1.5))
         idx = ShardedGusIndex(gen.k_max, cfg)
         idx.build(ids, emb)
         before = idx.occupancy()
@@ -333,8 +337,12 @@ def test_resplit_rejects_unknown_metric(corpus):
     idx.build(ids[:100], emb[:100])
     with pytest.raises(ValueError, match="resplit by"):
         idx.resplit(1.5, by="qps")
-    with pytest.raises(ValueError, match="resplit_by"):
-        ShardedGusIndex(gen.k_max, ShardedConfig(**BASE, resplit_by="qps"))
+    with pytest.raises(ValueError, match="resplit_metric"):
+        MaintenanceConfig(resplit_metric="qps")
+    # the one-release shim folds the legacy spelling into the same check
+    with pytest.raises(ValueError, match="resplit_metric"):
+        with pytest.warns(DeprecationWarning):
+            ShardedConfig(**BASE, resplit_by="qps")  # legacy-ok
 
 
 @pytest.mark.slow
@@ -349,6 +357,7 @@ def test_resplit_by_query_load_moves_hot_read_shard():
         import numpy as np
         import jax.numpy as jnp
         from repro.ann.sharded_index import ShardedConfig, ShardedGusIndex
+        from repro.core.maintenance import MaintenanceConfig
         from repro.core import BucketConfig, hashing
         from repro.core.embedding import EmbeddingGenerator
         from repro.data.synthetic import OGB_ARXIV_LIKE, make_dataset

@@ -143,7 +143,7 @@ def test_engine_freshness_and_stats(world):
     engine.submit_mutations(mb)
     res = engine.query({k: v[500:501] for k, v in feats.items()}, k=3)
     assert res.ids.shape == (1, 3)
-    stats = engine.stats()
+    stats = engine.describe()
     assert stats["freshness"]["n"] == 1
     assert stats["query_latency"]["n"] >= 1
 

@@ -19,9 +19,25 @@ AST walk can check without third-party packages:
         passed to ``.counter()`` / ``.gauge()`` / ``.histogram()`` in the
         telemetry-instrumented packages must be snake_case under a
         component prefix (``frontend_`` / ``engine_`` / ``pipeline_`` /
-        ``index_`` / ``obs_``), with ``_total`` on counters and ``_ms``
-        on histograms (docs/OBSERVABILITY.md; f-string names are covered
-        at runtime by tools/check_metrics.py instead)
+        ``index_`` / ``obs_`` / ``maintenance_``), with ``_total`` on
+        counters and ``_ms`` on histograms (docs/OBSERVABILITY.md;
+        f-string names are covered at runtime by tools/check_metrics.py
+        instead)
+  MNT1  deprecated maintenance knob — the per-subsystem lifecycle knobs
+        (``ShardedConfig.auto_compact`` / ``slab_headroom`` /
+        ``resplit_imbalance`` / ``resplit_by`` / ``soar_lambda``,
+        ``GraphConfig.repair_per_batch``) consolidated into
+        ``core.maintenance.MaintenanceConfig``; the old names keep
+        working for one release through deprecation shims, but in-repo
+        call sites must use the new spelling (``soar_lambda`` is flagged
+        only as a ``ShardedConfig(...)`` keyword — it remains the
+        canonical name on ``ScannConfig`` and in ``ann.partition``)
+  DEP1  deprecated ``stats()`` compatibility dict — in-repo callers must
+        use the ``describe()`` replacement (the ``stats()`` thin
+        wrappers emit ``DeprecationWarning`` and last one release)
+
+A trailing ``# legacy-ok`` comment exempts a line from MNT1/DEP1 (used
+by the shim definitions themselves and the deprecation tests).
 
 When ruff itself is installed (the GitHub Actions lane installs it),
 ci.sh prefers it for the style subset but still runs this module with
@@ -46,8 +62,14 @@ DOCSTRING_DIRS = ("src/repro/ann", "src/repro/serve", "src/repro/graph",
 # namespace (OBS1); sharded_index.py registers index_* from ann
 INSTRUMENT_DIRS = ("src/repro/obs", "src/repro/serve", "src/repro/ann")
 INSTRUMENT_RE = re.compile(
-    r"^(frontend|engine|pipeline|index|obs)_[a-z][a-z0-9_]*$")
+    r"^(frontend|engine|pipeline|index|obs|maintenance)_[a-z][a-z0-9_]*$")
 INSTRUMENT_SUFFIX = {"counter": "_total", "histogram": "_ms"}
+# maintenance knobs folded into core.maintenance.MaintenanceConfig; the
+# old spellings survive one release behind deprecation shims but are
+# banned from in-repo call sites (MNT1)
+LEGACY_KNOBS = {"auto_compact", "slab_headroom", "resplit_imbalance",
+                "resplit_by", "repair_per_batch"}
+LEGACY_ESCAPE = "legacy-ok"
 
 
 def _module_imports(tree: ast.Module) -> dict[str, ast.stmt]:
@@ -129,6 +151,52 @@ def instrument_problems(tree: ast.Module, path: Path) -> list[str]:
     return problems
 
 
+def deprecation_problems(tree: ast.Module, path: Path,
+                         lines: list[str]) -> list[str]:
+    """MNT1 + DEP1: deprecated maintenance knobs and ``stats()``
+    compatibility dicts must not appear at in-repo call sites. A line
+    carrying a ``legacy-ok`` comment is exempt (the shims themselves,
+    and tests that pin the deprecation behavior)."""
+
+    def escaped(node) -> bool:
+        line = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
+        return LEGACY_ESCAPE in line
+
+    problems = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg in LEGACY_KNOBS and not escaped(node):
+                    problems.append(
+                        f"{path}:{node.lineno}: MNT1 deprecated "
+                        f"maintenance knob {kw.arg!r} (use "
+                        "MaintenanceConfig)")
+                elif (kw.arg == "soar_lambda"
+                        and isinstance(node.func, ast.Name)
+                        and node.func.id == "ShardedConfig"
+                        and not escaped(node)):
+                    problems.append(
+                        f"{path}:{node.lineno}: MNT1 deprecated "
+                        "ShardedConfig knob 'soar_lambda' (use "
+                        "MaintenanceConfig.soar)")
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "stats"
+                    and not node.args and not node.keywords
+                    and not escaped(node)):
+                problems.append(
+                    f"{path}:{node.lineno}: DEP1 deprecated stats() "
+                    "compatibility dict (use describe())")
+        elif (isinstance(node, ast.Attribute)
+                and node.attr in LEGACY_KNOBS
+                and isinstance(node.ctx, ast.Load)
+                and not escaped(node)):
+            problems.append(
+                f"{path}:{node.lineno}: MNT1 deprecated maintenance "
+                f"knob attribute {node.attr!r} (read "
+                "cfg.maintenance instead)")
+    return problems
+
+
 def docstring_problems(path: Path) -> list[str]:
     """D100 for one file: a module (or package __init__) docstring."""
     try:
@@ -173,6 +241,7 @@ def lint_file(path: Path, root: Path | None = None) -> list[str]:
             problems.append(f"{path}:{node.lineno}: E722 bare except")
     if root is not None and _in_dirs(path, root, INSTRUMENT_DIRS):
         problems.extend(instrument_problems(tree, path))
+    problems.extend(deprecation_problems(tree, path, text.splitlines()))
     if path.name != "__init__.py":          # re-export surface is exempt
         imports = _module_imports(tree)
         used = _used_names(tree)

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import corpus, emit, timed
+from benchmarks.common import corpus, emit, record_metric, timed
 from repro.core.graph import edge_weight_percentiles
 from repro.core.grale import GraleConfig, grale_graph
 
@@ -23,6 +23,12 @@ def run(dataset: str = "arxiv", n: int = 1500) -> list:
         rows.append({"dataset": dataset, "bucket_s": bucket_s, **stats})
         emit(f"grale_{dataset}_bucketS{bucket_s}", t,
              f"edges={stats['total_edges']};p20={stats.get('p20', 0):.3f}")
+    # headline numbers land in $BENCH_JSON like every other bench: edge
+    # quality at the largest split bound, build time machine-scoped
+    record_metric(f"grale_edge_p20_{dataset}", rows[-1].get("p20", 0.0),
+                  better="higher")
+    record_metric(f"grale_build_us_{dataset}", t, better="lower",
+                  portable=False)
     return rows
 
 

@@ -62,6 +62,9 @@ python tools/check_metrics.py
 python -m benchmarks.latency --smoke
 python -m benchmarks.graph_maintenance --smoke
 python -m benchmarks.mutations --pipeline --smoke
+# Android-Security time-to-flag: multimodal vs dense-only on one seeded
+# stream; asserts the >= 2.0 speedup and records the gated ratio
+python -m benchmarks.time_to_flag --smoke
 mv "$BENCH_JSON" "$BENCH_TARGET"
 
 python -m benchmarks.check_regression "$BENCH_TARGET" BENCH_baseline.json

@@ -40,6 +40,8 @@ from repro.core.scorer import pair_features, scorer_apply
 from repro.core.types import (FeatureSpec, MutationBatch, NeighborResult,
                               MUTATION_DELETE)
 from repro.graph.store import DynamicGraphStore, GraphConfig
+from repro.multimodal import (MultiModalConfig, MultiModalStore,
+                              two_stage_neighbors)
 from repro.utils.timing import Timer
 
 
@@ -55,6 +57,8 @@ class StagedMutation:
     feats: dict | None                      # store-normalized features
     emb: object | None                      # SparseBatch embeddings
     index_staged: object | None             # backend encode artifacts
+    buckets: tuple | None = None            # (bucket_ids, valid) np arrays,
+                                            # staged when multimodal is on
     pending: object | None = None           # in-flight device handle
 
 
@@ -72,6 +76,9 @@ class GusConfig:
     # set, it overrides the per-subsystem configs' own `maintenance`;
     # `staleness_bound > 0` activates the concurrent maintenance plane
     maintenance: MaintenanceConfig | None = None
+    # multi-modal scoring plane (repro.multimodal): None keeps the dense
+    # embed -> search -> score path bitwise unchanged
+    multimodal: MultiModalConfig | None = None
 
 
 def make_index(k_dims: int, cfg: GusConfig):
@@ -166,6 +173,8 @@ class DynamicGUS:
         self.store = FeatureStore(spec)
         self.index = make_index(self.embedder.k_max, cfg)
         self.graph = DynamicGraphStore(cfg.graph) if cfg.graph else None
+        self.multimodal = (MultiModalStore(cfg.multimodal)
+                           if cfg.multimodal is not None else None)
         # applied mutation batches — the staleness ledger the concurrent
         # maintenance plane stamps published snapshot versions against
         self.seq_applied = 0
@@ -191,6 +200,10 @@ class DynamicGUS:
         emb = self.embedder(features)
         self.index.build(ids, emb)
         self.store.put(ids, features)
+        if self.multimodal is not None:
+            # seed the multi-modal plane before the graph: its candidate
+            # stage feeds the graph-seeding neighborhood probes below
+            self.multimodal.rebuild(ids, emb, bucket_ids, valid)
         if self.graph is not None:
             self.graph = DynamicGraphStore(self.cfg.graph)   # fresh corpus
             if build_graph:
@@ -220,7 +233,10 @@ class DynamicGUS:
                 bucket_ids, valid, self.cfg.filter_percent))
         # the reloaded tables change the embeddings, so every backend
         # retrains/reloads from the live corpus
-        self.index.build(ids, self.embedder(feats))
+        emb = self.embedder(feats)
+        self.index.build(ids, emb)
+        if self.multimodal is not None:
+            self.multimodal.rebuild(ids, emb, bucket_ids, valid)
 
     # ------------------------------------------------------ mutation RPCs
 
@@ -240,6 +256,7 @@ class DynamicGUS:
             self.apply_mutation(staged)
             self.finish_mutation(staged)
         self.seq_applied += 1
+        self.maybe_reload_multimodal()
         if self.graph is not None:
             with self.graph_timer:
                 self.graph_apply(staged)
@@ -272,9 +289,16 @@ class DynamicGUS:
                 for k, v in batch.features.items()}
             emb = self.embedder(feats)
             index_staged = self.index.encode_upsert(up_ids, emb)
+        buckets = None
+        if self.multimodal is not None and feats is not None:
+            # buckets are a pure function of the features (IDF/filter
+            # tables only re-weight *after* generation), so staging them
+            # here keeps the encode stage side-effect-free
+            b_ids, b_valid = self.embedder.buckets(feats)
+            buckets = (np.asarray(b_ids), np.asarray(b_valid))
         return StagedMutation(n=int(ids.size), dels=dels, up_ids=up_ids,
                               feats=feats, emb=emb,
-                              index_staged=index_staged)
+                              index_staged=index_staged, buckets=buckets)
 
     def apply_mutation(self, staged: "StagedMutation") -> None:
         """Stage B dispatch: tombstone deletes, ship the staged upserts
@@ -284,10 +308,15 @@ class DynamicGUS:
         if staged.dels is not None:
             self.index.delete(staged.dels)
             self.store.drop(staged.dels)
+            if self.multimodal is not None:
+                self.multimodal.delete(staged.dels)
         if staged.up_ids is not None:
             staged.pending = self.index.begin_upsert(
                 staged.up_ids, staged.emb, staged.index_staged)
             self.store.put(staged.up_ids, staged.feats)
+            if self.multimodal is not None:
+                self.multimodal.upsert(staged.up_ids, staged.emb,
+                                       *staged.buckets)
 
     def finish_mutation(self, staged: "StagedMutation") -> None:
         """Barrier (hand-off): block on in-flight device appends and
@@ -311,7 +340,8 @@ class DynamicGUS:
             if reuse_emb:
                 res = self._neighbors_impl(staged.feats, probe_k,
                                            exclude_ids=staged.up_ids,
-                                           emb=staged.emb)
+                                           emb=staged.emb,
+                                           buckets=staged.buckets)
             else:
                 res = self._index_neighbors_of_ids(staged.up_ids, probe_k,
                                                    timed=False)
@@ -343,9 +373,28 @@ class DynamicGUS:
         with self.query_timer:
             return self._neighbors_impl(features, k, exclude_ids)
 
+    def maybe_reload_multimodal(self) -> bool:
+        """Reload the multi-modal routing tables when the configured
+        cadence divides the applied-batch sequence. Both write paths call
+        this right after bumping ``seq_applied`` (the pipeline pins its
+        fuse window to 1 while a cadence is set, so the schedules — and
+        therefore the tables any later batch embeds against — are
+        identical; see serve/pipeline.py window-closing rules)."""
+        mm = self.multimodal
+        if mm is None or mm.cfg.reload_every <= 0:
+            return False
+        if self.seq_applied > 0 and \
+                self.seq_applied % mm.cfg.reload_every == 0:
+            mm.reload()
+            return True
+        return False
+
     def _neighbors_impl(self, features, k, exclude_ids,
-                        emb=None) -> NeighborResult:
+                        emb=None, buckets=None) -> NeighborResult:
         k = k or self.cfg.scann_nn
+        if self.multimodal is not None:
+            return two_stage_neighbors(self, features, k, exclude_ids,
+                                       emb=emb, buckets=buckets)
         if emb is None:
             emb = self.embedder(features)
         ids, dists = self.index.search(emb, k + (exclude_ids is not None))
@@ -413,6 +462,8 @@ class DynamicGUS:
             "index": self.index.snapshot_state(),
             "graph": (self.graph.snapshot_state()
                       if self.graph is not None else None),
+            "multimodal": (self.multimodal.snapshot_state()
+                           if self.multimodal is not None else None),
         }
 
     def restore_state(self, state: dict) -> None:
@@ -428,6 +479,12 @@ class DynamicGUS:
                        build_graph=graph_state is None)
         if self.graph is not None and graph_state is not None:
             self.graph.restore_state(graph_state)
+        mm_state = state.get("multimodal")
+        if self.multimodal is not None and mm_state is not None:
+            # overwrite bootstrap's re-seed: posting-list membership is
+            # insertion-order-dependent (capped lists), so the restored
+            # plane must be the snapshotted one, not a rebuild
+            self.multimodal.restore_state(mm_state)
 
 
 def _drop_self(ids, dists, self_ids, k):

@@ -66,12 +66,17 @@ def bucket_counts(bucket_ids: np.ndarray, valid: np.ndarray) -> tuple:
     return np.unique(flat, return_counts=True)
 
 
-def build_idf_table(bucket_ids: np.ndarray, valid: np.ndarray,
-                    n_points: int, size: int) -> IdfTable:
-    """IDF-S = ``size`` table from a corpus snapshot (size=0 disables)."""
+def idf_table_from_counts(uniq: np.ndarray, counts: np.ndarray,
+                          n_points: int, size: int) -> IdfTable:
+    """IDF-S table from precomputed (uniq, counts) bucket statistics.
+
+    The from-scratch builder and the incremental ``IdfCounts`` materializer
+    both funnel through this function so their tables are bitwise identical
+    (``argpartition`` tie order is unspecified, so sharing the code path —
+    and the exact input arrays — is what guarantees equality).
+    """
     if size <= 0:
         return IdfTable.disabled()
-    uniq, counts = bucket_counts(bucket_ids, valid)
     idf = np.log(np.maximum(n_points, 1) / counts.astype(np.float64))
     if uniq.size > size:
         top = np.argpartition(-idf, size - 1)[:size]
@@ -85,14 +90,92 @@ def build_idf_table(bucket_ids: np.ndarray, valid: np.ndarray,
     )
 
 
+def filter_table_from_counts(uniq: np.ndarray, counts: np.ndarray,
+                             percent: float) -> FilterTable:
+    """Filter-P table from precomputed (uniq, counts) bucket statistics."""
+    if percent <= 0:
+        return FilterTable.disabled()
+    n_drop = int(np.ceil(uniq.size * percent / 100.0))
+    if n_drop == 0:
+        return FilterTable.disabled()
+    top = np.argpartition(-counts, min(n_drop, counts.size) - 1)[:n_drop]
+    return FilterTable(jnp.asarray(np.sort(uniq[top]), jnp.uint32))
+
+
+def build_idf_table(bucket_ids: np.ndarray, valid: np.ndarray,
+                    n_points: int, size: int) -> IdfTable:
+    """IDF-S = ``size`` table from a corpus snapshot (size=0 disables)."""
+    if size <= 0:
+        return IdfTable.disabled()
+    uniq, counts = bucket_counts(bucket_ids, valid)
+    return idf_table_from_counts(uniq, counts, n_points, size)
+
+
 def build_filter_table(bucket_ids: np.ndarray, valid: np.ndarray,
                        percent: float) -> FilterTable:
     """Filter-P = ``percent`` table: drop the most popular percent% of IDs."""
     if percent <= 0:
         return FilterTable.disabled()
     uniq, counts = bucket_counts(bucket_ids, valid)
-    n_drop = int(np.ceil(uniq.size * percent / 100.0))
-    if n_drop == 0:
-        return FilterTable.disabled()
-    top = np.argpartition(-counts, min(n_drop, counts.size) - 1)[:n_drop]
-    return FilterTable(jnp.asarray(np.sort(uniq[top]), jnp.uint32))
+    return filter_table_from_counts(uniq, counts, percent)
+
+
+class IdfCounts:
+    """Incremental corpus bucket statistics maintained from the mutation
+    stream (the online counterpart of §4.3's offline preprocessing).
+
+    Tracks, on host, the occurrence count of every valid bucket cell (the
+    same statistic as ``bucket_counts`` over the full corpus — within-row
+    duplicates included) plus the number of live points. ``idf_table`` /
+    ``filter_table`` materialize tables bitwise-equal to a from-scratch
+    ``build_idf_table`` / ``build_filter_table`` over the same corpus.
+    """
+
+    def __init__(self) -> None:
+        self._counts: dict[int, int] = {}
+        self.n_points = 0
+
+    def add(self, bucket_ids: np.ndarray, valid: np.ndarray) -> None:
+        """Count one batch of points' bucket rows ([B, k] + valid mask)."""
+        bucket_ids = np.asarray(bucket_ids)
+        counts = self._counts
+        for b in bucket_ids[np.asarray(valid)].tolist():
+            counts[b] = counts.get(b, 0) + 1
+        self.n_points += int(bucket_ids.shape[0])
+
+    def remove(self, bucket_ids: np.ndarray, valid: np.ndarray) -> None:
+        """Undo ``add`` for points leaving the corpus (delete / re-update)."""
+        bucket_ids = np.asarray(bucket_ids)
+        counts = self._counts
+        for b in bucket_ids[np.asarray(valid)].tolist():
+            c = counts.get(b, 0) - 1
+            if c <= 0:
+                counts.pop(b, None)
+            else:
+                counts[b] = c
+        self.n_points -= int(bucket_ids.shape[0])
+
+    def arrays(self) -> tuple:
+        """(uniq ascending uint32, counts int64) — ``bucket_counts`` shape."""
+        uniq = np.array(sorted(self._counts), np.uint32)
+        counts = np.array([self._counts[int(b)] for b in uniq], np.int64)
+        return uniq, counts
+
+    def idf_table(self, size: int) -> IdfTable:
+        uniq, counts = self.arrays()
+        return idf_table_from_counts(uniq, counts, self.n_points, size)
+
+    def filter_table(self, percent: float) -> FilterTable:
+        uniq, counts = self.arrays()
+        return filter_table_from_counts(uniq, counts, percent)
+
+    # -- SnapshotStateful ---------------------------------------------------
+    def snapshot_state(self) -> dict:
+        uniq, counts = self.arrays()
+        return {"ids": uniq, "counts": counts, "n_points": self.n_points}
+
+    def restore_state(self, state: dict) -> None:
+        ids = np.asarray(state["ids"]).tolist()
+        counts = np.asarray(state["counts"]).tolist()
+        self._counts = dict(zip((int(b) for b in ids), (int(c) for c in counts)))
+        self.n_points = int(state["n_points"])

@@ -8,8 +8,14 @@ for set modes, |Δ| for scalars). Trained offline with BCE on labeled pairs
 
 The scorer is pluggable by design ("Any desired model can be used, e.g.,
 Deep Neural Networks, Decision Trees, and Large Language Models") — the
-serving engine only needs ``apply(params, pair_feats) -> scores``; an
-LM-backed scorer lives in ``examples/lm_scorer.py``.
+serving engine only needs ``apply(params, pair_feats) -> scores``; the
+serving-side consumer (and an LM-swap point) lives in
+``examples/android_security.py``.
+
+``score_pairs`` is the one public scoring entry point (lint rule MM1 bans
+direct ``scorer_logits`` calls elsewhere); its ``backend`` selects the
+jitted jnp path, the fused Pallas ``kernels/scorer_mlp`` kernel, or the
+``kernels/ref.py`` parity oracle.
 """
 from __future__ import annotations
 
@@ -88,8 +94,26 @@ def scorer_apply(params: dict, feats: jax.Array) -> jax.Array:
     return jax.nn.sigmoid(scorer_logits(params, feats))
 
 
-def score_pairs(params: dict, fa, fb, spec: FeatureSpec) -> jax.Array:
-    return scorer_apply(params, pair_features(fa, fb, spec))
+def score_pairs(params: dict, fa, fb, spec: FeatureSpec,
+                backend: str = "jnp") -> jax.Array:
+    """Edge weights in [0, 1] for aligned feature batches fa/fb.
+
+    backend: ``jnp`` (jitted composite, the default — bitwise the
+    historical path), ``kernel`` (fused Pallas ``kernels/scorer_mlp``),
+    or ``ref`` (the ``kernels/ref.py`` parity oracle).
+    """
+    feats = pair_features(fa, fb, spec)
+    if backend == "jnp":
+        return scorer_apply(params, feats)
+    if backend == "kernel":
+        from repro.kernels import ops
+        return ops.scorer_mlp(feats, params)
+    if backend == "ref":
+        from repro.kernels import ref
+        return ref.scorer_mlp_ref(
+            feats, params["w0"], params["b0"], params["w1"], params["b1"],
+            params["w2"], params["b2"])
+    raise ValueError(f"unknown score_pairs backend {backend!r}")
 
 
 # ---------------------------------------------------------------- training

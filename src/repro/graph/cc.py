@@ -85,3 +85,23 @@ def offline_components(pairs: np.ndarray, ids: np.ndarray) -> dict:
         if ra != rb:
             parent[max(ra, rb)] = min(ra, rb)
     return {i: find(i) for i in parent}
+
+
+def propagate_flags(pairs: np.ndarray, weights: np.ndarray, ids: np.ndarray,
+                    seed_ids, min_weight: float = 0.5) -> dict:
+    """Label propagation over the maintained graph's connected components
+    (the Android-Security consumer): a point is flagged iff it shares a
+    component with a known-bad seed, over the subgraph of edges whose
+    scored weight is >= ``min_weight`` (the maintained adjacency keeps
+    every finite-weight edge, so the threshold is what separates
+    "similar enough to inherit the label" from mere reachability).
+
+    pairs/weights come from ``DynamicGraphStore.edges()``; returns
+    {point id -> flagged bool} over ``ids``.
+    """
+    pairs = np.asarray(pairs).reshape(-1, 2)
+    weights = np.asarray(weights).reshape(-1)
+    comp = offline_components(pairs[weights >= min_weight], ids)
+    bad = {comp[int(s)] for s in np.asarray(seed_ids).reshape(-1).tolist()
+           if int(s) in comp}
+    return {i: lab in bad for i, lab in comp.items()}

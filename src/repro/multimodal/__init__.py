@@ -1,0 +1,27 @@
+"""The multi-modal Grale scoring plane (the paper's differentiator).
+
+Grale's pitch is learned similarity over *heterogeneous* feature types
+rather than a single dense embedding. This package carries that into the
+live serving path:
+
+  config.py   — ``MultiModalConfig``; attach via
+                ``GusConfig(multimodal=...)`` (``None`` keeps the dense
+                path bitwise unchanged);
+  store.py    — ``MultiModalStore``: per-point sparse rows / bucket rows
+                / count-sketches, an inverted bucket posting index, and
+                incrementally-maintained IDF/filter routing tables
+                (``core.idf.IdfCounts``), snapshot/recover via
+                ``SnapshotStateful``;
+  retrieve.py — ``two_stage_neighbors``: dense-ANN ∪ sparse/bucket
+                candidates, then learned-MLP re-scoring through
+                ``core.scorer.score_pairs`` (Pallas ``scorer_mlp``
+                backend) with exact ``sparse_dot`` distances.
+
+See docs/ARCHITECTURE.md ("The multi-modal scoring plane") for the
+dataflow and the window-closing rule the reload cadence adds.
+"""
+from repro.multimodal.config import MultiModalConfig
+from repro.multimodal.retrieve import two_stage_neighbors
+from repro.multimodal.store import MultiModalStore
+
+__all__ = ["MultiModalConfig", "MultiModalStore", "two_stage_neighbors"]

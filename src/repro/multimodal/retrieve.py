@@ -1,0 +1,88 @@
+"""Two-stage multi-modal retrieval (the live Grale scoring path).
+
+Stage 1 — candidate union: the dense ANN backend's shortlist is unioned
+with the sparse/locality-bucket stage (``MultiModalStore.candidates`` —
+Filter-P-kept query buckets route into capped posting lists, ranked by
+count-sketch dots of the IDF-re-weighted embeddings). Either stage can
+recover points the other misses: a fresh point whose dense embedding has
+not converged still shares MinHash buckets with its sparse neighbors.
+
+Stage 2 — learned re-score: every surviving candidate pair goes through
+``core.scorer.score_pairs`` (the paper's similarity MLP over per-modality
+pair features), on the backend ``MultiModalConfig.rescore`` selects —
+the fused Pallas ``kernels/scorer_mlp`` by default. Distances are exact
+negative sparse dots (``kernels/sparse_dot``) over the stored embedding
+rows — the paper's Dist(p, q) = -M(p)·M(q) — rather than the dense
+stage's approximate PQ metric.
+
+The final top-k is ordered by re-scored weight, so the maintained graph
+(fed ``NeighborResult`` weights by the tick) consumes learned
+multi-modal similarity instead of raw embedding distance.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scorer import score_pairs
+from repro.core.types import NeighborResult
+from repro.kernels import ops
+
+
+def two_stage_neighbors(gus, features, k: int, exclude_ids=None,
+                        emb=None, buckets=None) -> NeighborResult:
+    """Candidate union + learned re-score for ``DynamicGUS`` instances
+    with a configured multi-modal plane. ``emb`` / ``buckets`` accept the
+    staged encode artifacts (the pipelined graph tick) — both are pure
+    functions of ``features``, so passing them is a pure reuse."""
+    mm = gus.multimodal
+    if emb is None:
+        emb = gus.embedder(features)
+    if buckets is None:
+        b_ids, b_valid = gus.embedder.buckets(features)
+        buckets = (np.asarray(b_ids), np.asarray(b_valid))
+    dense_ids, _ = gus.index.search(emb, k + (exclude_ids is not None))
+    dense_ids = np.asarray(dense_ids)
+    sparse_ids = mm.candidates(buckets[0], buckets[1], emb,
+                               exclude_ids=exclude_ids)
+    n_rows = dense_ids.shape[0]
+    r_max = dense_ids.shape[1] + sparse_ids.shape[1]
+    cand = np.full((n_rows, r_max), -1, np.int64)
+    excl = (None if exclude_ids is None
+            else np.asarray(exclude_ids).reshape(-1))
+    for r in range(n_rows):
+        seen: set[int] = set()
+        col = 0
+        for pid in dense_ids[r].tolist() + sparse_ids[r].tolist():
+            pid = int(pid)
+            if pid < 0 or pid in seen:
+                continue
+            if excl is not None and pid == int(excl[r]):
+                continue
+            seen.add(pid)
+            cand[r, col] = pid
+            col += 1
+    # exact sparse distances over the union (stored embedding rows)
+    db_idx, db_val = mm.gather_emb(cand)
+    dists = -np.asarray(ops.sparse_dot_batched(
+        emb.indices, emb.values, jnp.asarray(db_idx), jnp.asarray(db_val)))
+    dists = np.where(cand >= 0, dists, np.inf).astype(np.float32)
+    # learned re-score of every candidate pair
+    t0 = time.perf_counter()
+    cand_feats = gus.store.gather(cand)
+    flat_q = {kk: np.repeat(np.asarray(v), r_max, axis=0)
+              for kk, v in features.items()}
+    flat_c = {kk: v.reshape((-1,) + v.shape[2:])
+              for kk, v in cand_feats.items()}
+    weights = np.asarray(score_pairs(gus.scorer_params, flat_q, flat_c,
+                                     gus.spec, backend=mm.cfg.rescore))
+    weights = weights.reshape(cand.shape)
+    weights = np.where(cand >= 0, weights, -np.inf).astype(np.float32)
+    mm.note_rescore(int((cand >= 0).sum()), time.perf_counter() - t0)
+    order = np.argsort(-weights, axis=-1, kind="stable")[:, :k]
+    return NeighborResult(
+        ids=np.take_along_axis(cand, order, axis=1),
+        weights=np.take_along_axis(weights, order, axis=1),
+        distances=np.take_along_axis(dists, order, axis=1))

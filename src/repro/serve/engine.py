@@ -138,6 +138,8 @@ class GusEngine:
         bind = getattr(gus.index, "bind_telemetry", None)
         if callable(bind):
             bind(self.obs)           # sharded backend joins the registry
+        if gus.multimodal is not None:
+            gus.multimodal.bind_telemetry(self.obs)
         self.mutation_log: list[MutationBatch] = []
         self.log_since_snapshot = 0
         self.snapshot_state: dict | None = None

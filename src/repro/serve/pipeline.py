@@ -59,6 +59,14 @@ pipelined throughput:
   pipeline hands off the previous window and runs ``auto_resplit()``
   before each window's encode.
 
+One pin holds at **every** bound: a configured multi-modal reload
+cadence (``MultiModalConfig.reload_every > 0``) pins the window to 1.
+Routing-table reloads fire when ``seq_applied`` crosses cadence
+multiples — right after the hand-off's seq bump, before any graph work
+(the synchronous ``mutate`` ordering) — and later batches sketch and
+route against the reloaded tables, so a fused window would skip reload
+points the synchronous path hits.
+
 **The concurrent maintenance plane — bound > 0.** With
 ``MaintenanceConfig.staleness_bound = B > 0`` the contract relaxes from
 bitwise identity to *bounded staleness* and all three pins lift:
@@ -199,6 +207,13 @@ class MutationPipeline:
         self._maintain = gus.index \
             if (self.bound == 0
                 and getattr(gus.index, "auto_resplit_on", False)) else None
+        # a multi-modal reload cadence pins the window to 1 at every
+        # bound: table reloads fire on seq_applied multiples, and later
+        # batches embed/sketch against the reloaded tables, so the
+        # pipelined schedule must hit the same seq points as the
+        # synchronous path (n_batches == 1 per hand-off)
+        self._mm_reload = (gus.multimodal is not None
+                           and gus.multimodal.cfg.reload_every > 0)
         self._queued_rows = 0         # upsert rows staged in the window
         self._inflight_rows = 0       # upsert rows in the in-flight window
         self._inflight_batches = 0    # batches fused into the in-flight window
@@ -224,7 +239,10 @@ class MutationPipeline:
         exactly the synchronous index states, and an armed auto-resplit
         policy pins it too. Under the plane (bound > 0) a maintained
         graph fuses up to ``min(window, bound)`` batches — each window
-        is one unit of published staleness."""
+        is one unit of published staleness. A multi-modal reload cadence
+        pins the window to 1 at *every* bound (see __init__)."""
+        if self._mm_reload:
+            return 1
         if self.bound > 0:
             if self.gus.graph is not None:
                 return max(1, min(self.cfg.window, self.bound))
@@ -338,6 +356,11 @@ class MutationPipeline:
             self.gus.apply_mutation(staged)
             self.gus.finish_mutation(staged)          # block_until_ready
             self.gus.seq_applied += n_batches
+            # multi-modal routing-table reload fires on the same
+            # seq_applied schedule as the synchronous path (the reload
+            # cadence pins the window to 1), and before any graph work —
+            # matching DynamicGUS.mutate's ordering exactly
+            self.gus.maybe_reload_multimodal()
             if self.gus.graph is not None:
                 if self.bound > 0:
                     # plane: the graph tick and repair drain come off

@@ -113,3 +113,74 @@ def test_snapshot_state_round_trip(corpus, name):
     i2, d2 = fresh.search(emb[:16], 5)
     np.testing.assert_array_equal(i1, i2)
     np.testing.assert_array_equal(d1, d2)
+
+
+# --- IdfCounts: the incremental IDF/Filter maintainer of the ----------
+# --- multi-modal plane honors the same persistence contract -----------
+
+def _bucket_stream(seed=3, n_rows=60, width=12, vocab=200):
+    rng = np.random.default_rng(seed)
+    bid = rng.integers(0, vocab, (n_rows, width)).astype(np.uint32)
+    valid = rng.random((n_rows, width)) < 0.8
+    return bid, valid
+
+
+def test_idf_counts_structural_conformance():
+    from repro.core.idf import IdfCounts
+    from repro.multimodal import MultiModalConfig, MultiModalStore
+    assert isinstance(IdfCounts(), SnapshotStateful)
+    assert isinstance(MultiModalStore(MultiModalConfig()), SnapshotStateful)
+
+
+def test_idf_counts_incremental_equals_rebuild():
+    """After any interleaving of adds and removes, the maintained tables
+    are BITWISE equal to building from scratch over the surviving rows —
+    including argpartition tie order, because both paths share
+    idf_table_from_counts / filter_table_from_counts on identical
+    (uniq, counts) arrays."""
+    from repro.core.idf import (IdfCounts, build_filter_table,
+                                build_idf_table)
+    bid, valid = _bucket_stream()
+    counts = IdfCounts()
+    counts.add(bid[:40], valid[:40])
+    counts.remove(bid[10:25], valid[10:25])       # deletes
+    counts.add(bid[40:], valid[40:])
+    counts.remove(bid[30:35], valid[30:35])
+    counts.add(bid[30:35], valid[30:35])          # update = remove + add
+    live = np.concatenate([bid[:10], bid[25:]])
+    live_valid = np.concatenate([valid[:10], valid[25:]])
+
+    uniq, cnt = counts.arrays()
+    flat = live[live_valid]
+    want_uniq, want_cnt = np.unique(flat, return_counts=True)
+    np.testing.assert_array_equal(uniq, want_uniq.astype(np.uint32))
+    np.testing.assert_array_equal(cnt, want_cnt.astype(np.int64))
+    assert counts.n_points == live.shape[0]
+
+    inc_idf = counts.idf_table(size=32)
+    batch_idf = build_idf_table(live, live_valid, live.shape[0], size=32)
+    np.testing.assert_array_equal(inc_idf.sorted_ids, batch_idf.sorted_ids)
+    np.testing.assert_array_equal(inc_idf.weights, batch_idf.weights)
+    inc_f = counts.filter_table(percent=5.0)
+    batch_f = build_filter_table(live, live_valid, percent=5.0)
+    np.testing.assert_array_equal(inc_f.sorted_ids, batch_f.sorted_ids)
+
+
+def test_idf_counts_snapshot_round_trip():
+    from repro.core.idf import IdfCounts
+    bid, valid = _bucket_stream(seed=9)
+    counts = IdfCounts()
+    counts.add(bid, valid)
+    counts.remove(bid[:7], valid[:7])
+    state = counts.snapshot_state()
+    assert isinstance(state, dict)
+    fresh = IdfCounts()
+    fresh.restore_state(state)
+    u1, c1 = counts.arrays()
+    u2, c2 = fresh.arrays()
+    np.testing.assert_array_equal(u1, u2)
+    np.testing.assert_array_equal(c1, c2)
+    assert fresh.n_points == counts.n_points
+    i1, i2 = counts.idf_table(16), fresh.idf_table(16)
+    np.testing.assert_array_equal(i1.sorted_ids, i2.sorted_ids)
+    np.testing.assert_array_equal(i1.weights, i2.weights)

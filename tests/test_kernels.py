@@ -91,6 +91,61 @@ def test_topk_with_ties_matches_lax():
     np.testing.assert_array_equal(gi, wi)
 
 
+@pytest.mark.parametrize("b,r,kq,kd", [(1, 1, 3, 5), (3, 7, 13, 9),
+                                       (2, 129, 8, 8), (5, 31, 1, 17)])
+def test_sparse_dot_batched_odd_shapes(b, r, kq, kd):
+    # odd rank counts exercise the kernel's block_n padding of the R axis
+    qi, qv = _sparse_rows(b, kq)
+    di, dv = _sparse_rows(b * r, kd)
+    di = di.reshape(b, r, kd)
+    dv = dv.reshape(b, r, kd)
+    got = ops.sparse_dot_batched(qi, qv, di, dv)
+    want = jnp.stack([ref.sparse_dot_ref(qi[i:i+1], qv[i:i+1],
+                                         di[i], dv[i])[0] for i in range(b)])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_sparse_dot_batched_all_padded_rows():
+    # fully-padded query and candidate rows (how the multimodal retrieve
+    # stage encodes absent candidates) must score exactly 0, not NaN
+    b, r, k = 3, 6, 8
+    qi, qv = _sparse_rows(b, k)
+    qi = qi.at[1].set(PAD_INDEX)
+    qv = qv.at[1].set(0.0)
+    di, dv = _sparse_rows(b * r, k)
+    di = di.reshape(b, r, k).at[:, -2:].set(PAD_INDEX)
+    dv = dv.reshape(b, r, k).at[:, -2:].set(0.0)
+    got = np.asarray(ops.sparse_dot_batched(qi, qv, di, dv))
+    want = np.stack([ref.sparse_dot_ref(qi[i:i+1], qv[i:i+1],
+                                        di[i], dv[i])[0] for i in range(b)])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    assert np.all(got[1] == 0.0)
+    assert np.all(got[:, -2:] == 0.0)
+
+
+def _mlp_params(f, h):
+    return {"w0": jnp.asarray(RNG.normal(size=(f, h)), jnp.float32),
+            "b0": jnp.asarray(RNG.normal(size=(h,)), jnp.float32),
+            "w1": jnp.asarray(RNG.normal(size=(h, h)), jnp.float32),
+            "b1": jnp.asarray(RNG.normal(size=(h,)), jnp.float32),
+            "w2": jnp.asarray(RNG.normal(size=(h, 1)), jnp.float32),
+            "b2": jnp.asarray(RNG.normal(size=(1,)), jnp.float32)}
+
+
+@pytest.mark.parametrize("b,f,h", [(1, 1, 3), (7, 5, 8), (33, 17, 13),
+                                   (130, 9, 6)])
+def test_scorer_mlp_matches_ref_odd_shapes(b, f, h):
+    # hidden widths off the pad boundary (3, 13, 6) exercise the
+    # kernel's hidden-dim padding; ref.scorer_mlp_ref is the oracle
+    params = _mlp_params(f, h)
+    feats = jnp.asarray(RNG.normal(size=(b, f)), jnp.float32)
+    got = ops.scorer_mlp(feats, params)
+    want = ref.scorer_mlp_ref(feats, params["w0"], params["b0"],
+                              params["w1"], params["b1"],
+                              params["w2"], params["b2"])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
 def test_scorer_mlp_matches_core_scorer():
     from repro.core.scorer import scorer_apply, scorer_init
     from repro.core.types import FeatureSpec

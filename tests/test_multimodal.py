@@ -1,0 +1,253 @@
+"""Multi-modal scoring plane (src/repro/multimodal).
+
+Pins the two load-bearing contracts of the plane:
+
+* **Opt-in only** — `GusConfig()` without `multimodal=` must stay
+  bitwise-identical to the historical dense path (embed -> ANN search ->
+  scorer), hand-rolled here against the public `neighbors()`.
+* **Deterministic plane** — sparse candidates recover points the dense
+  view misses; the three rescore backends agree; the pipelined write
+  path with a reload cadence stays bit-identical to synchronous; and
+  the whole plane (counts, postings, sketches, materialised tables)
+  survives a snapshot/restore round trip.
+
+The end-to-end Android-Security speedup itself is gated in
+`benchmarks/time_to_flag.py --smoke` (CI lane), not re-run here.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (BucketConfig, DynamicGUS, GusConfig, MutationBatch,
+                        MUTATION_INSERT)
+from repro.core.scorer import (pair_features, score_pairs, scorer_apply,
+                               train_scorer)
+from repro.data.synthetic import (AndroidSecurityConfig,
+                                  AndroidSecurityStream, OGB_ARXIV_LIKE,
+                                  labeled_pairs, make_dataset)
+from repro.graph.store import GraphConfig
+from repro.multimodal import MultiModalConfig, MultiModalStore
+from repro.serve.pipeline import MutationPipeline
+
+DATA = dataclasses.replace(OGB_ARXIV_LIKE, n_points=260, n_clusters=6)
+BUCKETS = BucketConfig(dense_tables=8, dense_bits=10, scalar_widths=(2.0,))
+MM = MultiModalConfig(sparse_k=6, d_sketch=32, idf_size=128,
+                      filter_percent=1.0, rescore="kernel")
+
+
+@pytest.fixture(scope="module")
+def world():
+    ids, feats, cluster = make_dataset(DATA)
+    pf, lbl = labeled_pairs(feats, cluster, 600, DATA.spec, seed=1)
+    scorer, _ = train_scorer(jax.random.PRNGKey(0), DATA.spec, pf, lbl,
+                             steps=40)
+    return ids, feats, scorer
+
+
+def _gus(world, multimodal=None, graph=False, n=180):
+    ids, feats, scorer = world
+    gus = DynamicGUS(DATA.spec, BUCKETS, scorer, GusConfig(
+        scann_nn=5, backend="brute",
+        graph=GraphConfig(k=4, capacity=512) if graph else None,
+        multimodal=multimodal))
+    gus.bootstrap(ids[:n], {k: v[:n] for k, v in feats.items()})
+    return gus
+
+
+def _batch(ids, feats, sel):
+    return MutationBatch(
+        kinds=np.full(len(sel), MUTATION_INSERT, np.int32),
+        ids=np.asarray(ids[sel], np.int32),
+        features={k: v[sel] for k, v in feats.items()})
+
+
+# ----------------------------------------- the opt-out path is untouched
+
+
+def test_default_config_is_bitwise_dense_path(world):
+    """GusConfig() without multimodal= serves the historical path: the
+    acceptance pin for this plane being strictly opt-in. Hand-rolls
+    embed -> index.search -> gather -> scorer_apply and requires BITWISE
+    equality with neighbors()."""
+    ids, feats, scorer = world
+    gus = _gus(world)
+    assert gus.multimodal is None
+    q = {k: v[200:216] for k, v in feats.items()}
+    got = gus.neighbors(q, k=5)
+
+    emb = gus.embedder(q)
+    nids, dists = gus.index.search(emb, 5)
+    cand = gus.store.gather(nids)
+    flat_q = {k: np.repeat(np.asarray(v), nids.shape[1], axis=0)
+              for k, v in q.items()}
+    flat_c = {k: v.reshape((-1,) + v.shape[2:]) for k, v in cand.items()}
+    w = np.asarray(scorer_apply(gus.scorer_params,
+                                pair_features(flat_q, flat_c, gus.spec)))
+    w = np.where(nids >= 0, w.reshape(nids.shape), -np.inf)
+    np.testing.assert_array_equal(got.ids, nids)
+    np.testing.assert_array_equal(got.weights, w.astype(np.float32))
+    np.testing.assert_array_equal(got.distances, dists)
+
+
+# ----------------------------------------------- rescore backend parity
+
+
+def test_score_pairs_backends_agree(world):
+    ids, feats, scorer = world
+    a = {k: v[:40] for k, v in feats.items()}
+    b = {k: v[40:80] for k, v in feats.items()}
+    jnp_w = score_pairs(scorer, a, b, DATA.spec, backend="jnp")
+    kern_w = score_pairs(scorer, a, b, DATA.spec, backend="kernel")
+    ref_w = score_pairs(scorer, a, b, DATA.spec, backend="ref")
+    np.testing.assert_allclose(jnp_w, kern_w, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(jnp_w, ref_w, rtol=1e-5, atol=1e-6)
+    with pytest.raises(ValueError):
+        score_pairs(scorer, a, b, DATA.spec, backend="nope")
+
+
+# ----------------------------------------- sparse stage recovers misses
+
+
+def test_sparse_candidates_recover_dense_miss():
+    """A point sharing set tokens with the query but with an unrelated
+    dense embedding must surface through the postings/sketch stage."""
+    from repro.core.types import FeatureSpec
+    rng = np.random.default_rng(0)
+    d = 32
+    spec = FeatureSpec(dense={"emb": d}, sets={"cats": 8}, scalars=())
+    buckets = BucketConfig(dense_tables=4, dense_bits=8, set_tables=6)
+    gen_feats = {
+        "dense:emb": rng.normal(size=(40, d)).astype(np.float32),
+        "set:cats": rng.integers(1000, 2000, (40, 8)).astype(np.int64),
+    }
+    # point 0 = query twin: same tokens, orthogonal dense view
+    gen_feats["set:cats"][0] = np.arange(1, 9)
+    q_feats = {"dense:emb": rng.normal(size=(1, d)).astype(np.float32),
+               "set:cats": np.arange(1, 9)[None, :].astype(np.int64)}
+
+    from repro.core.embedding import EmbeddingGenerator
+    gen = EmbeddingGenerator.create(spec, buckets)
+    ids = np.arange(40, dtype=np.int64)
+    emb = gen(gen_feats)
+    bid, valid = gen.buckets(gen_feats)
+    store = MultiModalStore(MM)
+    store.rebuild(ids, emb, np.asarray(bid), np.asarray(valid))
+    assert len(store) == 40
+
+    q_emb = gen(q_feats)
+    q_bid, q_valid = gen.buckets(q_feats)
+    cand = store.candidates(np.asarray(q_bid), np.asarray(q_valid), q_emb)
+    assert cand.shape == (1, MM.sparse_k)
+    assert 0 in set(cand[0].tolist())
+
+
+# ------------------------------------- pipelined == synchronous w/ reload
+
+
+def test_pipeline_matches_sync_with_reload_cadence(world):
+    ids, feats, scorer = world
+    mm = dataclasses.replace(MM, reload_every=2)
+    sync_g = _gus(world, multimodal=mm, graph=True)
+    pipe_g = _gus(world, multimodal=mm, graph=True)
+    pipe = MutationPipeline(pipe_g)
+    assert pipe.window_size() == 1          # reload cadence pins windows
+    rng = np.random.default_rng(3)
+    for _ in range(5):
+        sel = rng.choice(np.arange(180, 260), size=12, replace=False)
+        sync_g.mutate(_batch(ids, feats, sel))
+        pipe.submit(_batch(ids, feats, sel))
+    pipe.flush()
+    assert sync_g.seq_applied == pipe_g.seq_applied
+    assert sync_g.multimodal.reloads == pipe_g.multimodal.reloads > 0
+    q = {k: v[100:124] for k, v in feats.items()}
+    r1, r2 = sync_g.neighbors(q, k=5), pipe_g.neighbors(q, k=5)
+    np.testing.assert_array_equal(r1.ids, r2.ids)
+    np.testing.assert_array_equal(r1.weights, r2.weights)
+    np.testing.assert_array_equal(np.asarray(sync_g.graph.nbr_slots),
+                                  np.asarray(pipe_g.graph.nbr_slots))
+    np.testing.assert_array_equal(np.asarray(sync_g.graph.nbr_w),
+                                  np.asarray(pipe_g.graph.nbr_w))
+
+
+# --------------------------------------------------- snapshot round trip
+
+
+def test_gus_snapshot_round_trip_with_multimodal(world):
+    ids, feats, scorer = world
+    mm = dataclasses.replace(MM, reload_every=3)
+    gus = _gus(world, multimodal=mm, graph=True)
+    rng = np.random.default_rng(11)
+    for _ in range(4):
+        sel = rng.choice(np.arange(180, 260), size=10, replace=False)
+        gus.mutate(_batch(ids, feats, sel))
+    state = gus.snapshot_state()
+
+    fresh = DynamicGUS(DATA.spec, BUCKETS, scorer, GusConfig(
+        scann_nn=5, backend="brute", graph=GraphConfig(k=4, capacity=512),
+        multimodal=mm))
+    fresh.restore_state(state)
+
+    # the plane restores EXACTLY — counts, materialised tables, capped
+    # postings, per-point embeddings and sketches (no reload replay)
+    a, b = gus.multimodal, fresh.multimodal
+    assert len(b) == len(a) and b.reloads == a.reloads
+    for x, y in zip(a.counts.arrays(), b.counts.arrays()):
+        np.testing.assert_array_equal(x, y)
+    np.testing.assert_array_equal(np.asarray(a.idf.sorted_ids),
+                                  np.asarray(b.idf.sorted_ids))
+    np.testing.assert_array_equal(np.asarray(a.idf.weights),
+                                  np.asarray(b.idf.weights))
+    np.testing.assert_array_equal(np.asarray(a.filter.sorted_ids),
+                                  np.asarray(b.filter.sorted_ids))
+    assert a._postings == b._postings
+    for pid in a._sketch:
+        np.testing.assert_array_equal(a._sketch[pid], b._sketch[pid])
+        np.testing.assert_array_equal(a._emb_idx[pid], b._emb_idx[pid])
+        np.testing.assert_array_equal(a._emb_val[pid], b._emb_val[pid])
+
+    # the graph restores bitwise, so graph-surface queries (the product
+    # surface) answer identically; fresh-feature queries are only pinned
+    # up to dense tie order (restore rebuilds the brute slab from the
+    # store's id order — the pre-existing backend contract)
+    np.testing.assert_array_equal(np.asarray(gus.graph.nbr_slots),
+                                  np.asarray(fresh.graph.nbr_slots))
+    np.testing.assert_array_equal(np.asarray(gus.graph.nbr_w),
+                                  np.asarray(fresh.graph.nbr_w))
+    qids = np.asarray(sorted(gus.store._rows))[:24]
+    r1 = gus.neighbors_of_ids(qids, k=4)
+    r2 = fresh.neighbors_of_ids(qids, k=4)
+    np.testing.assert_array_equal(r1.ids, r2.ids)
+    np.testing.assert_array_equal(r1.weights, r2.weights)
+
+
+# --------------------------------------- the Android-Security mechanism
+
+
+def test_harmful_app_routes_to_seed_at_insert():
+    """The mechanism behind the time-to-flag speedup, without the full
+    benchmark: an app arriving with an unconverged dense embedding but
+    its family's signature tokens must surface its family seed in the
+    multi-modal candidate union at INSERT time."""
+    stream = AndroidSecurityStream(AndroidSecurityConfig(
+        n_benign=80, n_benign_clusters=4, n_families=2, apps_per_family=2))
+    boot_ids, boot_feats = stream.bootstrap()
+    feats, labels = stream.training_pairs(n_pairs=400)
+    params, _ = train_scorer(jax.random.PRNGKey(7), stream.spec, feats,
+                             labels, steps=120)
+    from benchmarks.time_to_flag import build_gus
+    gus = build_gus(stream.spec, params, multimodal=True)
+    gus.bootstrap(boot_ids, boot_feats)
+    first = next(iter(stream.batches()))
+    harmful = [int(i) for i, k in zip(first.ids, first.kinds)
+               if k == MUTATION_INSERT and int(i) in stream.harmful_ids]
+    assert harmful
+    gus.mutate(first)
+    res = gus.neighbors_of_ids(np.asarray(harmful), k=8)
+    seeds = stream.seed_bad_ids
+    fams = {pid: stream.family_of[pid] for pid in harmful}
+    for row, pid in enumerate(harmful):
+        hit = {int(n) for n in res.ids[row] if int(n) in seeds}
+        assert any(stream.family_of[s] == fams[pid] for s in hit), \
+            f"app {pid} found no same-family seed at insert"

@@ -56,6 +56,7 @@ def registered():
     from repro.core import BucketConfig, DynamicGUS, GusConfig
     from repro.core.scorer import train_scorer
     from repro.data.synthetic import OGB_ARXIV_LIKE, labeled_pairs, make_dataset
+    from repro.multimodal import MultiModalConfig
     from repro.serve.engine import EngineConfig, GusEngine
     from repro.serve.frontend import Frontend
 
@@ -68,7 +69,9 @@ def registered():
     gus = DynamicGUS(data.spec, bcfg, scorer, GusConfig(
         scann_nn=10, backend="sharded",
         sharded=ShardedConfig(n_shards=1, n_partitions=16, d_proj=32,
-                              pq_m=8)))
+                              pq_m=8),
+        # the multi-modal plane registers multimodal_* on telemetry bind
+        multimodal=MultiModalConfig(sparse_k=4, d_sketch=16, idf_size=64)))
     engine = GusEngine(gus, EngineConfig(pipeline=True))
     Frontend(engine)                  # registers the frontend_* instruments
     return engine

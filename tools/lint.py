@@ -35,9 +35,15 @@ AST walk can check without third-party packages:
   DEP1  deprecated ``stats()`` compatibility dict — in-repo callers must
         use the ``describe()`` replacement (the ``stats()`` thin
         wrappers emit ``DeprecationWarning`` and last one release)
+  MM1   direct ``scorer_logits(...)`` call outside the multi-modal
+        plane — pair re-scoring must go through
+        ``core.scorer.score_pairs``, the single entry point that keeps
+        the jnp / Pallas-kernel / reference backends interchangeable
+        (only ``src/repro/multimodal`` and the defining module
+        ``src/repro/core/scorer.py`` may call the raw logits fn)
 
-A trailing ``# legacy-ok`` comment exempts a line from MNT1/DEP1 (used
-by the shim definitions themselves and the deprecation tests).
+A trailing ``# legacy-ok`` comment exempts a line from MNT1/DEP1/MM1
+(used by the shim definitions themselves and the deprecation tests).
 
 When ruff itself is installed (the GitHub Actions lane installs it),
 ci.sh prefers it for the style subset but still runs this module with
@@ -60,9 +66,11 @@ DOCSTRING_DIRS = ("src/repro/ann", "src/repro/serve", "src/repro/graph",
                   "src/repro/obs")
 # packages whose registry instruments must stay in the documented
 # namespace (OBS1); sharded_index.py registers index_* from ann
-INSTRUMENT_DIRS = ("src/repro/obs", "src/repro/serve", "src/repro/ann")
+INSTRUMENT_DIRS = ("src/repro/obs", "src/repro/serve", "src/repro/ann",
+                   "src/repro/multimodal")
 INSTRUMENT_RE = re.compile(
-    r"^(frontend|engine|pipeline|index|obs|maintenance)_[a-z][a-z0-9_]*$")
+    r"^(frontend|engine|pipeline|index|obs|maintenance|multimodal)"
+    r"_[a-z][a-z0-9_]*$")
 INSTRUMENT_SUFFIX = {"counter": "_total", "histogram": "_ms"}
 # maintenance knobs folded into core.maintenance.MaintenanceConfig; the
 # old spellings survive one release behind deprecation shims but are
@@ -70,6 +78,10 @@ INSTRUMENT_SUFFIX = {"counter": "_total", "histogram": "_ms"}
 LEGACY_KNOBS = {"auto_compact", "slab_headroom", "resplit_imbalance",
                 "resplit_by", "repair_per_batch"}
 LEGACY_ESCAPE = "legacy-ok"
+# the only call sites allowed to touch the raw scorer logits fn (MM1):
+# the plane that owns re-scoring, and the module defining the fn
+SCORER_LOGITS_DIRS = ("src/repro/multimodal",)
+SCORER_LOGITS_FILES = ("src/repro/core/scorer.py",)
 
 
 def _module_imports(tree: ast.Module) -> dict[str, ast.stmt]:
@@ -148,6 +160,34 @@ def instrument_problems(tree: ast.Module, path: Path) -> list[str]:
             problems.append(
                 f"{path}:{node.lineno}: OBS1 {kind} {name!r} must end "
                 f"with {suffix!r}")
+    return problems
+
+
+def scorer_entry_problems(tree: ast.Module, path: Path, root: Path,
+                          lines: list[str]) -> list[str]:
+    """MM1: ``scorer_logits(...)`` (bare name or attribute) may only be
+    called from the multi-modal plane or the defining module — every
+    other caller must use ``core.scorer.score_pairs`` so the rescore
+    backend stays swappable. ``# legacy-ok`` exempts a line."""
+    rel = path.relative_to(root).as_posix()
+    if rel in SCORER_LOGITS_FILES or any(
+            rel.startswith(d + "/") for d in SCORER_LOGITS_DIRS):
+        return []
+    problems = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        name = (fn.id if isinstance(fn, ast.Name)
+                else fn.attr if isinstance(fn, ast.Attribute) else None)
+        if name != "scorer_logits":
+            continue
+        line = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
+        if LEGACY_ESCAPE in line:
+            continue
+        problems.append(
+            f"{path}:{node.lineno}: MM1 direct scorer_logits() call "
+            "outside the multi-modal plane (use score_pairs)")
     return problems
 
 
@@ -241,6 +281,9 @@ def lint_file(path: Path, root: Path | None = None) -> list[str]:
             problems.append(f"{path}:{node.lineno}: E722 bare except")
     if root is not None and _in_dirs(path, root, INSTRUMENT_DIRS):
         problems.extend(instrument_problems(tree, path))
+    if root is not None:
+        problems.extend(scorer_entry_problems(tree, path, root,
+                                              text.splitlines()))
     problems.extend(deprecation_problems(tree, path, text.splitlines()))
     if path.name != "__init__.py":          # re-export surface is exempt
         imports = _module_imports(tree)

@@ -1,13 +1,27 @@
-"""Kernel microbenchmarks: interpret-mode Pallas vs jnp oracle wall-clock
-(CPU semantics check only — real perf targets TPU) + oracle-path timings
-that the CPU serving engine actually uses."""
+"""Kernel microbenchmarks: fused-vs-unfused query shortlist + per-op
+oracle-path timings.
+
+The headline is ``fused_query_speedup``: the fused shortlist op
+(``ops.pq_score_dedup_topk`` — one dispatch) against the composed
+escape hatch (PQ scoring, mask+top-k, dedup as separately-dispatched
+jitted stages with a device sync between each, the HBM-round-trip
+dataflow the fusion removes).  Both paths return bitwise-identical
+results (tests/test_kernels_fused.py), so the ratio is pure dataflow.
+Recorded via ``record_metric`` as a portable gated metric (>= 1.0);
+absolute per-op microseconds are machine-scoped (portable=False).
+
+``--smoke`` runs the smaller shape set and asserts the speedup bound —
+wired into ci.sh.
+"""
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, record_metric, timed
 from repro.core.types import PAD_INDEX
 from repro.kernels import ops, ref
 
@@ -25,44 +39,118 @@ def _rows(n, k, vocab=1000):
             jnp.asarray(np.take_along_axis(val, order, -1)))
 
 
-def run() -> None:
-    # sparse_dot: the exact-rescoring hot loop
+def _shortlist_problem(b, n, m, c):
+    """A SOAR-shaped shortlist problem: ~half the ids are duplicate
+    secondary copies, ~5% of slots are tombstones."""
+    lut = jnp.asarray(RNG.normal(size=(b, m, c)), jnp.float32)
+    codes = jnp.asarray(RNG.integers(0, c, (b, n, m)), jnp.uint8)
+    ids = jnp.asarray(RNG.integers(0, n // 2, (b, n)), jnp.int32)
+    valid = jnp.asarray(RNG.random((b, n)) >= 0.05)
+    bias = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32)
+    return lut, codes, ids, valid, bias
+
+
+@jax.jit
+def _mask_bias(scores, valid, bias):
+    return jnp.where(valid, scores + bias, -jnp.inf)
+
+
+def bench_fused_query(b=16, n=4096, m=8, c=256, k=128,
+                      quantized=False) -> tuple[float, float]:
+    """Returns (unfused_us, fused_us) for one shape."""
+    lut, codes, ids, valid, bias = _shortlist_problem(b, n, m, c)
+    topk = jax.jit(lambda s: jax.lax.top_k(s, k))
+
+    def unfused():
+        # the pre-fusion dataflow: three dispatches, sync between each
+        s = ops.pq_scores(lut, codes, quantized=quantized)
+        s.block_until_ready()
+        s = _mask_bias(s, valid, bias)
+        vals, idxs = topk(s)
+        vals.block_until_ready()
+        vals = ops.dedup_mask(vals, idxs, ids, valid)
+        jax.block_until_ready((vals, idxs))
+        return vals, idxs
+
+    def fused():
+        out = ops.pq_score_dedup_topk(lut, codes, ids, k, valid=valid,
+                                      bias=bias, quantized=quantized)
+        jax.block_until_ready(out)
+        return out
+
+    (uv, ui), (fv, fi) = unfused(), fused()         # warm up + sanity
+    np.testing.assert_array_equal(np.asarray(uv), np.asarray(fv))
+    np.testing.assert_array_equal(np.asarray(ui), np.asarray(fi))
+    _, t_unfused = timed(unfused, repeat=5)
+    _, t_fused = timed(fused, repeat=5)
+    return t_unfused, t_fused
+
+
+def run(smoke: bool = False) -> None:
+    b, n = (8, 2048) if smoke else (16, 4096)
+    m, c, k = 8, 256, 128
+
+    t_unfused, t_fused = bench_fused_query(b, n, m, c, k)
+    speedup = t_unfused / t_fused
+    emit(f"kernel_fused_query_unfused_{b}x{n}_k{k}", t_unfused,
+         "3 dispatches")
+    emit(f"kernel_fused_query_fused_{b}x{n}_k{k}", t_fused, "1 dispatch")
+    emit("kernel_fused_query_speedup", speedup * 1e0,
+         f"{speedup:.2f}x fused vs unfused")
+    record_metric("fused_query_speedup", speedup, better="higher",
+                  portable=True)
+    record_metric("fused_query_us", t_fused, better="lower", portable=False)
+    record_metric("unfused_query_us", t_unfused, better="lower",
+                  portable=False)
+
+    t_u8, t_f8 = bench_fused_query(b, n, m, c, k, quantized=True)
+    emit(f"kernel_fused_query_int8_{b}x{n}_k{k}", t_f8,
+         f"{t_u8 / t_f8:.2f}x vs unfused int8")
+    record_metric("fused_query_int8_us", t_f8, better="lower",
+                  portable=False)
+
+    # per-op oracle-path timings (the stages the CPU engine dispatches)
     qi, qv = _rows(16, 16)
-    di, dv = _rows(4096, 16)
-    jit_ref = jax.jit(ref.sparse_dot_ref)
-    jit_ref(qi, qv, di, dv).block_until_ready()
-    _, t_ref = timed(lambda: jit_ref(qi, qv, di, dv).block_until_ready())
-    emit("kernel_sparse_dot_xla_16x4096", t_ref, "oracle-path")
-    _, t_k = timed(lambda: ops.sparse_dot(qi, qv, di, dv).block_until_ready())
-    emit("kernel_sparse_dot_pallas_interpret", t_k, "semantics-path")
+    di, dv = _rows(n, 16)
+    jit_sd = jax.jit(ref.sparse_dot_ref)
+    jit_sd(qi, qv, di, dv).block_until_ready()
+    _, t_sd = timed(lambda: jit_sd(qi, qv, di, dv).block_until_ready())
+    emit(f"kernel_sparse_dot_xla_16x{n}", t_sd, "oracle-path")
+    record_metric("sparse_dot_us", t_sd, better="lower", portable=False)
 
-    # pq_score: the LUT scoring hot loop
-    lut = jnp.asarray(RNG.normal(size=(16, 8, 256)), jnp.float32)
-    codes = jnp.asarray(RNG.integers(0, 256, (8192, 8)), jnp.uint8)
-    jit_pq = jax.jit(ref.pq_score_ref)
-    jit_pq(lut, codes).block_until_ready()
-    _, t_ref = timed(lambda: jit_pq(lut, codes).block_until_ready())
-    emit("kernel_pq_score_xla_16x8192", t_ref, "oracle-path")
+    lut = jnp.asarray(RNG.normal(size=(b, m, c)), jnp.float32)
+    codes = jnp.asarray(RNG.integers(0, c, (b, n, m)), jnp.uint8)
+    ops.pq_scores(lut, codes).block_until_ready()
+    _, t_pq = timed(lambda: ops.pq_scores(lut, codes).block_until_ready())
+    emit(f"kernel_pq_scores_xla_{b}x{n}", t_pq, "oracle-path")
+    record_metric("pq_scores_us", t_pq, better="lower", portable=False)
 
-    # topk
-    scores = jnp.asarray(RNG.normal(size=(16, 8192)), jnp.float32)
+    scores = jnp.asarray(RNG.normal(size=(b, n)), jnp.float32)
     jit_tk = jax.jit(lambda s: jax.lax.top_k(s, 10))
     jit_tk(scores)[0].block_until_ready()
-    _, t_ref = timed(lambda: jit_tk(scores)[0].block_until_ready())
-    emit("kernel_topk_xla_16x8192_k10", t_ref, "oracle-path")
+    _, t_tk = timed(lambda: jit_tk(scores)[0].block_until_ready())
+    emit(f"kernel_topk_xla_{b}x{n}_k10", t_tk, "oracle-path")
+    record_metric("topk_us", t_tk, better="lower", portable=False)
 
-    # fused scorer
-    from repro.core.scorer import scorer_init
+    from repro.core.scorer import scorer_apply, scorer_init
     from repro.core.types import FeatureSpec
     spec = FeatureSpec(dense={"a": 8}, scalars=("x",))
     params = scorer_init(jax.random.PRNGKey(0), spec)
     feats = jnp.asarray(RNG.normal(size=(4096, params["w0"].shape[0])),
                         jnp.float32)
-    from repro.core.scorer import scorer_apply
     scorer_apply(params, feats).block_until_ready()
-    _, t_ref = timed(lambda: scorer_apply(params, feats).block_until_ready())
-    emit("kernel_scorer_mlp_xla_4096", t_ref, "oracle-path")
+    _, t_mlp = timed(lambda: scorer_apply(params, feats).block_until_ready())
+    emit("kernel_scorer_mlp_xla_4096", t_mlp, "oracle-path")
+    record_metric("scorer_mlp_us", t_mlp, better="lower", portable=False)
+
+    if smoke:
+        assert speedup >= 1.0, (
+            f"fused query slower than composed ops: {speedup:.3f}x")
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes + assert fused >= 1.0x (CI lane)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -10,6 +10,13 @@ divided by per-chip rates equal the brief's global/(chips x rate) formula.
 Scan-body undercounting is fixed by the probe extrapolation recorded in
 each json ("corrected"); MODEL_FLOPS (6*N*D or 6*N_active*D) comes from the
 exact parameter tree of each config.
+
+``--kernels`` is the query-kernel driver: it times every kernel entry in
+``repro.kernels.ops`` on this machine, computes each op's analytic
+minimum memory traffic, and reports achieved bytes/s as a fraction of the
+*measured* copy bandwidth (the machine's memory-bandwidth bound) — the
+distance-from-roofline number the ISSUE-10 fusion is judged by. All
+machine-scoped, report-only.
 """
 from __future__ import annotations
 
@@ -149,5 +156,91 @@ def run() -> None:
                   f"{r.get('useful_frac', 0):.2f}")
 
 
+# ---------------------------------------------------------------- kernels
+
+
+def measured_copy_bw(n_bytes: int = 1 << 27) -> float:
+    """This machine's achievable memory bandwidth (bytes/s): time a jitted
+    device copy of ``n_bytes`` (read + write = 2x traffic)."""
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.common import timed
+    x = jnp.zeros((n_bytes // 4,), jnp.float32)
+    cp = jax.jit(lambda a: a + 1.0)
+    cp(x).block_until_ready()
+    _, us = timed(lambda: cp(x).block_until_ready(), repeat=5)
+    return 2.0 * n_bytes / (us / 1e6)
+
+
+def kernel_rows(b=16, n=4096, m=8, c=256, k=128, kq=16, r=256):
+    """Time each ops.* kernel entry; pair wall-clock with the op's
+    analytic minimum HBM traffic -> achieved GB/s and fraction of the
+    measured memory-bandwidth bound."""
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.common import timed
+    from repro.kernels import ops
+    rng = np.random.default_rng(17)
+    lut = jnp.asarray(rng.normal(size=(b, m, c)), jnp.float32)
+    codes = jnp.asarray(rng.integers(0, c, (b, n, m)), jnp.uint8)
+    ids = jnp.asarray(rng.integers(0, n // 2, (b, n)), jnp.int32)
+    valid = jnp.asarray(rng.random((b, n)) >= 0.05)
+    bias = jnp.asarray(rng.normal(size=(b, n)), jnp.float32)
+    scores = jnp.asarray(rng.normal(size=(b, n)), jnp.float32)
+    qi = jnp.asarray(rng.integers(0, 4096, (b, kq)), jnp.uint32)
+    qv = jnp.asarray(rng.random((b, kq)), jnp.float32)
+    di = jnp.asarray(rng.integers(0, 4096, (b, r, kq)), jnp.uint32)
+    dv = jnp.asarray(rng.random((b, r, kq)), jnp.float32)
+
+    lut_b = b * m * c * 4
+    row_b = b * n * (m + 4 + 1 + 4)       # codes + ids + valid + bias
+    out_b = b * k * 8                     # vals f32 + idxs i32
+    cases = [
+        ("pq_score_dedup_topk", lut_b + row_b + out_b,
+         lambda: ops.pq_score_dedup_topk(lut, codes, ids, k, valid=valid,
+                                         bias=bias)),
+        ("pq_score_dedup_topk_int8", lut_b + row_b + out_b,
+         lambda: ops.pq_score_dedup_topk(lut, codes, ids, k, valid=valid,
+                                         bias=bias, quantized=True)),
+        ("pq_scores", lut_b + b * n * (m + 4),
+         lambda: ops.pq_scores(lut, codes)),
+        ("topk_select", b * n * 4 + out_b,
+         lambda: ops.topk_select(scores, k)),
+        ("sparse_dot_batched", b * kq * 8 + b * r * kq * 8 + b * r * 4,
+         lambda: ops.sparse_dot_batched(qi, qv, di, dv)),
+    ]
+    bw = measured_copy_bw()
+    rows = []
+    for name, nbytes, fn in cases:
+        jax.block_until_ready(fn())        # warm-up / compile
+        _, us = timed(lambda: jax.block_until_ready(fn()), repeat=5)
+        achieved = nbytes / (us / 1e6)
+        rows.append({"kernel": name, "time_us": us, "bytes": nbytes,
+                     "achieved_gbs": achieved / 1e9,
+                     "bound_frac": achieved / bw})
+    return rows, bw
+
+
+def kernels_report() -> str:
+    rows, bw = kernel_rows()
+    lines = [f"measured memory-bandwidth bound: {bw / 1e9:.1f} GB/s",
+             "| kernel | time_us | min_bytes | achieved GB/s "
+             "| frac of bw bound |", "|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['kernel']} | {r['time_us']:.1f} | {r['bytes']} "
+            f"| {r['achieved_gbs']:.2f} | {r['bound_frac']:.3f} |")
+    return "\n".join(lines)
+
+
 if __name__ == "__main__":
-    print(markdown_table(rows_from_records()))
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kernels", action="store_true",
+                    help="measure ops.* kernels against the machine's "
+                         "memory-bandwidth bound")
+    args = ap.parse_args()
+    if args.kernels:
+        print(kernels_report())
+    else:
+        print(markdown_table(rows_from_records()))

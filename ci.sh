@@ -65,6 +65,10 @@ python -m benchmarks.mutations --pipeline --smoke
 # Android-Security time-to-flag: multimodal vs dense-only on one seeded
 # stream; asserts the >= 2.0 speedup and records the gated ratio
 python -m benchmarks.time_to_flag --smoke
+# fused query-shortlist kernel vs the composed escape hatch: asserts
+# fused >= 1.0x and records the gated fused_query_speedup ratio plus
+# machine-scoped per-op timings
+python -m benchmarks.kernels_micro --smoke
 mv "$BENCH_JSON" "$BENCH_TARGET"
 
 python -m benchmarks.check_regression "$BENCH_TARGET" BENCH_baseline.json

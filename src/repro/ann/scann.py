@@ -46,7 +46,9 @@ class ScannConfig:
     soar_lambda: float = 1.0    # SOAR orthogonality weight (<0 disables SOAR)
     kmeans_iters: int = 12
     pq_iters: int = 8
-    use_kernels: bool = False   # route hot stages through Pallas kernels
+    use_kernels: bool = False   # force the Pallas kernels (TPU / parity tests)
+    fused: bool = True          # one fused shortlist op (escape hatch: False)
+    pq_int8: bool = False       # quantized int8 LUT scoring in the shortlist
     seed: int = 13
 
     @property
@@ -61,17 +63,31 @@ def _write_members(arr, rows, cols, vals):
     return arr.at[rows, cols].set(vals)
 
 
-@partial(jax.jit, static_argnames=("nprobe", "reorder", "k", "use_kernels"))
+@partial(jax.jit, static_argnames=("nprobe", "reorder", "k", "use_kernels",
+                                   "fused", "pq_int8"))
 def _query_step(q_idx, q_val, q_sketch, centroids, books,
                 members, codes_list, valid_list,
                 sp_idx, sp_val, *, nprobe: int, reorder: int, k: int,
-                use_kernels: bool = False):
+                use_kernels: bool = False, fused: bool = True,
+                pq_int8: bool = False):
     """Batched query: returns (slots [B,k], dists [B,k]); empty = -1/+inf.
 
-    ``use_kernels`` routes the two hot stages (PQ LUT scoring, exact
-    rescoring) through the Pallas kernels — the TPU path. Off by default
-    on CPU where interpret-mode kernels would serialize the grid.
+    ``fused`` routes the whole shortlist stage (PQ LUT scoring + SOAR
+    dedup + top-r) through ``kernels.ops.pq_score_dedup_topk`` — one
+    pallas_call on TPU, its bitwise-identical single-jit XLA twin on CPU.
+    ``fused=False`` composes the same stages from the individual ops
+    (bitwise-identical by the fused-query contract, pinned by
+    tests/test_kernels_fused.py).  ``use_kernels`` forces the Pallas
+    kernels themselves (interpret-mode on CPU — the parity-test path).
+    ``pq_int8`` scores the shortlist from a symmetric int8-quantised LUT.
+
+    SOAR dedup happens at the shortlist cut: both copies of a point carry
+    the same slot number, so the fused op neutralises the lower-ranked
+    copy to -inf (dedup-after-cut; see kernels/fused_query.py for the
+    tie-break contract) and the exact rescore sees each slot once.
     """
+    from repro.kernels import ops as kops
+
     B = q_idx.shape[0]
     S = members.shape[1]
 
@@ -79,32 +95,36 @@ def _query_step(q_idx, q_val, q_sketch, centroids, books,
     pscores = part_mod.partition_scores(q_sketch, centroids)       # [B, C]
     top_ps, top_parts = jax.lax.top_k(pscores, nprobe)             # [B, nprobe]
 
-    # 2) PQ LUT scoring over the probed partitions' slabs
+    # 2+3) PQ LUT scoring over the probed partitions' slabs, SOAR dedup by
+    # slot id, shortlist top-r — the fused hot loop
     lut = pq.query_lut(q_sketch, books)                            # [B, M, Cq]
     cand_slots = members[top_parts]                                # [B, np, S]
     cand_codes = codes_list[top_parts]                             # [B, np, S, M]
     cand_valid = valid_list[top_parts]                             # [B, np, S]
     m = books.shape[0]
 
-    if use_kernels:
-        from repro.kernels import ops as kops
-        approx = kops.pq_score_batched(lut, cand_codes.reshape(B, -1, m))
-    else:
-        def score_one(lut_b, codes_b):
-            flat = codes_b.reshape(-1, m).astype(jnp.int32)        # [np*S, M]
-            per = lut_b[jnp.arange(m)[None, :], flat]              # [np*S, M]
-            return jnp.sum(per, axis=-1)
-
-        approx = jax.vmap(score_one)(lut, cand_codes)              # [B, np*S]
-    approx = approx + jnp.repeat(top_ps, S, axis=-1)               # + q . c_p
+    flat_codes = cand_codes.reshape(B, -1, m)
     flat_slots = cand_slots.reshape(B, -1)
     flat_valid = cand_valid.reshape(B, -1) & (flat_slots >= 0)
-    approx = jnp.where(flat_valid, approx, -jnp.inf)
-
-    # 3) shortlist
-    r = min(reorder, approx.shape[-1])
-    short_scores, short_pos = jax.lax.top_k(approx, r)             # [B, r]
+    bias = jnp.repeat(top_ps, S, axis=-1)                          # + q . c_p
+    r = min(reorder, flat_slots.shape[-1])
+    force_kernel = True if use_kernels else None                   # None = env
+    if fused:
+        short_scores, short_pos = kops.pq_score_dedup_topk(
+            lut, flat_codes, flat_slots, r, valid=flat_valid, bias=bias,
+            quantized=pq_int8, use_kernel=force_kernel)
+    else:
+        approx = kops.pq_scores(lut, flat_codes, quantized=pq_int8,
+                                use_kernel=force_kernel)
+        approx = jnp.where(flat_valid, approx + bias, -jnp.inf)
+        if use_kernels:
+            short_scores, short_pos = kops.topk_select(approx, r)
+        else:
+            short_scores, short_pos = jax.lax.top_k(approx, r)
+        short_scores = kops.dedup_mask(short_scores, short_pos,
+                                       flat_slots, flat_valid)
     short_slots = jnp.take_along_axis(flat_slots, short_pos, axis=-1)
+    # -inf = invalid or duplicate SOAR copy; both drop out of the rescore
     short_slots = jnp.where(jnp.isfinite(short_scores), short_slots, -1)
 
     # 4) exact sparse-space rescore of the shortlist
@@ -112,23 +132,14 @@ def _query_step(q_idx, q_val, q_sketch, centroids, books,
     rows_idx = sp_idx[safe]                                        # [B, r, K]
     rows_val = sp_val[safe]
     if use_kernels:
-        from repro.kernels import ops as kops
         exact = kops.sparse_dot_batched(q_idx, q_val, rows_idx, rows_val)
     else:
         exact = jax.vmap(sparse_dot_one_many)(q_idx, q_val, rows_idx, rows_val)
     exact = jnp.where(short_slots >= 0, exact, -jnp.inf)
 
-    # 5) SOAR dedup: a slot probed via both partitions appears twice.
-    order = jnp.argsort(short_slots, axis=-1)
-    s_sorted = jnp.take_along_axis(short_slots, order, axis=-1)
-    e_sorted = jnp.take_along_axis(exact, order, axis=-1)
-    dup = jnp.concatenate([jnp.zeros((B, 1), bool),
-                           s_sorted[:, 1:] == s_sorted[:, :-1]], axis=-1)
-    e_sorted = jnp.where(dup, -jnp.inf, e_sorted)
-
     kk = min(k, r)
-    final_scores, pos = jax.lax.top_k(e_sorted, kk)
-    final_slots = jnp.take_along_axis(s_sorted, pos, axis=-1)
+    final_scores, pos = jax.lax.top_k(exact, kk)
+    final_slots = jnp.take_along_axis(short_slots, pos, axis=-1)
     final_slots = jnp.where(jnp.isfinite(final_scores), final_slots, -1)
     return final_slots, -final_scores
 
@@ -391,7 +402,8 @@ class ScannIndex:
             self.members, self.codes_list, self.valid_list,
             self.sp_idx, self.sp_val,
             nprobe=nprobe, reorder=cfg.reorder, k=min(k, cfg.reorder),
-            use_kernels=cfg.use_kernels)
+            use_kernels=cfg.use_kernels, fused=cfg.fused,
+            pq_int8=cfg.pq_int8)
         slots, dists = np.asarray(slots), np.asarray(dists)
         ids = np.where(slots >= 0, self.ids[np.maximum(slots, 0)], -1)
         if k > ids.shape[1]:

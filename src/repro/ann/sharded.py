@@ -6,15 +6,20 @@ answered by a scatter/merge dataflow with static shapes end-to-end:
 
   query step   — each shard owns n_partitions/shards partitions (centroids
                  sharded too). Per shard: centroid matmul over local
-                 partitions -> local top-nprobe -> PQ LUT scores over the
-                 probed slabs -> exact sparse rescore of the local
-                 shortlist -> local top-k. Then one all_gather of
-                 k-per-shard candidates and a final merge top-k.
-                 No all-to-all, no data-dependent gathers across chips.
-                 With SOAR enabled the shortlist carries each slot's point
-                 id (``row_ids``) and duplicates (a point probed via both
-                 its copies) are masked before the local top-k — the
-                 two-copy dedup discipline of ``ann/scann.py``.
+                 partitions -> local top-nprobe -> fused shortlist
+                 (``kernels.ops.pq_score_dedup_topk``: PQ LUT scores over
+                 the probed slabs, SOAR dedup by point id in-register,
+                 top-r — one pallas_call on TPU, its bitwise XLA twin on
+                 CPU) -> exact sparse rescore of the local shortlist ->
+                 local top-k. Then one all_gather of k-per-shard
+                 candidates and a final merge top-k. No all-to-all, no
+                 data-dependent gathers across chips. With SOAR enabled
+                 the shortlist carries each slot's point id (``row_ids``)
+                 and the lower-ranked duplicate copy is neutralised at the
+                 shortlist cut (dedup-after-cut; see kernels/fused_query.py
+                 for the tie-break contract) — the two-copy dedup
+                 discipline of ``ann/scann.py``. ``fused=False`` composes
+                 the same stages from individual ops, bitwise-identical.
 
   mutate step  — mutation batch replicated in; each shard keeps the rows it
                  owns (hash routing over a ``salt`` — bump the salt and
@@ -63,6 +68,7 @@ from jax.experimental.shard_map import shard_map
 from repro.ann.partition import soar_cost
 from repro.core import hashing
 from repro.core.types import PAD_INDEX
+from repro.kernels import ops as kops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,8 +94,13 @@ class GusCellConfig:
     merge: str = "flat"
     # SOAR secondary-copy weight (Sun et al. 2024); < 0 = single copy.
     # When enabled the mutate step writes two copies per row and the query
-    # step dedups shortlists by point id before the local top-k.
+    # step dedups shortlists by point id at the shortlist cut.
     soar_lambda: float = -1.0
+    # fused shortlist op (PQ-score -> dedup -> top-r in one kernel); False
+    # composes the same stages from individual ops, bitwise-identical
+    fused: bool = True
+    # score the shortlist from a symmetric int8-quantised LUT
+    pq_int8: bool = False
 
     @property
     def use_soar(self) -> bool:
@@ -171,53 +182,47 @@ def make_query_step(mesh, cell: GusCellConfig):
         # 1) local partition selection
         pscores = q_sketch @ centroids.T                       # [B, C_loc]
         top_ps, top_parts = jax.lax.top_k(pscores, cell.nprobe_local)
-        # 2) LUT scores over probed slabs
+        # 2+3) fused shortlist: PQ LUT scores over the probed slabs, SOAR
+        # dedup by point id (both copies of a point live on its owner
+        # shard, so the in-register duplicate mask is complete), top-r —
+        # one op; the lower-ranked duplicate copy comes back as -inf and
+        # drops out of the rescore below
         q_sub = q_sketch.reshape(b, m, -1)
         lut = jnp.einsum("bmd,mcd->bmc", q_sub, books)         # [B, M, 256]
         cand_codes = codes[top_parts]                          # [B, np, S, M]
         cand_valid = valid[top_parts]
+        cand_ids = row_ids[top_parts]                          # [B, np, S]
 
-        def score_one(lut_b, codes_b):
-            flat = codes_b.reshape(-1, m).astype(jnp.int32)
-            return jnp.sum(lut_b[jnp.arange(m)[None, :], flat], axis=-1)
-
-        approx = jax.vmap(score_one)(lut, cand_codes)          # [B, np*S]
-        approx = approx + jnp.repeat(top_ps, s, axis=-1)
-        approx = jnp.where(cand_valid.reshape(b, -1), approx, -jnp.inf)
-        # 3) local shortlist + exact sparse rescore
+        flat_codes = cand_codes.reshape(b, -1, m)
+        flat_valid = cand_valid.reshape(b, -1)
+        flat_ids = cand_ids.reshape(b, -1)
+        bias = jnp.repeat(top_ps, s, axis=-1)
         r = min(cell.reorder if cell.reorder > 0 else cell.top_k * 2,
-                approx.shape[-1])
-        _, short = jax.lax.top_k(approx, r)                    # [B, r]
+                flat_valid.shape[-1])
+        if cell.fused:
+            short_vals, short = kops.pq_score_dedup_topk(
+                lut, flat_codes, flat_ids, r, valid=flat_valid, bias=bias,
+                quantized=cell.pq_int8)
+        else:
+            approx = kops.pq_scores(lut, flat_codes, quantized=cell.pq_int8)
+            approx = jnp.where(flat_valid, approx + bias, -jnp.inf)
+            short_vals, short = jax.lax.top_k(approx, r)       # [B, r]
+            short_vals = kops.dedup_mask(short_vals, short,
+                                         flat_ids.astype(jnp.int32),
+                                         flat_valid)
         np_s = cell.nprobe_local
         part_of = jnp.take_along_axis(
             jnp.repeat(top_parts, s, axis=-1), short, axis=-1)
         pos_of = jnp.take_along_axis(
             jnp.tile(jnp.arange(s), (b, np_s)), short, axis=-1)
+        # 4) exact sparse rescore of the deduped shortlist
         rows_idx = m_idx[part_of, pos_of]                      # [B, r, K]
         rows_val = m_val[part_of, pos_of]
         eq = (q_idx[:, None, :, None] == rows_idx[:, :, None, :]) \
             & (q_idx[:, None, :, None] != PAD_INDEX)
         prod = q_val[:, None, :, None] * rows_val[:, :, None, :]
         exact = jnp.sum(jnp.where(eq, prod, 0.0), axis=(2, 3))  # [B, r]
-        valid_short = jnp.take_along_axis(
-            cand_valid.reshape(b, -1), short, axis=-1)
-        exact = jnp.where(valid_short, exact, -jnp.inf)
-        if cell.use_soar:
-            # SOAR dedup (mirrors scann.py's two-copy probe): both copies
-            # of a point live on its owner shard, so masking duplicates by
-            # point id before the local top-k is complete. Sorting by id
-            # also makes tie order slot-free — compaction-invariant.
-            sid = row_ids[part_of, pos_of]                     # [B, r]
-            sid = jnp.where(valid_short, sid, PAD_ID)
-            order = jnp.argsort(sid, axis=-1)
-            sid = jnp.take_along_axis(sid, order, axis=-1)
-            exact = jnp.take_along_axis(exact, order, axis=-1)
-            part_of = jnp.take_along_axis(part_of, order, axis=-1)
-            pos_of = jnp.take_along_axis(pos_of, order, axis=-1)
-            dup = jnp.concatenate(
-                [jnp.zeros((b, 1), bool), sid[:, 1:] == sid[:, :-1]],
-                axis=-1)
-            exact = jnp.where(dup, -jnp.inf, exact)
+        exact = jnp.where(jnp.isfinite(short_vals), exact, -jnp.inf)
         k = min(cell.top_k, r)
         loc_scores, loc_pos = jax.lax.top_k(exact, k)
         # globalize candidate ids: (shard, partition, pos) -> flat row id

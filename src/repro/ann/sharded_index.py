@@ -133,6 +133,9 @@ class ShardedConfig:
     eta: float = 1.0            # anisotropic weight for codebook training
     seed: int = 13
     merge: str = "flat"         # cross-shard candidate merge: "flat" | "hier"
+    fused: bool = True          # fused shortlist op (False = composed ops,
+    #                             bitwise-identical escape hatch)
+    pq_int8: bool = False       # int8-quantised LUT scoring in the shortlist
     # ---- slab lifecycle -------------------------------------------------
     # Lifecycle knobs (SOAR weight, auto-compaction, slab headroom, skew
     # re-splits) live on MaintenanceConfig; the fields below are one-release
@@ -279,7 +282,8 @@ class ShardedGusIndex:
             query_batch=query_batch or cfg.query_batch,
             mutate_batch=cfg.mutate_batch, top_k=top_k or 10,
             reorder=cfg.reorder, merge=cfg.merge,
-            soar_lambda=cfg.maintenance.soar if cfg.use_soar else -1.0)
+            soar_lambda=cfg.maintenance.soar if cfg.use_soar else -1.0,
+            fused=cfg.fused, pq_int8=cfg.pq_int8)
 
     def _sketch(self, emb: SparseBatch) -> jax.Array:
         return count_sketch(emb, self.cfg.d_proj, self.cfg.seed)

@@ -1,0 +1,290 @@
+"""Pallas TPU kernel: fused query shortlist (PQ-score -> SOAR-dedup -> top-k).
+
+The serving shortlist path used to run three separately-jitted ops with HBM
+round-trips between them: ``pq_score_batched`` (LUT scoring), an
+``argsort(id)``-based SOAR dedup, and ``topk_select``.  This kernel fuses
+all three: one program per query row keeps the candidate slab resident in
+VMEM, accumulates the PQ lookup scores on the MXU (ordered per-subspace
+accumulation, see below), masks invalid rows, then runs k rounds of
+(max, lowest-index argmax, mask-out) selection with the SOAR duplicate
+check done **in-register** against the ids already selected.
+
+Result contract (pinned bitwise by tests/test_kernels_fused.py):
+
+* ``idxs`` are exactly ``jax.lax.top_k(scores, k)[1]`` where
+  ``scores = where(valid, pq + bias, -inf)`` — ties resolve to the lowest
+  candidate index, and fully-invalid rows yield ``idxs == 0, 1, ... k-1``.
+* ``vals[i]`` is ``scores[idxs[i]]`` unless some earlier shortlist entry
+  ``j < i`` carries the same point id with both entries valid, in which
+  case ``vals[i] = -inf`` (the duplicate SOAR copy is neutralised but keeps
+  its slot, so downstream gathers stay aligned with ``idxs``).
+
+Dedup therefore happens AFTER the top-k cut ("dedup-after-cut"): the
+shortlist ranking is by raw approximate score, and the best-scoring copy of
+each point survives.  The old path deduped after exact rescoring by
+id-sorted order; both keep exactly one copy per id and copies share exact
+scores, so final (id, distance) results are unchanged — only the internal
+tie-break moved, and it is documented here and in docs/ARCHITECTURE.md.
+
+Ordered accumulation: f32 addition is not associative, so the kernel, the
+single-jit XLA twin (``fused_query_xla``) and the oracle
+(``ref.fused_query_ref``) all accumulate subspaces left-to-right
+(``acc += gather(lut[m])`` for m = 0..M-1).  The one-hot matmul form used
+on the MXU adds exact zeros to the gathered value, which is bitwise
+neutral, so kernel == twin == oracle bitwise.  LUT and bias values must be
+finite (0 * inf would poison the one-hot matmul).
+
+The int8 variant quantises the LUT per (query, subspace) with a symmetric
+scale (``quantize_lut``), dequantises in-register, and scores through the
+same ordered f32 loop (the scale multiply never sits in the accumulation
+chain, so XLA cannot FMA-contract it); its twin and oracle mirror the op
+order exactly so the quantised path is bitwise reproducible too (against
+its own oracle — quantisation changes scores vs the f32 path by
+construction).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# plain float so kernel bodies don't capture a traced constant
+NEG_INF = float("-inf")
+
+
+# ---------------------------------------------------------------------------
+# shared kernel pieces
+
+
+def _score_rows_f32(lut, codes, n_centers: int):
+    """Ordered LUT accumulation. lut [M, C] f32; codes [N, M] u8 -> [N]."""
+    acc = jnp.zeros((codes.shape[0],), jnp.float32)
+    for mi in range(lut.shape[0]):      # static unroll, fixed l-to-r order
+        onehot = (codes[:, mi].astype(jnp.int32)[:, None]
+                  == jnp.arange(n_centers, dtype=jnp.int32)[None, :])
+        acc += onehot.astype(jnp.float32) @ lut[mi]          # MXU row
+    return acc
+
+
+def _score_rows_int8(qlut, scale, codes, n_centers: int):
+    """Quantised variant: qlut i8 [M, C]; scale f32 [M]; codes [N, M].
+
+    Dequantise-then-score: the scale multiply happens on the LUT table,
+    never in the accumulation chain, so XLA cannot contract it into an
+    FMA and drift a ulp from the eager oracle (gather-of-mul is bitwise
+    mul-of-gather)."""
+    deq = qlut.astype(jnp.float32) * scale[:, None]
+    return _score_rows_f32(deq, codes, n_centers)
+
+
+def _select_dedup(scores, ids, valid, k: int):
+    """k rounds of (max, lowest-index argmax, mask-out) with in-register
+    SOAR dedup: an ``alive`` mask (not the mask-to--inf trick) so that
+    legitimate -inf scores — tombstones, padding — still select distinct
+    indices exactly like ``lax.top_k``."""
+    n = scores.shape[0]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    iota_k = jnp.arange(k, dtype=jnp.int32)
+
+    def body(i, carry):
+        alive, vals, idxs, sel_ids, sel_ok = carry
+        masked = jnp.where(alive, scores, NEG_INF)
+        best = jnp.max(masked)
+        bi = jnp.min(jnp.where(alive & (masked == best), iota, n))
+        bi = bi.astype(jnp.int32)
+        hit = iota == bi
+        # O(N) reductions instead of a gather: the selected id + validity
+        id_b = jnp.sum(jnp.where(hit, ids, 0)).astype(jnp.int32)
+        ok_b = jnp.any(hit & valid)
+        dup = jnp.any((sel_ids == id_b) & sel_ok & (iota_k < i)) & ok_b
+        vals = jnp.where(iota_k == i, jnp.where(dup, NEG_INF, best), vals)
+        idxs = jnp.where(iota_k == i, bi, idxs)
+        sel_ids = jnp.where(iota_k == i, id_b, sel_ids)
+        sel_ok = jnp.where(iota_k == i, ok_b, sel_ok)
+        return alive & (iota != bi), vals, idxs, sel_ids, sel_ok
+
+    init = (jnp.ones((n,), jnp.bool_),
+            jnp.full((k,), NEG_INF, jnp.float32),
+            jnp.zeros((k,), jnp.int32),
+            jnp.full((k,), -1, jnp.int32),
+            jnp.zeros((k,), jnp.bool_))
+    _, vals, idxs, _, _ = jax.lax.fori_loop(0, k, body, init)
+    return vals, idxs
+
+
+def _fused_kernel(lut_ref, codes_ref, ids_ref, valid_ref, bias_ref,
+                  vals_ref, idxs_ref, *, n_centers: int, k: int):
+    valid = valid_ref[...] != 0
+    acc = _score_rows_f32(lut_ref[...], codes_ref[...], n_centers)
+    scores = jnp.where(valid, acc + bias_ref[...], NEG_INF)
+    vals, idxs = _select_dedup(scores, ids_ref[...], valid, k)
+    vals_ref[...] = vals
+    idxs_ref[...] = idxs
+
+
+def _fused_kernel_int8(qlut_ref, scale_ref, codes_ref, ids_ref, valid_ref,
+                       bias_ref, vals_ref, idxs_ref, *, n_centers: int,
+                       k: int):
+    valid = valid_ref[...] != 0
+    acc = _score_rows_int8(qlut_ref[...], scale_ref[...], codes_ref[...],
+                           n_centers)
+    scores = jnp.where(valid, acc + bias_ref[...], NEG_INF)
+    vals, idxs = _select_dedup(scores, ids_ref[...], valid, k)
+    vals_ref[...] = vals
+    idxs_ref[...] = idxs
+
+
+# ---------------------------------------------------------------------------
+# quantisation
+
+
+@jax.jit
+def quantize_lut(lut: jax.Array):
+    """Symmetric per-(query, subspace) int8 quantisation of an f32 LUT.
+
+    lut f32 [B, M, C] -> (qlut i8 [B, M, C], scale f32 [B, M]).
+    """
+    amax = jnp.max(jnp.abs(lut), axis=-1)                       # [B, M]
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    qlut = jnp.round(lut / scale[..., None]).astype(jnp.int8)
+    return qlut, scale
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+
+
+def _row_spec(nn):
+    return pl.BlockSpec((None, nn), lambda qb: (qb, 0))
+
+
+def _pad_rows(codes, ids, valid, bias, n_pad: int):
+    codes = jnp.pad(codes, ((0, 0), (0, n_pad), (0, 0)))
+    ids = jnp.pad(ids, ((0, 0), (0, n_pad)), constant_values=-1)
+    valid = jnp.pad(valid, ((0, 0), (0, n_pad)))
+    bias = jnp.pad(bias, ((0, 0), (0, n_pad)))
+    return codes, ids, valid, bias
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def fused_query_kernel(lut, codes, ids, valid, bias, k: int, *,
+                       interpret: bool = False):
+    """Single pallas_call: lut f32 [B,M,C]; codes u8 [B,N,M]; ids i32 [B,N];
+    valid i32 [B,N]; bias f32 [B,N] -> (vals f32 [B,k], idxs i32 [B,k])."""
+    b, m, c = lut.shape
+    n = codes.shape[1]
+    assert k <= n, f"k={k} exceeds candidate count n={n}"
+    # pad N to the lane grain only when lowering through Mosaic; padding
+    # sits after the real rows (valid=0, id=-1) so the lowest-index
+    # tie-break can never prefer a padded slot while k <= n
+    n_pad = 0 if interpret else -n % 128
+    if n_pad:
+        codes, ids, valid, bias = _pad_rows(codes, ids, valid, bias, n_pad)
+    nn = n + n_pad
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, n_centers=c, k=k),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((None, m, c), lambda qb: (qb, 0, 0)),
+            pl.BlockSpec((None, nn, m), lambda qb: (qb, 0, 0)),
+            _row_spec(nn), _row_spec(nn), _row_spec(nn),
+        ],
+        out_specs=(pl.BlockSpec((None, k), lambda qb: (qb, 0)),
+                   pl.BlockSpec((None, k), lambda qb: (qb, 0))),
+        out_shape=(jax.ShapeDtypeStruct((b, k), jnp.float32),
+                   jax.ShapeDtypeStruct((b, k), jnp.int32)),
+        interpret=interpret,
+    )(lut, codes, ids, valid, bias)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def fused_query_kernel_int8(qlut, scale, codes, ids, valid, bias, k: int, *,
+                            interpret: bool = False):
+    """Quantised variant: qlut i8 [B,M,C]; scale f32 [B,M]; rest as above."""
+    b, m, c = qlut.shape
+    n = codes.shape[1]
+    assert k <= n, f"k={k} exceeds candidate count n={n}"
+    n_pad = 0 if interpret else -n % 128
+    if n_pad:
+        codes, ids, valid, bias = _pad_rows(codes, ids, valid, bias, n_pad)
+    nn = n + n_pad
+    return pl.pallas_call(
+        functools.partial(_fused_kernel_int8, n_centers=c, k=k),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((None, m, c), lambda qb: (qb, 0, 0)),
+            pl.BlockSpec((None, m), lambda qb: (qb, 0)),
+            pl.BlockSpec((None, nn, m), lambda qb: (qb, 0, 0)),
+            _row_spec(nn), _row_spec(nn), _row_spec(nn),
+        ],
+        out_specs=(pl.BlockSpec((None, k), lambda qb: (qb, 0)),
+                   pl.BlockSpec((None, k), lambda qb: (qb, 0))),
+        out_shape=(jax.ShapeDtypeStruct((b, k), jnp.float32),
+                   jax.ShapeDtypeStruct((b, k), jnp.int32)),
+        interpret=interpret,
+    )(qlut, scale, codes, ids, valid, bias)
+
+
+# ---------------------------------------------------------------------------
+# single-jit XLA twins — bitwise-identical semantics without a pallas_call,
+# the production route on backends where Mosaic lowering is unavailable
+# (this CPU container) and the composed escape hatch's building blocks.
+
+
+def pq_scores_seq(lut, codes):
+    """Ordered-accumulation LUT scoring (gather form): lut f32 [B, M, C];
+    codes u8 [B, N, M] -> f32 [B, N].  Bitwise-matches the kernel's
+    one-hot matmul (adding exact zeros is neutral in f32)."""
+    acc = jnp.zeros(codes.shape[:2], jnp.float32)
+    for mi in range(lut.shape[1]):
+        acc = acc + jnp.take_along_axis(
+            lut[:, mi, :], codes[:, :, mi].astype(jnp.int32), axis=1)
+    return acc
+
+
+def pq_scores_seq_int8(qlut, scale, codes):
+    """Quantised twin: dequantise the LUT then run the f32 ordered loop
+    (keeps the scale multiply out of the accumulation chain — no FMA)."""
+    deq = qlut.astype(jnp.float32) * scale[..., None]
+    return pq_scores_seq(deq, codes)
+
+
+def dedup_mask_xla(vals, idxs, ids, valid):
+    """Dedup-after-cut: neutralise later shortlist entries whose point id
+    already appeared at an earlier (higher-ranked) valid slot.
+
+    vals f32 [B, k]; idxs i32 [B, k]; ids i32 [B, N]; valid bool [B, N]
+    -> vals with duplicate slots set to -inf (idxs unchanged)."""
+    sid = jnp.take_along_axis(ids, idxs, axis=1)                 # [B, k]
+    sv = jnp.take_along_axis(valid, idxs, axis=1)
+    same = (sid[:, :, None] == sid[:, None, :]) \
+        & sv[:, :, None] & sv[:, None, :]                        # [B, k, k]
+    k = vals.shape[1]
+    earlier = jnp.arange(k)[None, :, None] > jnp.arange(k)[None, None, :]
+    dup = jnp.any(same & earlier, axis=2)
+    return jnp.where(dup, NEG_INF, vals)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "quantized"))
+def fused_query_xla(lut, codes, ids, valid, bias, k: int, *,
+                    quantized: bool = False):
+    """Single-jit fusion with semantics bitwise-identical to the kernel.
+
+    ``valid``/``bias`` may be None (all-live / zero) — jit treats None as
+    an empty pytree, so defaults materialise inside the trace instead of
+    costing eager dispatches per call."""
+    ids = jnp.asarray(ids).astype(jnp.int32)
+    valid = (jnp.ones(codes.shape[:2], jnp.bool_) if valid is None
+             else jnp.asarray(valid).astype(jnp.bool_))
+    bias = (jnp.zeros(codes.shape[:2], jnp.float32) if bias is None
+            else jnp.asarray(bias).astype(jnp.float32))
+    if quantized:
+        qlut, scale = quantize_lut(lut)
+        acc = pq_scores_seq_int8(qlut, scale, codes)
+    else:
+        acc = pq_scores_seq(lut, codes)
+    scores = jnp.where(valid, acc + bias, NEG_INF)
+    vals, idxs = jax.lax.top_k(scores, k)
+    return dedup_mask_xla(vals, idxs, ids, valid), idxs

@@ -13,6 +13,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import fused_query as _fq
 from repro.kernels import pq_score as _pq
 from repro.kernels import scorer_mlp as _mlp
 from repro.kernels import sparse_dot as _sd
@@ -20,6 +21,8 @@ from repro.kernels import topk_select as _tk
 
 # interpret unless explicitly compiling for TPU
 INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+quantize_lut = _fq.quantize_lut
 
 
 def pq_score(lut: jax.Array, codes: jax.Array, *, block_n: int = 256,
@@ -60,22 +63,104 @@ def topk_select(scores: jax.Array, k: int, *, interpret: bool | None = None):
         scores, k, interpret=INTERPRET if interpret is None else interpret)
 
 
+def pq_scores(lut, codes, *, quantized: bool = False,
+              use_kernel: bool | None = None,
+              interpret: bool | None = None) -> jax.Array:
+    """Raw shortlist scores with the fused-path ordering contract:
+    lut f32 [B, M, C]; codes u8 [B, N, M] -> f32 [B, N].
+
+    ``use_kernel=None`` routes through Pallas only when the process is
+    compiling kernels (REPRO_PALLAS_COMPILE=1); otherwise the single-jit
+    XLA twin runs with bitwise-identical results.  The quantised variant
+    always scores through the XLA twin (the int8 pallas path only exists
+    fused, inside pq_score_dedup_topk).
+    """
+    if use_kernel is None:
+        use_kernel = not INTERPRET
+    if quantized:
+        qlut, scale = _fq.quantize_lut(lut)
+        return _pq_scores_seq_int8_jit(qlut, scale, codes)
+    if use_kernel:
+        return _pq.pq_score_batched(
+            lut, codes,
+            interpret=INTERPRET if interpret is None else interpret)
+    return _pq_scores_seq_jit(lut, codes)
+
+
+@jax.jit
+def _pq_scores_seq_jit(lut, codes):
+    return _fq.pq_scores_seq(lut, codes)
+
+
+@jax.jit
+def _pq_scores_seq_int8_jit(qlut, scale, codes):
+    return _fq.pq_scores_seq_int8(qlut, scale, codes)
+
+
+@jax.jit
+def dedup_mask(vals, idxs, ids, valid) -> jax.Array:
+    """SOAR dedup over a cut shortlist: -inf the later of any two valid
+    entries sharing a point id.  vals/idxs [B, k]; ids/valid [B, N]."""
+    return _fq.dedup_mask_xla(vals, idxs, ids, valid.astype(jnp.bool_))
+
+
+def pq_score_dedup_topk(lut, codes, ids, k: int, *, valid=None, bias=None,
+                        quantized: bool = False,
+                        use_kernel: bool | None = None,
+                        interpret: bool | None = None):
+    """Fused query shortlist: PQ-LUT scores (+bias), invalid rows -> -inf,
+    top-k with lax.top_k tie-break, SOAR dedup-after-cut in-register.
+
+    lut f32 [B, M, C]; codes u8 [B, N, M]; ids [B, N] (any integer dtype;
+    uint32 wraps deterministically — dedup only compares equality among
+    valid rows, so PAD sentinels are harmless as long as they are invalid)
+    -> (vals f32 [B, k], idxs i32 [B, k]).  See kernels/fused_query.py for
+    the full result contract.
+
+    ``use_kernel=None`` -> pallas_call only under REPRO_PALLAS_COMPILE=1,
+    else the bitwise-identical single-jit XLA twin (the CPU production
+    route).  ``use_kernel=True`` forces the pallas_call (interpreted per
+    ``interpret``/INTERPRET) — what the parity tests exercise.
+    """
+    if use_kernel is None:
+        use_kernel = not INTERPRET
+    if not use_kernel:
+        # normalization (astype, default masks) happens inside the jit —
+        # eager per-call conversions here cost more than the op itself
+        return _fq.fused_query_xla(lut, codes, ids, valid, bias, k,
+                                   quantized=quantized)
+    b, n = codes.shape[0], codes.shape[1]
+    ids = jnp.asarray(ids).astype(jnp.int32)
+    valid = (jnp.ones((b, n), jnp.bool_) if valid is None
+             else jnp.asarray(valid).astype(jnp.bool_))
+    bias = (jnp.zeros((b, n), jnp.float32) if bias is None
+            else jnp.asarray(bias).astype(jnp.float32))
+    interpret = INTERPRET if interpret is None else interpret
+    valid_i = valid.astype(jnp.int32)
+    if quantized:
+        qlut, scale = _fq.quantize_lut(lut)
+        return _fq.fused_query_kernel_int8(qlut, scale, codes, ids, valid_i,
+                                           bias, k, interpret=interpret)
+    return _fq.fused_query_kernel(lut, codes, ids, valid_i, bias, k,
+                                  interpret=interpret)
+
+
 def scorer_mlp(feats, params: dict, *, interpret: bool | None = None):
     """Fused paper-scorer: feats [B, F] + core.scorer params -> f32 [B].
 
     Pads hidden dims to the 128-lane grain once per params object.
     """
+    interpret = INTERPRET if interpret is None else interpret
     w0, b0 = params["w0"], params["b0"]
     w1, b1 = params["w1"], params["b1"]
     w2, b2 = params["w2"], params["b2"]
     h = w0.shape[1]
-    h_pad = -h % 8 if INTERPRET else -h % 128
+    h_pad = -h % 8 if interpret else -h % 128
     if h_pad:
         w0 = jnp.pad(w0, ((0, 0), (0, h_pad)))
         b0 = jnp.pad(b0, ((0, h_pad),))
         w1 = jnp.pad(w1, ((0, h_pad), (0, h_pad)))
         b1 = jnp.pad(b1, ((0, h_pad),))
         w2 = jnp.pad(w2, ((0, h_pad), (0, 0)))
-    return _mlp.scorer_mlp(
-        feats, w0, b0, w1, b1, w2, b2,
-        interpret=INTERPRET if interpret is None else interpret)
+    return _mlp.scorer_mlp(feats, w0, b0, w1, b1, w2, b2,
+                           interpret=interpret)

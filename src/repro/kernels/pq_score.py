@@ -35,7 +35,7 @@ def _pq_score_kernel(lut_ref, codes_ref, out_ref, *, n_centers: int):
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def pq_score_batched(lut: jax.Array, codes: jax.Array, *, block_n: int = 256,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: bool = False) -> jax.Array:
     """Per-query candidate slabs: lut f32 [B, M, C]; codes u8 [B, N, M]
     -> scores f32 [B, N]. (The serving path gathers a different partition
     slab per query, so codes carry a batch dim here.)"""
@@ -61,7 +61,7 @@ def pq_score_batched(lut: jax.Array, codes: jax.Array, *, block_n: int = 256,
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def pq_score(lut: jax.Array, codes: jax.Array, *, block_n: int = 256,
-             interpret: bool = True) -> jax.Array:
+             interpret: bool = False) -> jax.Array:
     """lut f32 [B, M, C]; codes u8 [N, M] -> scores f32 [B, N]."""
     b, m, c = lut.shape
     n = codes.shape[0]

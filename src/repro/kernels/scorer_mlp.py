@@ -31,7 +31,7 @@ def _scorer_kernel(feats_ref, w0_ref, b0_ref, w1_ref, b1_ref,
 
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def scorer_mlp(feats, w0, b0, w1, b1, w2, b2, *, block_b: int = 256,
-               interpret: bool = True) -> jax.Array:
+               interpret: bool = False) -> jax.Array:
     """feats [B, F] + MLP params -> sigmoid scores f32 [B]."""
     b, f = feats.shape
     h = w0.shape[1]

@@ -37,7 +37,7 @@ def _sparse_dot_kernel(q_idx_ref, q_val_ref, db_idx_ref, db_val_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def sparse_dot_batched(q_idx, q_val, db_idx, db_val, *, block_n: int = 128,
-                       interpret: bool = True) -> jax.Array:
+                       interpret: bool = False) -> jax.Array:
     """Per-query candidate rows (rescoring a shortlist): q [B, Kq] vs
     db [B, R, Kd] -> scores f32 [B, R]."""
     b, kq = q_idx.shape
@@ -67,7 +67,7 @@ def sparse_dot_batched(q_idx, q_val, db_idx, db_val, *, block_n: int = 128,
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def sparse_dot(q_idx: jax.Array, q_val: jax.Array, db_idx: jax.Array,
                db_val: jax.Array, *, block_n: int = 128,
-               interpret: bool = True) -> jax.Array:
+               interpret: bool = False) -> jax.Array:
     """q [B, Kq] (u32/f32); db [N, Kd] -> scores f32 [B, N]."""
     b, kq = q_idx.shape
     n, kd = db_idx.shape

@@ -23,20 +23,23 @@ def _topk_kernel(scores_ref, vals_ref, idxs_ref, *, k: int):
     n = scores.shape[0]
     iota = jnp.arange(n, dtype=jnp.int32)
 
-    def body(i, carry):
-        cur = carry
+    def body(i, alive):
+        # an alive mask rather than mask-to--inf: rows holding legitimate
+        # -inf scores (tombstones) still yield distinct ascending indices,
+        # exactly like jax.lax.top_k
+        cur = jnp.where(alive, scores, -jnp.inf)
         best = jnp.max(cur)
         # lowest index among ties, lax.top_k-compatible
-        best_idx = jnp.min(jnp.where(cur == best, iota, n))
+        best_idx = jnp.min(jnp.where(alive & (cur == best), iota, n))
         vals_ref[i] = best
         idxs_ref[i] = best_idx.astype(jnp.int32)
-        return jnp.where(iota == best_idx, -jnp.inf, cur)
+        return alive & (iota != best_idx)
 
-    jax.lax.fori_loop(0, k, body, scores)
+    jax.lax.fori_loop(0, k, body, jnp.ones((n,), jnp.bool_))
 
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
-def topk_select(scores: jax.Array, k: int, *, interpret: bool = True):
+def topk_select(scores: jax.Array, k: int, *, interpret: bool = False):
     """scores f32 [B, N] -> (values f32 [B, k], indices i32 [B, k])."""
     b, n = scores.shape
     vals, idxs = pl.pallas_call(

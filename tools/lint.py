@@ -41,9 +41,15 @@ AST walk can check without third-party packages:
         the jnp / Pallas-kernel / reference backends interchangeable
         (only ``src/repro/multimodal`` and the defining module
         ``src/repro/core/scorer.py`` may call the raw logits fn)
+  KRN1  raw ``pl.pallas_call`` (or ``pallas_call``) outside
+        ``src/repro/kernels/`` — every kernel must be reached through a
+        ``kernels.ops`` entry point, which owns the interpret/compile
+        switch, alignment padding, and the bitwise result contracts the
+        test suite pins (tests/test_kernels*.py)
 
-A trailing ``# legacy-ok`` comment exempts a line from MNT1/DEP1/MM1
-(used by the shim definitions themselves and the deprecation tests).
+A trailing ``# legacy-ok`` comment exempts a line from
+MNT1/DEP1/MM1/KRN1 (used by the shim definitions themselves and the
+deprecation tests).
 
 When ruff itself is installed (the GitHub Actions lane installs it),
 ci.sh prefers it for the style subset but still runs this module with
@@ -82,6 +88,9 @@ LEGACY_ESCAPE = "legacy-ok"
 # the plane that owns re-scoring, and the module defining the fn
 SCORER_LOGITS_DIRS = ("src/repro/multimodal",)
 SCORER_LOGITS_FILES = ("src/repro/core/scorer.py",)
+# the only package allowed to issue raw pallas_call (KRN1): every caller
+# outside it must go through the kernels.ops entry points
+KERNEL_DIRS = ("src/repro/kernels",)
 
 
 def _module_imports(tree: ast.Module) -> dict[str, ast.stmt]:
@@ -191,6 +200,30 @@ def scorer_entry_problems(tree: ast.Module, path: Path, root: Path,
     return problems
 
 
+def kernel_entry_problems(tree: ast.Module, path: Path, root: Path,
+                          lines: list[str]) -> list[str]:
+    """KRN1: ``pallas_call`` (bare or attribute, called or referenced as
+    ``pl.pallas_call(...)``) may only appear inside ``src/repro/kernels/``
+    — all other code must use the ``kernels.ops`` wrappers, which own the
+    interpret/compile switch and the padded-shape/bitwise contracts.
+    ``# legacy-ok`` exempts a line."""
+    if _in_dirs(path, root, KERNEL_DIRS):
+        return []
+    problems = []
+    for node in ast.walk(tree):
+        name = (node.id if isinstance(node, ast.Name)
+                else node.attr if isinstance(node, ast.Attribute) else None)
+        if name != "pallas_call":
+            continue
+        line = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
+        if LEGACY_ESCAPE in line:
+            continue
+        problems.append(
+            f"{path}:{node.lineno}: KRN1 raw pallas_call outside "
+            "src/repro/kernels/ (use a kernels.ops entry point)")
+    return problems
+
+
 def deprecation_problems(tree: ast.Module, path: Path,
                          lines: list[str]) -> list[str]:
     """MNT1 + DEP1: deprecated maintenance knobs and ``stats()``
@@ -283,6 +316,8 @@ def lint_file(path: Path, root: Path | None = None) -> list[str]:
         problems.extend(instrument_problems(tree, path))
     if root is not None:
         problems.extend(scorer_entry_problems(tree, path, root,
+                                              text.splitlines()))
+        problems.extend(kernel_entry_problems(tree, path, root,
                                               text.splitlines()))
     problems.extend(deprecation_problems(tree, path, text.splitlines()))
     if path.name != "__init__.py":          # re-export surface is exempt
